@@ -1,0 +1,71 @@
+"""Paper Figs. 5-6: 1-step vs 2-step vs reorder-baseline MTTKRP across modes.
+
+The paper uses cubic tensors of ~750M entries with N in {3,4,5,6} and C=25.
+Single-core default here is ~16M entries (--full restores paper scale); the
+algorithmic comparisons (2-step beats baseline, 1-step pays the explicit-KRP
+tax, baseline pays the reorder copy the paper's methods avoid) are
+size-stable.  We additionally time the baseline's reorder (transpose) cost
+separately -- the paper's DGEMM baseline *excludes* it, so we report both.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    matricize,
+    mttkrp_1step,
+    mttkrp_2step,
+    mttkrp_baseline,
+    random_factors,
+    random_tensor,
+)
+
+from .util import row, time_fn
+
+C = 25
+
+
+def _dims(n: int, total: float) -> tuple[int, ...]:
+    d = round(total ** (1.0 / n))
+    return (d,) * n
+
+
+def run(full: bool = False) -> list[str]:
+    total = 750e6 if full else 16e6
+    out = []
+    for n_modes in (3, 4, 5, 6):
+        shape = _dims(n_modes, total)
+        x = random_tensor(jax.random.PRNGKey(0), shape)
+        factors = random_factors(jax.random.PRNGKey(1), shape, C)
+        # reorder cost: what the straightforward approach pays before DGEMM
+        for mode in range(n_modes):
+            reorder = jax.jit(lambda t, m=mode: matricize(t, m))
+            t_reorder = time_fn(reorder, x, reps=3)["median_s"]
+            t_base = time_fn(
+                jax.jit(lambda t, fs, m=mode: mttkrp_baseline(t, fs, m)), x, factors, reps=3
+            )["median_s"]
+            t_1step = time_fn(
+                jax.jit(lambda t, fs, m=mode: mttkrp_1step(t, fs, m)), x, factors, reps=3
+            )["median_s"]
+            names = [
+                (f"mttkrp_N{n_modes}_mode{mode}_baseline", t_base, f"reorder_s={t_reorder:.4f}"),
+                (f"mttkrp_N{n_modes}_mode{mode}_1step", t_1step,
+                 f"vs_baseline={t_base/t_1step:.2f}x"),
+            ]
+            if 0 < mode < n_modes - 1:
+                t_2step = time_fn(
+                    jax.jit(lambda t, fs, m=mode: mttkrp_2step(t, fs, m)), x, factors, reps=3
+                )["median_s"]
+                names.append(
+                    (f"mttkrp_N{n_modes}_mode{mode}_2step", t_2step,
+                     f"vs_baseline={t_base/t_2step:.2f}x")
+                )
+            out.extend(row(*t) for t in names)
+    return out
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,66 @@
+"""Aggregate dry-run JSONs into the SRoofline table (markdown + CSV rows)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.analysis.roofline import terms_from_record
+
+
+def load_records(out_dir: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(out_dir: str = "results/dryrun", mesh: str = "pod") -> list[str]:
+    """Markdown roofline table for one mesh (brief: roofline is single-pod)."""
+    lines = [
+        "| arch | shape | compute_s | memory_s | coll_s | bottleneck | "
+        "MODEL/HLO | MFU bound | temp GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_records(out_dir):
+        if rec["mesh"] != mesh:
+            continue
+        if rec.get("skipped"):
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | - | - | - | "
+                f"skipped ({rec['skipped'][:40]}...) | - | - | - |"
+            )
+            continue
+        if not rec.get("ok"):
+            lines.append(f"| {rec['arch']} | {rec['shape']} | FAILED | | | | | | |")
+            continue
+        t = terms_from_record(rec)
+        temp = rec["full"].get("temp_size_in_bytes", 0) / 1e9
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {t.compute_s:.2e} | "
+            f"{t.memory_s:.2e} | {t.collective_s:.2e} | {t.bottleneck} | "
+            f"{t.useful_flops_ratio:.2f} | {t.mfu_bound:.2%} | {temp:.1f} |"
+        )
+    return lines
+
+
+def csv_rows(out_dir: str = "results/dryrun") -> list[str]:
+    rows = []
+    for rec in load_records(out_dir):
+        if rec.get("skipped") or not rec.get("ok"):
+            continue
+        t = terms_from_record(rec)
+        name = f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+        rows.append(
+            f"{name},{t.step_bound_s * 1e6:.1f},"
+            f"bottleneck={t.bottleneck};mfu_bound={t.mfu_bound:.3f};"
+            f"useful={t.useful_flops_ratio:.2f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for line in table():
+        print(line)

@@ -1,0 +1,34 @@
+"""Benchmark timing utilities (single-core XLA-CPU wall clock)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2, **kw) -> dict:
+    """Median wall time of ``fn(*args)`` with compile excluded.  Returns stats."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times = np.asarray(times)
+    return {
+        "median_s": float(np.median(times)),
+        "min_s": float(times.min()),
+        "mean_s": float(times.mean()),
+        "reps": reps,
+    }
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    """CSV row in the required ``name,us_per_call,derived`` format."""
+    return f"{name},{seconds * 1e6:.1f},{derived}"

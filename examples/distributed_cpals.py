@@ -1,0 +1,46 @@
+"""Distributed CP-ALS demo: paper Alg. 3 across a device mesh.
+
+Runs on 8 simulated host devices (mesh 2x4), tensor block-distributed over
+two modes, full ALS inside one shard_map (local MTTKRP + psum reductions --
+the device-for-thread port of the paper's parallelization).
+
+    PYTHONPATH=src python examples/distributed_cpals.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.core import CPConfig, cp_als, cp_full, random_factors  # noqa: E402
+from repro.dist.dist_mttkrp import dist_cp_als  # noqa: E402
+
+
+def main():
+    print(f"devices: {jax.device_count()}")
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+    shape, rank = (64, 48, 40), 6
+    x = cp_full(None, random_factors(key, shape, rank))
+
+    t0 = time.perf_counter()
+    factors, weights, fit = dist_cp_als(
+        x, rank=rank, mode_axes={0: "data", 1: "model"}, mesh=mesh, n_iters=60
+    )
+    t_dist = time.perf_counter() - t0
+    print(f"distributed CP-ALS: fit={float(fit):.5f} in {t_dist:.2f}s "
+          f"(tensor sharded {mesh.shape} over modes 0,1)")
+
+    t0 = time.perf_counter()
+    st = cp_als(x, CPConfig(rank=rank, n_iters=60))
+    t_local = time.perf_counter() - t0
+    print(f"single-device reference: fit={float(st.fit):.5f} in {t_local:.2f}s")
+    assert abs(float(fit) - float(st.fit)) < 1e-2
+    print("OK: distributed result matches")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: CP decomposition of a dense tensor with the paper's MTTKRP.
+
+Builds a rank-4 planted tensor + noise, runs CP-ALS with the paper's method
+mix (1-step external modes, 2-step internal modes), prints fit trajectory and
+per-iteration timing, and cross-checks the fused Pallas kernel against the
+einsum oracle on one MTTKRP.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    CPConfig,
+    cp_als,
+    cp_full,
+    mttkrp_einsum,
+    random_factors,
+)
+from repro.kernels import ops
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    shape, rank = (60, 48, 36, 24), 4
+    planted = random_factors(key, shape, rank)
+    x = cp_full(None, planted)
+    x = x + 0.05 * jnp.std(x) * jax.random.normal(jax.random.PRNGKey(1), x.shape)
+    print(f"tensor {shape}, planted rank {rank}, noise 5% of signal std")
+
+    history = []
+    state = cp_als(
+        x,
+        CPConfig(rank=rank, n_iters=40, tol=1e-7, method="auto"),
+        callback=lambda it, fit, dt: history.append((it, fit, dt)),
+    )
+    for it, fit, dt in history[:3] + history[-2:]:
+        print(f"  iter {it:2d}  fit={fit:.6f}  {dt*1e3:7.1f} ms")
+    print(f"final fit {float(state.fit):.6f} after {state.it} sweeps")
+    assert float(state.fit) > 0.95
+
+    # fused Pallas kernel (interpret mode on CPU) vs oracle
+    m_kernel = ops.fused_mttkrp(x, state.factors, 1)
+    m_ref = mttkrp_einsum(x, state.factors, 1)
+    err = float(jnp.max(jnp.abs(m_kernel - m_ref)))
+    print(f"fused-kernel MTTKRP max|err| vs einsum oracle: {err:.2e}")
+    assert err < 1e-2
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""End-to-end training driver: train a small LM for a few hundred steps.
+
+Any of the 10 assigned architectures is selectable with ``--arch`` (reduced
+to a CPU-trainable width by default; ``--width/--layers/--vocab`` override).
+Exercises the full substrate: data pipeline -> train loop with fault-tolerant
+checkpointing -> metrics.  Default (~40 steps, ~13M params) finishes in a few
+minutes on one CPU core; ``--steps 300 --width 512`` approximates the
+"~100M model for a few hundred steps" driver on real hardware.
+
+    PYTHONPATH=src python examples/train_lm.py --arch olmo-1b --steps 40
+"""
+
+import argparse
+import dataclasses
+import logging
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch import mesh as meshlib
+from repro.models import build_model
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.optimizer import OptConfig
+
+logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--width", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--accum", type=int, default=1)
+    args = ap.parse_args()
+
+    base = get_config(args.arch).reduced()
+    cfg = dataclasses.replace(
+        base,
+        d_model=args.width,
+        n_layers=max(args.layers, len(base.block_pattern) or 1),
+        n_heads=max(4, args.width // 64),
+        n_kv_heads=max(2, args.width // 128),
+        head_dim=64,
+        d_ff=args.width * 4,
+        d_ff_expert=args.width * 2 if base.n_experts else 0,
+        d_ff_shared=args.width * 2 if base.d_ff_shared else 0,
+        lru_width=args.width if base.lru_width else 0,
+        dt_rank=max(8, args.width // 16),
+        vocab=args.vocab,
+    )
+    model = build_model(cfg)
+    from repro.analysis.flops import _defs_count
+
+    n_params = _defs_count(model.param_defs)
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"steps={args.steps} batch={args.batch}x{args.seq}")
+
+    data = SyntheticLM(
+        DataConfig(vocab=args.vocab, seq_len=args.seq, global_batch=args.batch)
+    )
+    with meshlib.use_mesh(meshlib.make_host_mesh(1, 1)):
+        result = train_loop(
+            model,
+            data,
+            OptConfig(lr=args.lr, warmup_steps=20, total_steps=max(args.steps, 100)),
+            LoopConfig(
+                total_steps=args.steps,
+                ckpt_every=max(args.steps // 4, 10),
+                ckpt_dir=args.ckpt_dir,
+                accum_steps=args.accum,
+                log_every=10,
+            ),
+        )
+    first = result.metrics_history[0]["loss"]
+    last = result.metrics_history[-1]["loss"]
+    print(f"loss {first:.4f} -> {last:.4f} over {result.step} steps "
+          f"({result.failures} recovered failures)")
+
+
+if __name__ == "__main__":
+    main()

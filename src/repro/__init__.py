@@ -1,0 +1,1 @@
+"""repro: MTTKRP/CP-ALS framework + LM substrate on JAX."""

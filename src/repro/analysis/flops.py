@@ -1,0 +1,74 @@
+"""Analytic parameter & MODEL_FLOPS counters (roofline's "useful flops" term).
+
+param_count derives from the ParamDef tree (single source of truth with the
+actual init), so MoE expert padding etc. is counted exactly as allocated.
+
+MODEL_FLOPS follows the brief: 6*N*D for dense training, 6*N_active*D for MoE
+(N_active = non-expert params + top-k routed experts + shared experts); the
+attention O(S^2) term is excluded by that convention (noted in EXPERIMENTS.md
+where it matters -- prefill_32k makes it visible in the HLO/MODEL ratio).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _defs_count(defs: Any) -> int:
+    import jax
+
+    from repro.models.common import ParamDef, is_def
+
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(int(np.prod(d.shape)) for d in leaves)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    from repro.models import build_model
+
+    return _defs_count(build_model(cfg).param_defs)
+
+
+def _per_expert_params(cfg: ModelConfig) -> int:
+    return 3 * cfg.d_model * cfg.d_ff_expert  # gate/up/down
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token: excludes non-selected and padded experts."""
+    total = param_count(cfg)
+    if not cfg.n_experts:
+        return total
+    from repro.models.moe import padded_experts
+
+    e_pad = padded_experts(cfg.n_experts)
+    inactive = (e_pad - cfg.n_experts_per_tok) * _per_expert_params(cfg) * cfg.n_layers
+    return total - inactive
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS for one step of the given shape (whole batch)."""
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch
+
+
+def bytes_per_param(cfg: ModelConfig, training: bool) -> int:
+    """fp32 master + Adam m/v when training; bf16 weights when serving."""
+    return 12 if training else 2
+
+
+def hbm_estimate(cfg: ModelConfig, shape: ShapeConfig, n_chips: int) -> float:
+    """Rough per-chip HBM for params(+opt states), used as a sanity bound."""
+    n = param_count(cfg)
+    return n * bytes_per_param(cfg, shape.kind == "train") / n_chips

@@ -1,0 +1,203 @@
+"""Roofline analysis from compiled dry-run artifacts (brief: ROOFLINE ANALYSIS).
+
+Three terms per (arch x shape x mesh), all in seconds, from the SPMD-partitioned
+per-device module:
+
+    compute    = HLO_FLOPs_per_chip / PEAK_FLOPS
+    memory     = HLO_bytes_per_chip / HBM_BW
+    collective = collective_operand_bytes_per_chip / ICI_BW
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes
+from parsing ``compiled.as_text()`` (operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, per the brief).
+
+While-loop correction: ``lax.scan`` bodies (layer stack, grad accumulation,
+chunked attention) appear ONCE in the HLO although they execute `trip` times;
+cost_analysis and static parsing undercount them.  The dry-run therefore also
+compiles L=1 and L=2 *unrolled* probe variants and we extrapolate linearly:
+``v(L) = v(1) + (L-1) * (v(2) - v(1))`` -- exact for quantities linear in
+depth (flops, bytes, collectives all are).  Loop-built models (whisper,
+recurrentgemma) are already unrolled and need no correction.
+
+Hardware constants (TPU v5e target, per brief): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI (treated as the per-chip collective drain rate; the
+parsed bytes are per-chip since the partitioned module is per-device).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# "%name = type[...]... kind(" or "kind-start(" -- scheduled HLO form
+_COLL_RE = re.compile(
+    r"(%\S+)\s+=\s+(\S+)\s+(" + "|".join(_COLL_KINDS) + r")(?:-start)?\("
+)
+_DEF_RE = re.compile(r"^\s+(%[\w.\-]+)\s+=\s+([a-z0-9]+)\[([0-9,]*)\]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-kind operand-byte totals from a partitioned HLO module's text.
+
+    Scheduled HLO prints operands by name only, so we first build a symbol
+    table of instruction result shapes and resolve each collective's operand
+    bytes through it (falling back to the collective's own result shape,
+    which equals the operand for all-reduce).
+    """
+    # symbol table: instruction name -> bytes of its result
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        d = _DEF_RE.match(line)
+        if d:
+            sizes[d.group(1)] = _shape_bytes(d.group(2), d.group(3))
+
+    totals = {k: 0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        # operand list: from the op's '(' to the first '),' boundary
+        args_part = line[m.end():].split(")", 1)[0]
+        inline = _SHAPE_RE.findall(args_part)
+        if inline:  # unscheduled form: shapes inline
+            op_bytes = sum(_shape_bytes(dt, dims) for dt, dims in inline)
+        else:
+            names = _OPERAND_RE.findall(args_part)
+            op_bytes = sum(sizes.get(n, 0) for n in names)
+            if op_bytes == 0:  # fallback: result shape (== operand for AR)
+                res = _SHAPE_RE.findall(m.group(2))
+                op_bytes = sum(_shape_bytes(dt, dims) for dt, dims in res)
+        totals[kind] += op_bytes
+        counts[kind] += 1
+    return {
+        "bytes_by_kind": totals,
+        "count_by_kind": counts,
+        "total_bytes": sum(totals.values()),
+        "total_count": sum(counts.values()),
+    }
+
+
+def extrapolate(v1: float, v2: float, layers: int) -> float:
+    """Linear-in-depth correction from L=1 / L=2 probes."""
+    return v1 + (layers - 1) * (v2 - v1)
+
+
+@dataclass
+class RooflineTerms:
+    flops: float  # per chip
+    hbm_bytes: float  # per chip
+    coll_bytes: float  # per chip
+    model_flops_total: float  # analytic 6ND (whole step, all chips)
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_bound_s(self) -> float:
+        """Roofline-optimal step time assuming perfect overlap."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS -- how much compiled compute is useful."""
+        total_hlo = self.flops * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-flops utilization at the roofline bound."""
+        t = self.step_bound_s
+        if not t:
+            return 0.0
+        return self.model_flops_total / (self.chips * PEAK_FLOPS * t)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_bound_s": self.step_bound_s,
+            "model_flops_total": self.model_flops_total,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def terms_from_record(record: dict) -> RooflineTerms | None:
+    """Build roofline terms from a dry-run JSON record (see launch/dryrun.py).
+
+    Uses probe extrapolation when probes are present, else the full compile's
+    own numbers (loop-built models).
+    """
+    chips = record["chips"]
+    layers = record["n_layers"]
+    # Grad-accumulation while body is also counted once by cost_analysis:
+    # multiply by the known accum factor (slightly overcounts the once-per-
+    # step optimizer/psum tail; noted in EXPERIMENTS.md).
+    accum = record.get("accum_steps", 1)
+    if record.get("probe1") and record.get("probe2"):
+        p1, p2 = record["probe1"], record["probe2"]
+        flops = extrapolate(p1["flops"], p2["flops"], layers) * accum
+        hbm = extrapolate(p1["bytes"], p2["bytes"], layers) * accum
+        coll = extrapolate(p1["coll_bytes"], p2["coll_bytes"], layers) * accum
+    else:
+        full = record["full"]
+        flops = full["flops"] * accum
+        hbm = full["bytes"] * accum
+        coll = full["coll_bytes"] * accum
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=coll,
+        model_flops_total=record["model_flops"],
+        chips=chips,
+    )

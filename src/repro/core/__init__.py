@@ -1,0 +1,53 @@
+"""Core library: the paper's contribution (KRP, MTTKRP, CP-ALS) in JAX."""
+
+from .cpals import CPConfig, CPState, cp_als
+from .krp import krp, krp_naive, krp_or_ones, krp_row_block, krp_rowwise_scan
+from .mttkrp import (
+    mttkrp,
+    mttkrp_1step,
+    mttkrp_2step,
+    mttkrp_baseline,
+    mttkrp_einsum,
+    mttkrp_flops,
+)
+from .tensor_ops import (
+    as_lir,
+    cp_full,
+    dims_split,
+    matricize,
+    matricize_multi,
+    multi_ttv,
+    random_factors,
+    random_tensor,
+    tensor_norm,
+    ttm,
+    ttv,
+)
+
+__all__ = [
+    "CPConfig",
+    "CPState",
+    "cp_als",
+    "krp",
+    "krp_naive",
+    "krp_or_ones",
+    "krp_row_block",
+    "krp_rowwise_scan",
+    "mttkrp",
+    "mttkrp_1step",
+    "mttkrp_2step",
+    "mttkrp_baseline",
+    "mttkrp_einsum",
+    "mttkrp_flops",
+    "as_lir",
+    "cp_full",
+    "dims_split",
+    "matricize",
+    "matricize_multi",
+    "multi_ttv",
+    "random_factors",
+    "random_tensor",
+    "tensor_norm",
+    "ttm",
+    "ttv",
+]

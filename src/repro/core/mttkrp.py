@@ -1,0 +1,187 @@
+"""MTTKRP algorithms: 1-step (Algs. 2-3), 2-step (Alg. 4), baseline, fused.
+
+All functions compute, for mode ``n`` of an N-way tensor ``x`` with CP factors
+``factors = [U_0, ..., U_{N-1}]`` (``U_k`` of shape ``(I_k, C)``):
+
+    M = X_(n) . (U_{N-1} (x) ... (x) U_{n+1} (x) U_{n-1} (x) ... (x) U_0)
+
+i.e.  ``M[i, c] = sum_{l, r} X3[l, i, r] * K_L[l, c] * K_R[r, c]``  with
+``X3 = x.reshape(L, I_n, R)`` (free view),  ``K_L = U_0 (.) ... (.) U_{n-1}``,
+``K_R = U_{n+1} (.) ... (.) U_{N-1}``  (see krp.py for the row convention).
+
+None of the algorithms reorders tensor entries -- the defining constraint of
+the paper.  Only :func:`mttkrp_baseline` does (by design: it is the paper's
+"reorder + one GEMM" comparator, a *lower bound* for the straightforward
+approach since we still exclude KRP-formation time there).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .krp import krp, krp_or_ones
+from .tensor_ops import as_lir, dims_split, matricize, multi_ttv
+
+Array = jax.Array
+Method = Literal["auto", "1step", "2step", "2step-left", "2step-right", "einsum", "baseline", "fused"]
+
+
+def _split_factors(factors: Sequence[Array], n: int):
+    return list(factors[:n]), list(factors[n + 1 :])
+
+
+def mttkrp_einsum(x: Array, factors: Sequence[Array], n: int) -> Array:
+    """Direct einsum oracle (no algorithmic structure; for tests/autodiff ref)."""
+    letters = "abdefghijklm"[: x.ndim]
+    terms = [letters]
+    args: list[Array] = [x]
+    for k, u in enumerate(factors):
+        if k == n:
+            continue
+        terms.append(letters[k] + "c")
+        args.append(u)
+    return jnp.einsum(",".join(terms) + f"->{letters[n]}c", *args)
+
+
+def mttkrp_1step(
+    x: Array, factors: Sequence[Array], n: int, *, blocked: bool = False
+) -> Array:
+    """1-step MTTKRP (paper Algs. 2-3): explicit KRP, layout-respecting GEMMs.
+
+    Forms the full KRP ``K = K_L (.) K_R`` with the reuse algorithm, then
+    multiplies against the *unreordered* tensor.  ``blocked=False`` expresses
+    the block inner product of Alg. 2 line 9 as a single ``dot_general``
+    contracting ``(l, r)`` (XLA fuses the block loop -- the TPU analogue of
+    the per-block BLAS calls).  ``blocked=True`` keeps the paper's explicit
+    loop over blocks (one GEMM per ``l``) via ``lax.scan`` accumulation --
+    the faithful Alg. 2 structure, useful for benchmarking loop overhead.
+    """
+    left, right = _split_factors(factors, n)
+    c = factors[0].shape[1]
+    L, In, R = dims_split(x.shape, n)
+    k = krp_or_ones(left + right, c, x.dtype)  # (L*R, C), reuse Alg. 1
+    x3 = as_lir(x, n)
+    if not blocked or L == 1:
+        if L == 1:
+            return x3[0] @ k  # external mode n=0: single GEMM (Alg. 2 line 4)
+        return jnp.einsum("lir,lrc->ic", x3, k.reshape(L, R, c))
+    k3 = k.reshape(L, R, c)
+
+    def body(acc, lr):
+        xl, kl = lr
+        return acc + xl @ kl, None  # Alg. 2 line 9: one row-major GEMM per block
+
+    acc0 = jnp.zeros((In, c), x.dtype)
+    out, _ = jax.lax.scan(body, acc0, (x3, k3))
+    return out
+
+
+def mttkrp_2step(
+    x: Array,
+    factors: Sequence[Array],
+    n: int,
+    *,
+    order: Literal["auto", "left", "right"] = "auto",
+) -> Array:
+    """2-step MTTKRP (paper Alg. 4 / Phan et al.): partial MTTKRP + multi-TTV.
+
+    right-first:  R_t = reshape(X, (L*I_n, R)) @ K_R      (one GEMM, free view)
+                  M[i,c] = sum_l R_t[l,i,c] * K_L[l,c]    (multi-TTV)
+    left-first:   L_t = K_L^T @ reshape(X, (L, I_n*R))    (one GEMM, free view)
+                  M[i,c] = sum_r L_t[c,i,r] * K_R[r,c]    (multi-TTV)
+
+    ``order='auto'`` follows Alg. 4 line 4: left-first iff ``L > R`` (the
+    2nd-step flops are ``I_n*C*min(L,R)`` that way).  External modes
+    degenerate to the 1-step single GEMM.
+    """
+    left, right = _split_factors(factors, n)
+    c = factors[0].shape[1]
+    L, In, R = dims_split(x.shape, n)
+    if L == 1 or R == 1:  # external modes: 2-step degenerates to 1-step
+        return mttkrp_1step(x, factors, n)
+    if order == "auto":
+        order = "left" if L > R else "right"
+    if order == "right":
+        k_r = krp(right)  # (R, C)
+        r_t = (x.reshape(L * In, R) @ k_r).reshape(L, In, c)
+        k_l = krp(left)  # (L, C)
+        return jnp.einsum("lic,lc->ic", r_t, k_l)  # multi-TTV (Alg. 4 l.13-15)
+    k_l = krp(left)
+    l_t = (k_l.T @ x.reshape(L, In * R)).reshape(c, In, R)
+    k_r = krp(right)
+    return jnp.einsum("cir,rc->ic", l_t, k_r)  # multi-TTV (Alg. 4 l.7-9)
+
+
+def mttkrp_baseline(x: Array, factors: Sequence[Array], n: int) -> Array:
+    """Paper's baseline: explicitly reorder to ``X_(n)`` then one big GEMM.
+
+    The transpose-copy in :func:`matricize` is the cost the paper's algorithms
+    exist to avoid.  (The paper's reported baseline *excludes* both the copy
+    and KRP formation; benchmarks report the pieces separately.)
+    """
+    left, right = _split_factors(factors, n)
+    c = factors[0].shape[1]
+    xn = matricize(x, n)  # data movement happens here
+    k = krp_or_ones(left + right, c, x.dtype)
+    return xn @ k
+
+
+def mttkrp(
+    x: Array,
+    factors: Sequence[Array],
+    n: int,
+    *,
+    method: Method = "auto",
+) -> Array:
+    """Dispatching MTTKRP.
+
+    ``method='auto'`` reproduces the paper's recommended configuration
+    (Sec. 5.3.3): 1-step for external modes (where 2-step degenerates anyway)
+    and 2-step for internal modes.  ``'fused'`` routes to the Pallas kernel
+    (beyond-paper: KRP never materialized in HBM) via repro.kernels.ops.
+    """
+    if method == "auto":
+        method = "1step" if n in (0, len(factors) - 1) else "2step"
+    if method == "1step":
+        return mttkrp_1step(x, factors, n)
+    if method == "2step":
+        return mttkrp_2step(x, factors, n, order="auto")
+    if method == "2step-left":
+        return mttkrp_2step(x, factors, n, order="left")
+    if method == "2step-right":
+        return mttkrp_2step(x, factors, n, order="right")
+    if method == "einsum":
+        return mttkrp_einsum(x, factors, n)
+    if method == "baseline":
+        return mttkrp_baseline(x, factors, n)
+    if method == "fused":
+        from repro.kernels import ops as kops  # lazy: kernels import pallas
+
+        return kops.fused_mttkrp(x, list(factors), n)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def mttkrp_flops(shape: Sequence[int], rank: int, n: int) -> dict[str, float]:
+    """Analytic flop/byte model per algorithm (used by benchmarks/roofline).
+
+    Returns flops for the GEMM part, the KRP part, and bytes touched for the
+    tensor read -- mirrors the paper's O(IC) GEMM / O(I_{neq n} C) KRP split.
+    """
+    L, In, R = dims_split(shape, n)
+    total = math.prod(shape)
+    gemm = 2.0 * total * rank
+    krp_full = float((L * R) * rank)  # reuse: ~1 hadamard mult per row
+    krp_naive = float((L * R) * rank * max(1, len(shape) - 2))
+    second_step = 2.0 * In * rank * min(L, R) if 0 < n < len(shape) - 1 else 0.0
+    return {
+        "gemm_flops": gemm,
+        "krp_flops": krp_full,
+        "krp_naive_flops": krp_naive,
+        "second_step_flops": second_step,
+        "tensor_bytes": 4.0 * total,
+        "krp_bytes": 4.0 * L * R * rank,
+    }

@@ -1,0 +1,150 @@
+"""Dense-tensor layout primitives underlying the MTTKRP algorithms.
+
+Layout convention
+-----------------
+The paper (Hayashi et al., 2017) linearizes tensor entries colexicographically
+(first index fastest; a "generalized column-major" order).  JAX/numpy arrays
+are row-major (last index fastest).  We therefore mirror the paper's algebra:
+for mode ``n`` of an ``N``-way tensor with dims ``I_0 x ... x I_{N-1}`` define
+
+    L = prod(I_k for k < n)        # paper's I_n^L  (but on the *slow* side here)
+    R = prod(I_k for k > n)        # paper's I_n^R  (fast side)
+
+and view the natural buffer as ``X3 = X.reshape(L, I_n, R)`` -- a free reshape,
+no data movement.  Every statement in the paper about "contiguous row-major
+I_n x I_n^L blocks" of the mode-n matricization holds here for the ``(I_n, R)``
+slices ``X3[l]``; the roles of left/right swap symmetrically and we keep the
+paper's left/right naming relative to *mode order*, not memory order.
+
+``matricize`` below produces the *explicit* (copied) mode-n matricization used
+only by the reorder-based baseline that the paper's algorithms beat.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import reduce
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def dims_split(shape: Sequence[int], n: int) -> tuple[int, int, int]:
+    """Return ``(L, I_n, R)`` for mode ``n`` of ``shape`` (see module docstring)."""
+    if not 0 <= n < len(shape):
+        raise ValueError(f"mode {n} out of range for order-{len(shape)} tensor")
+    L = math.prod(shape[:n]) if n > 0 else 1
+    R = math.prod(shape[n + 1 :]) if n < len(shape) - 1 else 1
+    return L, int(shape[n]), R
+
+
+def as_lir(x: Array, n: int) -> Array:
+    """Free (copy-less) view of ``x`` as ``(L, I_n, R)`` for mode ``n``."""
+    L, In, R = dims_split(x.shape, n)
+    return x.reshape(L, In, R)
+
+
+def matricize(x: Array, n: int) -> Array:
+    """Explicit mode-n matricization ``X_(n)`` of shape ``(I_n, I_neq_n)``.
+
+    Column order is the row-major linearization of the remaining modes in
+    their original order -- matching the KRP ordering of :mod:`repro.core.krp`.
+    This *copies* (a transpose); it exists to implement the paper's baseline
+    ("reorder then one GEMM"), which Algs. 2-4 are designed to avoid.
+    """
+    L, In, R = dims_split(x.shape, n)
+    return jnp.moveaxis(x.reshape(L, In, R), 1, 0).reshape(In, L * R)
+
+
+def matricize_multi(x: Array, n: int) -> Array:
+    """Generalized matricization ``X_(0:n)`` of shape ``(I_0*...*I_n, rest)``.
+
+    In our row-major mirror this is a free reshape (the paper's statement
+    "X_(0:n) is column-major in memory" maps to "the row block is the slow
+    axis"), which is what makes the 2-step partial MTTKRP a single GEMM.
+    """
+    shape = x.shape
+    rows = math.prod(shape[: n + 1])
+    return x.reshape(rows, -1)
+
+
+def ttv(x: Array, v: Array, n: int) -> Array:
+    """Tensor-times-vector along mode ``n``: contracts ``I_n`` away."""
+    L, In, R = dims_split(x.shape, n)
+    if v.shape != (In,):
+        raise ValueError(f"vector shape {v.shape} != ({In},)")
+    out = jnp.einsum("lir,i->lr", x.reshape(L, In, R), v)
+    new_shape = x.shape[:n] + x.shape[n + 1 :]
+    return out.reshape(new_shape)
+
+
+def ttm(x: Array, m: Array, n: int) -> Array:
+    """Tensor-times-matrix along mode ``n``:  Y_(n) = M^T X_(n).
+
+    ``m`` has shape ``(I_n, J)``; the result has mode-n dimension ``J``.
+    """
+    L, In, R = dims_split(x.shape, n)
+    if m.shape[0] != In:
+        raise ValueError(f"matrix rows {m.shape[0]} != mode dim {In}")
+    out = jnp.einsum("lir,ij->ljr", x.reshape(L, In, R), m)
+    new_shape = x.shape[:n] + (m.shape[1],) + x.shape[n + 1 :]
+    return out.reshape(new_shape)
+
+
+def multi_ttv(t: Array, factors: Sequence[Array], cols_last: bool = True) -> Array:
+    """The paper's *multi-TTV* (2nd step of Alg. 4).
+
+    ``t`` is an ``(M+1)``-way tensor whose last axis is the CP-rank axis ``C``
+    (the output of a partial MTTKRP, reshaped).  For each column ``c``, the
+    subtensor ``t[..., c]`` is contracted with column ``c`` of every factor in
+    ``factors`` (each ``(I_k, C)``), leaving exactly one uncontracted mode.
+    Returns the ``(I_keep, C)`` MTTKRP result.
+    """
+    order = t.ndim - 1
+    if len(factors) != order - 1:
+        raise ValueError("need order-1 factor matrices (one mode stays)")
+    # Contract the leading len(factors) modes; the kept mode is the last
+    # non-rank axis.  einsum with a shared 'c' index implements the per-column
+    # TTVs of Alg. 4 lines 7-9 / 13-15 as one batched contraction.
+    letters = "abdefghijklm"[: order - 1]
+    spec_t = letters + "z" + "c"
+    spec_fs = [let + "c" for let in letters]
+    return jnp.einsum(",".join([spec_t] + spec_fs) + "->zc", t, *factors)
+
+
+def tensor_norm(x: Array) -> Array:
+    """Frobenius norm of a dense tensor."""
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+
+
+def random_tensor(key: jax.Array, shape: Sequence[int], dtype=jnp.float32) -> Array:
+    return jax.random.normal(key, tuple(shape), dtype=dtype)
+
+
+def random_factors(
+    key: jax.Array, shape: Sequence[int], rank: int, dtype=jnp.float32
+) -> list[Array]:
+    keys = jax.random.split(key, len(shape))
+    return [
+        jax.random.normal(k, (int(dim), rank), dtype=dtype)
+        for k, dim in zip(keys, shape)
+    ]
+
+
+def cp_full(weights: Array | None, factors: Sequence[Array]) -> Array:
+    """Densify a CP model  [[lambda; U_0, ..., U_{N-1}]]  (for tests/fit checks)."""
+    rank = factors[0].shape[1]
+    if weights is None:
+        weights = jnp.ones((rank,), factors[0].dtype)
+    letters = "abdefghijklm"[: len(factors)]
+    spec = ",".join(["c"] + [let + "c" for let in letters]) + "->" + letters
+    return jnp.einsum(spec, weights, *factors)
+
+
+def linear_index(multi_index: Sequence[int], shape: Sequence[int]) -> int:
+    """Row-major linearization (last index fastest) -- mirrors paper's eq. for l."""
+    return int(np.ravel_multi_index(tuple(multi_index), tuple(shape)))

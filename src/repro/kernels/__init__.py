@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the MTTKRP hot spots the paper optimizes.
+
+- fused_mttkrp: MTTKRP with the KRP formed on-the-fly in VMEM (never in HBM)
+- krp_kernel:   tiled explicit KRP (paper Alg. 1's parallel row blocks)
+- multi_ttv:    the 2-step algorithm's 2nd step (Alg. 4)
+
+ops.py holds the jit'd wrappers (padding/tiling/dispatch); ref.py the
+pure-jnp oracles the tests compare against.
+"""
+
+from . import ops, ref
+from .fused_mttkrp import fused_mttkrp_bilinear
+from .krp_kernel import krp_pair
+from .multi_ttv import multi_ttv as multi_ttv_kernel
+
+__all__ = [
+    "ops",
+    "ref",
+    "fused_mttkrp_bilinear",
+    "krp_pair",
+    "multi_ttv_kernel",
+]

@@ -1,0 +1,55 @@
+"""Multi-TTV Pallas kernel -- the 2nd step of the 2-step MTTKRP (Alg. 4).
+
+Computes  ``M[i, c] = sum_l T[l, i, c] * W[l, c]``  where ``T`` is the partial
+MTTKRP output (``(L, I_n, C)``, the paper's R-tensor reshaped) and ``W`` is the
+complementary partial KRP (``(L, C)``).  The paper implements this as ``C``
+independent DGEMV calls (Alg. 4 lines 7-9 / 13-15); on TPU a batched GEMV is
+lane-hostile, so the idiomatic form is a broadcast multiply-accumulate on the
+VPU with the rank axis on lanes: each grid step does
+``o[i-block, :] += T[l, i-block, :] * W[l, :]``.
+
+Grid ``(I_blocks, L)`` with the reduction dim innermost (revisited-output
+accumulation, zero-initialized at l == 0).  VMEM per step: T-tile (bi*C) +
+W row (C) + out (bi*C) -> a few hundred KB at bi=512, C=128.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(t_ref, w_ref, o_ref):
+    l_idx = pl.program_id(1)
+
+    @pl.when(l_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += (t_ref[0, :, :] * w_ref[0, :]).astype(o_ref.dtype)
+
+
+def multi_ttv(
+    t: Array, w: Array, *, block_i: int, interpret: bool = False
+) -> Array:
+    """``M[i,c] = sum_l t[l,i,c] * w[l,c]`` (t: (L, I, C), w: (L, C))."""
+    big_l, dim_i, c = t.shape
+    if w.shape != (big_l, c):
+        raise ValueError(f"w shape {w.shape} != ({big_l}, {c})")
+    if dim_i % block_i:
+        raise ValueError("I must be padded to the block size")
+    grid = (dim_i // block_i, big_l)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_i, c), lambda i, l: (l, i, 0)),
+            pl.BlockSpec((1, c), lambda i, l: (l, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_i, c), lambda i, l: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((dim_i, c), jnp.float32),
+        interpret=interpret,
+    )(t, w)

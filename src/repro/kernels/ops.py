@@ -1,0 +1,191 @@
+"""jit'd wrappers around the Pallas kernels: padding, tiling, mode dispatch.
+
+Public entry points:
+
+* :func:`fused_mttkrp`   -- MTTKRP for any mode without materializing the full
+                            KRP in HBM (beyond-paper; see fused_mttkrp.py).
+* :func:`krp_materialize`-- explicit KRP via the tiled kernel (Alg. 1).
+* :func:`multi_ttv`      -- kernelized 2nd step of the 2-step algorithm.
+* :func:`mttkrp_2step_kernel` -- Alg. 4 with the multi-TTV step kernelized.
+
+On non-TPU backends the kernels run in ``interpret=True`` mode (the kernel
+body executes in Python on CPU) -- this container's validation path.  Real-TPU
+runs additionally pad the rank axis to the 128-lane boundary.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.krp import krp_or_ones
+from repro.core.tensor_ops import dims_split
+
+from .fused_mttkrp import fused_mttkrp_bilinear
+from .krp_kernel import krp_pair
+from .multi_ttv import multi_ttv as _multi_ttv_kernel
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret(flag: bool | None) -> bool:
+    return (not _on_tpu()) if flag is None else flag
+
+
+def _pad_axis(x: Array, axis: int, mult: int) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _block(dim: int, target: int) -> int:
+    """Largest block <= target; dims smaller than target use the dim itself."""
+    return min(dim, target)
+
+
+def _balanced_split(dims: Sequence[int]) -> int:
+    """Split index minimizing |log prod(left) - log prod(right)| (>=1 each side)."""
+    best, best_val = 1, float("inf")
+    total = math.prod(dims)
+    acc = 1
+    for i in range(1, len(dims)):
+        acc *= dims[i - 1]
+        val = abs(math.log(acc) - math.log(total / acc))
+        if val < best_val:
+            best, best_val = i, val
+    return best
+
+
+@partial(jax.jit, static_argnames=("n", "block_i", "block_b", "interpret", "pad_rank_to"))
+def fused_mttkrp(
+    x: Array,
+    factors: Sequence[Array],
+    n: int,
+    *,
+    block_i: int = 128,
+    block_b: int = 256,
+    interpret: bool | None = None,
+    pad_rank_to: int | None = None,
+) -> Array:
+    """MTTKRP via the fused kernel.  ``M = X_(n) . KRP(factors != n)``.
+
+    The two partial KRPs fed to the kernel are built with the reuse fold
+    (Alg. 1); the full ``L*R x C`` KRP never exists.  External modes split
+    their single factor list at the log-balanced point so both kernel inputs
+    stay near ``sqrt`` of the full KRP size.
+    """
+    factors = list(factors)
+    big_n = len(factors)
+    c = factors[0].shape[1]
+    interp = _interpret(interpret)
+    if pad_rank_to is None and _on_tpu():
+        pad_rank_to = 128
+
+    left = factors[:n]
+    right = factors[n + 1 :]
+    in_dim = x.shape[n]
+
+    if 0 < n < big_n - 1:
+        pos = 1
+        a_mats, b_mats = left, right
+        big_l, _, big_r = dims_split(x.shape, n)
+        t = x.reshape(big_l, in_dim, big_r)
+    elif n == 0:
+        pos = 0
+        split = _balanced_split([f.shape[0] for f in right]) if len(right) > 1 else 0
+        a_mats, b_mats = right[:split], right[split:]
+        da = math.prod(f.shape[0] for f in a_mats) if a_mats else 1
+        db = math.prod(f.shape[0] for f in b_mats)
+        t = x.reshape(in_dim, da, db)
+    else:  # n == N-1
+        pos = 2
+        split = _balanced_split([f.shape[0] for f in left]) if len(left) > 1 else 1
+        a_mats, b_mats = left[:split], left[split:]
+        da = math.prod(f.shape[0] for f in a_mats)
+        db = math.prod(f.shape[0] for f in b_mats) if b_mats else 1
+        t = x.reshape(da, db, in_dim)
+
+    a = krp_or_ones(a_mats, c, x.dtype)
+    b = krp_or_ones(b_mats, c, x.dtype)
+    if pad_rank_to:
+        a = _pad_axis(a, 1, pad_rank_to)
+        b = _pad_axis(b, 1, pad_rank_to)
+
+    bi = _block(in_dim, block_i)
+    bb = _block(b.shape[0], block_b)
+    b_axis = 1 if pos == 2 else 2  # t layout: pos0 (i,a,b), pos1 (a,i,b), pos2 (a,b,i)
+    t = _pad_axis(_pad_axis(t, pos, bi), b_axis, bb)
+    b = _pad_axis(b, 0, bb)
+    out = fused_mttkrp_bilinear(
+        t, a, b, pos=pos, block_i=bi, block_b=bb, interpret=interp
+    )
+    return out[:in_dim, :c].astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("block_b", "interpret"))
+def krp_materialize(
+    mats: Sequence[Array], *, block_b: int = 512, interpret: bool | None = None
+) -> Array:
+    """Explicit KRP via the tiled kernel, left-folded for Z > 2 (Alg. 1 reuse:
+    each fold intermediate is a cached partial Hadamard product)."""
+    mats = list(mats)
+    interp = _interpret(interpret)
+    out = mats[0]
+    for u in mats[1:]:
+        jb = u.shape[0]
+        bb = _block(jb, block_b)
+        u_pad = _pad_axis(u, 0, bb)
+        ja = out.shape[0]
+        prod = krp_pair(out, u_pad, block_b=bb, interpret=interp)
+        prod = prod.reshape(ja, u_pad.shape[0], -1)[:, :jb, :]
+        out = prod.reshape(ja * jb, -1)
+    return out
+
+
+@partial(jax.jit, static_argnames=("block_i", "interpret"))
+def multi_ttv(
+    t: Array, w: Array, *, block_i: int = 256, interpret: bool | None = None
+) -> Array:
+    """Kernelized multi-TTV:  M[i,c] = sum_l t[l,i,c] * w[l,c]."""
+    interp = _interpret(interpret)
+    dim_i = t.shape[1]
+    bi = _block(dim_i, block_i)
+    t_pad = _pad_axis(t, 1, bi)
+    out = _multi_ttv_kernel(t_pad, w, block_i=bi, interpret=interp)
+    return out[:dim_i].astype(t.dtype)
+
+
+def mttkrp_2step_kernel(
+    x: Array, factors: Sequence[Array], n: int, *, interpret: bool | None = None
+) -> Array:
+    """Alg. 4 with the partial MTTKRP on the MXU (plain dot) and the 2nd-step
+    multi-TTV in the Pallas kernel.  Right-first ordering shown; the left
+    variant transposes into the same kernel form."""
+    factors = list(factors)
+    c = factors[0].shape[1]
+    big_l, in_dim, big_r = dims_split(x.shape, n)
+    left, right = factors[:n], factors[n + 1 :]
+    if big_l == 1 or big_r == 1:
+        return fused_mttkrp(x, factors, n, interpret=interpret)
+    if big_l <= big_r:  # right-first: 2nd step contracts the smaller L
+        k_r = krp_or_ones(right, c, x.dtype)
+        r_t = (x.reshape(big_l * in_dim, big_r) @ k_r).reshape(big_l, in_dim, c)
+        k_l = krp_or_ones(left, c, x.dtype)
+        return multi_ttv(r_t, k_l, interpret=interpret)
+    k_l = krp_or_ones(left, c, x.dtype)
+    l_t = (k_l.T @ x.reshape(big_l, in_dim * big_r)).reshape(c, in_dim, big_r)
+    k_r = krp_or_ones(right, c, x.dtype)
+    # transpose (C, I, R) -> (R, I, C): same multi-TTV form over r.
+    return multi_ttv(jnp.transpose(l_t, (2, 1, 0)), k_r, interpret=interpret)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these)."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.krp import krp as _krp_reuse
+from repro.core.mttkrp import mttkrp_einsum
+
+Array = jax.Array
+
+
+def fused_mttkrp_ref(x: Array, factors: Sequence[Array], n: int) -> Array:
+    """Oracle for kernels.ops.fused_mttkrp: the direct einsum MTTKRP."""
+    return mttkrp_einsum(x, factors, n)
+
+
+def bilinear_ref(t: Array, a: Array, b: Array, pos: int) -> Array:
+    """Oracle for the unified bilinear form of fused_mttkrp_bilinear."""
+    spec = {0: "iab,ac,bc->ic", 1: "aib,ac,bc->ic", 2: "abi,ac,bc->ic"}[pos]
+    return jnp.einsum(spec, t, a, b)
+
+
+def krp_ref(mats: Sequence[Array]) -> Array:
+    """Oracle for kernels.ops.krp_materialize: the reuse-fold KRP."""
+    return _krp_reuse(mats)
+
+
+def multi_ttv_ref(t: Array, w: Array) -> Array:
+    """Oracle for kernels.ops.multi_ttv:  M[i,c] = sum_l t[l,i,c] w[l,c]."""
+    return jnp.einsum("lic,lc->ic", t, w)

@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax import: jax locks the device count
+at first init, and the production meshes need 512 placeholder host devices
+(single-pod 16x16 uses the first 256).
+
+Per cell this script:
+  1. builds abstract inputs (ShapeDtypeStructs with shardings; no allocation),
+  2. ``jax.jit(step).lower(*inputs).compile()`` -- proving the sharding config
+     is coherent (no mismatched collectives, no impossible layouts),
+  3. records ``compiled.memory_analysis()`` (fits-in-HBM proof) and
+     ``compiled.cost_analysis()`` (FLOPs/bytes) plus parsed collective bytes,
+  4. compiles L=1/L=2 unrolled probe variants for the scan-depth correction
+     (analysis/roofline.py) on scanned architectures.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh pod \
+      --out results/dryrun
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+
+def _mesh(kind: str):
+    from repro.launch.mesh import make_production_mesh
+
+    return make_production_mesh(multi_pod=(kind == "multipod"))
+
+
+def _compile_once(cfg, shape, mesh):
+    """Lower+compile one variant; returns stats dict."""
+    from repro.analysis.roofline import parse_collectives
+    from repro.launch import mesh as meshlib
+    from repro.launch.specs import build_cell
+
+    with meshlib.use_mesh(mesh):
+        fn, args = build_cell(cfg, shape, mesh)
+        # donation mirrors deployment: train donates (params, opt_state);
+        # decode donates the cache -- without it the "temp" report counts a
+        # full extra copy of the donated state (4+ GB on 33B decode).
+        donate = {"train": (0, 1), "decode": (2,)}.get(shape.kind, ())
+        t0 = time.perf_counter()
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    stats = {"lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2)}
+    try:
+        cost = compiled.cost_analysis()
+        stats["flops"] = float(cost.get("flops", 0.0))
+        stats["bytes"] = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        stats["cost_error"] = str(e)
+        stats["flops"] = stats["bytes"] = 0.0
+    try:
+        mem = compiled.memory_analysis()
+        for attr in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            if hasattr(mem, attr):
+                stats[attr] = int(getattr(mem, attr))
+    except Exception as e:  # pragma: no cover
+        stats["memory_error"] = str(e)
+    coll = parse_collectives(compiled.as_text())
+    stats["coll_bytes"] = coll["total_bytes"]
+    stats["coll_by_kind"] = coll["bytes_by_kind"]
+    stats["coll_counts"] = coll["count_by_kind"]
+    return stats
+
+
+def _probe_cfg(cfg, n_layers: int):
+    pattern = cfg.block_pattern
+    return dataclasses.replace(
+        cfg,
+        n_layers=n_layers,
+        scan_layers=False,
+        seq_chunk=0,
+        block_pattern=pattern[:1] if pattern else pattern,
+    )
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str, probes: bool = True):
+    from repro.analysis.flops import model_flops, param_count
+    from repro.configs import cell_is_applicable, get_config, get_shape
+    from repro.models.transformer import is_scanned
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = _mesh(mesh_kind)
+    chips = mesh.size
+
+    from repro.launch.specs import train_accum
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "chips": chips,
+        "n_layers": cfg.n_layers,
+        "params": param_count(cfg),
+        "model_flops": model_flops(cfg, shape),
+        "accum_steps": train_accum(cfg) if shape.kind == "train" else 1,
+        "ok": False,
+    }
+    applicable, why = cell_is_applicable(cfg, shape)
+    if not applicable:
+        record["skipped"] = why
+        record["ok"] = True
+    else:
+        try:
+            record["full"] = _compile_once(cfg, shape, mesh)
+            if probes and is_scanned(cfg):
+                record["probe1"] = _compile_once(_probe_cfg(cfg, 1), shape, mesh)
+                record["probe2"] = _compile_once(_probe_cfg(cfg, 2), shape, mesh)
+            record["ok"] = True
+        except Exception as e:  # noqa: BLE001 -- recorded, nonzero exit below
+            record["error"] = f"{type(e).__name__}: {e}"
+            record["traceback"] = traceback.format_exc()[-4000:]
+
+    os.makedirs(out_dir, exist_ok=True)
+    fname = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
+    with open(fname, "w") as f:
+        json.dump(record, f, indent=1)
+    status = "SKIP" if record.get("skipped") else ("OK" if record["ok"] else "FAIL")
+    full = record.get("full", {})
+    print(
+        f"[{status}] {arch} x {shape_name} x {mesh_kind}: "
+        f"compile={full.get('compile_s', '-')}s flops={full.get('flops', 0):.3e} "
+        f"coll={full.get('coll_bytes', 0):.3e}B -> {fname}",
+        flush=True,
+    )
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-probes", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import LM_SHAPES, list_archs
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in LM_SHAPES:
+                for mk in meshes:
+                    cells.append((arch, shape, mk))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mk in meshes:
+            cells.append((args.arch, args.shape, mk))
+
+    failures = 0
+    for arch, shape, mk in cells:
+        rec = run_cell(arch, shape, mk, args.out, probes=not args.no_probes)
+        failures += 0 if rec["ok"] else 1
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

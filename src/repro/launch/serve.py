@@ -1,0 +1,75 @@
+"""Serving driver: load a checkpoint (or init), run the batched engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
+        --requests 8 --new-tokens 16 [--ckpt-dir /tmp/repro_launch_train]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+import time
+
+import jax
+import numpy as np
+
+logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+log = logging.getLogger("repro.launch.serve")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None, help="restore params from here")
+    args = ap.parse_args()
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import get_config
+    from repro.launch import mesh as meshlib
+    from repro.models import build_model
+    from repro.serve.engine import GenerationConfig, ServeEngine
+    from repro.train.optimizer import init_opt_state
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(cfg.reduced(), vocab=min(cfg.reduced().vocab, 2048))
+    model = build_model(cfg)
+
+    mesh = meshlib.make_host_mesh(args.dp, args.tp)
+    with meshlib.use_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(0))
+        if args.ckpt_dir:
+            mgr = CheckpointManager(args.ckpt_dir)
+            (params, _), manifest = mgr.restore((params, init_opt_state(params)))
+            log.info("restored step %s from %s", manifest["step"], args.ckpt_dir)
+        eng = ServeEngine(
+            model,
+            params,
+            GenerationConfig(
+                max_new_tokens=args.new_tokens, temperature=args.temperature
+            ),
+            batch_size=args.batch_size,
+        )
+        rng = np.random.default_rng(0)
+        for _ in range(args.requests):
+            eng.submit(rng.integers(0, cfg.vocab, size=int(rng.integers(4, 16))))
+        t0 = time.perf_counter()
+        results = eng.flush()
+        dt = time.perf_counter() - t0
+    total_tokens = sum(len(v) for v in results.values())
+    log.info(
+        "served %d requests / %d tokens in %.2fs (%.1f tok/s)",
+        len(results), total_tokens, dt, total_tokens / dt,
+    )
+
+
+if __name__ == "__main__":
+    main()

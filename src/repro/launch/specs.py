@@ -1,0 +1,250 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings per (arch x shape).
+
+Everything here is abstract (no device allocation): parameters and optimizer
+states come from ``jax.eval_shape`` over the real init functions, inputs and
+caches are constructed ShapeDtypeStructs, and shardings are attached directly
+on the structs so ``jax.jit(fn).lower(*structs)`` picks them up.
+
+Sharding decisions (see DESIGN.md S5):
+  batch        -> dp = ('pod','data')/('data',); replicated when batch == 1
+  params       -> 2-D FSDP x TP from the ParamDef logical specs
+  KV cache     -> sequence/window axis over 'model' (split-K decode: every
+                  chip reads 1/tp of the cache -- also sidesteps kv-head
+                  counts not divisible by 16)
+  SSM/LRU state-> inner width over 'model'
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import mesh as meshlib
+from repro.models import Model, build_model
+from repro.models.transformer import layer_types
+from repro.train.optimizer import OptState
+
+Array = jax.Array
+
+
+def _dp(mesh: Mesh, batch: int):
+    axes = meshlib.dp_axes(mesh)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if batch % size != 0:
+        return None  # replicate (batch==1 long_500k)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def with_shardings(struct_tree: Any, spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)
+        ),
+        struct_tree,
+        spec_tree,
+    )
+
+
+# --------------------------------------------------------------------------
+# Params / optimizer structs
+# --------------------------------------------------------------------------
+def param_structs(model: Model, mesh: Mesh, *, serve: bool = False) -> Any:
+    structs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = model.partition_specs(mesh, drop_fsdp=serve)
+    return with_shardings(structs, specs, mesh)
+
+
+def opt_structs(model: Model, mesh: Mesh) -> Any:
+    p = param_structs(model, mesh)
+    m = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32, sharding=s.sharding), p)
+    step = _sds((), jnp.int32, mesh, P())
+    return OptState(step, m, jax.tree.map(lambda s: s, m))
+
+
+# --------------------------------------------------------------------------
+# Batch structs
+# --------------------------------------------------------------------------
+def train_batch_structs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    dp = _dp(mesh, b)
+    batch = {"tokens": _sds((b, s + 1), jnp.int32, mesh, P(dp, None))}
+    if cfg.mrope_sections:
+        batch["positions"] = _sds((b, s + 1, 3), jnp.int32, mesh, P(dp, None, None))
+    if cfg.is_encdec:
+        batch["frames"] = _sds((b, s, cfg.d_model), jnp.float32, mesh, P(dp, None, None))
+    return batch
+
+
+def prefill_batch_structs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    dp = _dp(mesh, b)
+    batch = {"tokens": _sds((b, s), jnp.int32, mesh, P(dp, None))}
+    if cfg.mrope_sections:
+        batch["positions"] = _sds((b, s, 3), jnp.int32, mesh, P(dp, None, None))
+    if cfg.is_encdec:
+        batch["frames"] = _sds((b, s, cfg.d_model), jnp.float32, mesh, P(dp, None, None))
+    return batch
+
+
+# --------------------------------------------------------------------------
+# Decode cache structs (sharding by family; see module docstring)
+# --------------------------------------------------------------------------
+def cache_structs(model: Model, shape: ShapeConfig, mesh: Mesh) -> Any:
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    dp = _dp(mesh, b)
+    if cfg.is_encdec:
+        return _encdec_cache_structs(model, shape, mesh, dp)
+    struct = jax.eval_shape(lambda: model.init_cache(b, s))
+    specs = _cache_spec_tree(cfg, struct, dp)
+    return with_shardings(struct, specs, mesh)
+
+
+def _cache_spec_tree(cfg: ModelConfig, struct: Any, dp) -> Any:
+    from repro.models.attention import KVCache
+    from repro.models.rglru import LRUState
+    from repro.models.ssm import SSMState
+
+    def kv_spec(x):  # (L, B, W, Hk, hd) or (B, W, Hk, hd)
+        if x.ndim == 5:
+            return P(None, dp, "model", None, None)
+        return P(dp, "model", None, None)
+
+    def entry_specs(e):
+        if isinstance(e, SSMState):  # h (L?,B,di,N); conv (L?,B,K-1,di)
+            if e.h.ndim == 4:
+                return SSMState(P(None, dp, "model", None), P(None, dp, None, "model"))
+            return SSMState(P(dp, "model", None), P(dp, None, "model"))
+        if isinstance(e, LRUState):  # h (B,w); conv (B,K-1,w)
+            return LRUState(P(dp, "model"), P(dp, None, "model"))
+        if isinstance(e, KVCache):
+            return KVCache(kv_spec(e.k), kv_spec(e.v))
+        raise TypeError(type(e))
+
+    from repro.models.transformer import DecodeCache
+
+    entries = struct.entries
+    if isinstance(entries, list):
+        entry_sp = [entry_specs(e) for e in entries]
+    else:
+        entry_sp = entry_specs(entries)
+    return DecodeCache(entry_sp, P())
+
+
+def _encdec_cache_structs(model: Model, shape: ShapeConfig, mesh: Mesh, dp) -> Any:
+    from repro.models.attention import KVCache
+    from repro.models.encdec import EncDecCache
+
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    kv = KVCache(
+        _sds((b, s, cfg.n_kv_heads, cfg.hd), dt, mesh, P(dp, "model", None, None)),
+        _sds((b, s, cfg.n_kv_heads, cfg.hd), dt, mesh, P(dp, "model", None, None)),
+    )
+    self_kv = [kv for _ in range(cfg.dec_layers)]
+    cross = (
+        _sds((b, s, cfg.n_kv_heads, cfg.hd), dt, mesh, P(dp, "model", None, None)),
+        _sds((b, s, cfg.n_kv_heads, cfg.hd), dt, mesh, P(dp, "model", None, None)),
+    )
+    cross_kv = [cross for _ in range(cfg.dec_layers)]
+    return EncDecCache(self_kv, cross_kv, _sds((), jnp.int32, mesh, P()))
+
+
+def decode_token_structs(shape: ShapeConfig, mesh: Mesh) -> Array:
+    dp = _dp(mesh, shape.global_batch)
+    return _sds((shape.global_batch, 1), jnp.int32, mesh, P(dp, None))
+
+
+# --------------------------------------------------------------------------
+# Cell assembly: (callable, example_args) for lower()
+# --------------------------------------------------------------------------
+def serve_config(cfg: ModelConfig) -> ModelConfig:
+    """bf16 weights for inference cells."""
+    return replace(cfg, param_dtype="bfloat16", remat=False)
+
+
+def train_config(cfg: ModelConfig, seq_len: int) -> ModelConfig:
+    # chunk long sequences (memory discipline; see models/attention.py);
+    # respect an explicit seq_chunk already set on the config.  512 keeps the
+    # per-chunk fp32 score tensor under ~0.5 GB even for 56-head archs.
+    chunk = cfg.seq_chunk or (512 if seq_len > 8192 else 0)
+    return replace(cfg, seq_chunk=chunk)
+
+
+# Gradient-accumulation factors for train_4k, sized so the per-microbatch
+# activation peak fits 16 GB HBM alongside fp32 masters + Adam states
+# (measured via compiled.memory_analysis(); see EXPERIMENTS.md SDry-run).
+TRAIN_ACCUM: dict[str, int] = {
+    "dbrx-132b": 8,
+    "deepseek-coder-33b": 4,
+    "qwen2-vl-7b": 2,
+    "qwen3-8b": 4,
+    "h2o-danube-3-4b": 2,
+    "qwen2-moe-a2.7b": 2,
+    "recurrentgemma-2b": 16,
+    "whisper-base": 4,
+    "falcon-mamba-7b": 4,
+}
+
+
+def train_accum(cfg: ModelConfig) -> int:
+    return TRAIN_ACCUM.get(cfg.name, 1)
+
+
+def build_cell(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Returns (fn, args) ready for jax.jit(fn).lower(*args) under use_mesh."""
+    from repro.train.optimizer import OptConfig
+    from repro.train.train_step import make_train_step
+
+    if shape.kind == "train":
+        cfg = train_config(arch_cfg, shape.seq_len)
+        model = build_model(cfg)
+        step = make_train_step(
+            model, OptConfig(total_steps=1000), accum_steps=train_accum(cfg)
+        )
+        args = (
+            param_structs(model, mesh),
+            opt_structs(model, mesh),
+            train_batch_structs(cfg, shape, mesh),
+        )
+        return step, args
+
+    if shape.kind == "prefill":
+        cfg = train_config(serve_config(arch_cfg), shape.seq_len)
+        model = build_model(cfg)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, max_len=shape.seq_len + 1)
+
+        args = (
+            param_structs(model, mesh, serve=True),
+            prefill_batch_structs(cfg, shape, mesh),
+        )
+        return prefill_step, args
+
+    # decode
+    cfg = serve_config(arch_cfg)
+    model = build_model(cfg)
+
+    def serve_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    args = (
+        param_structs(model, mesh, serve=True),
+        decode_token_structs(shape, mesh),
+        cache_structs(model, shape, mesh),
+    )
+    return serve_step, args

@@ -1,0 +1,5 @@
+"""LM substrate: composable blocks + the Model facade."""
+
+from .model import Model, build_model, cross_entropy
+
+__all__ = ["Model", "build_model", "cross_entropy"]

@@ -1,0 +1,286 @@
+"""Attention: GQA/MQA, RoPE / M-RoPE, QK-norm, sliding/local windows, caches.
+
+Memory discipline for long sequences: `q_chunk` splits the query axis with a
+`lax.scan`; full-attention chunks score against all keys (peak = qc x S), and
+windowed variants (h2o-danube SWA, recurrentgemma local attention) slice a
+(window + qc) key span with `dynamic_slice`, making prefill cost O(S * window)
+instead of O(S^2).  Decode uses a ring-buffer cache of size `window` when a
+window is set (the long_500k enabler) and a full cache otherwise.
+
+Sharding: heads are tensor-parallel ('tp'); batch is 'dp'.  Constraints are
+applied at the projection boundaries; GSPMD propagates through the einsums.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch import mesh as meshlib
+
+from .common import ParamDef, apply_mrope, apply_rope, norm_apply, norm_defs, rms_norm
+
+Array = jax.Array
+NEG_INF = -1.0e9  # bf16-safe large negative
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+def attn_defs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    defs = {
+        "wq": ParamDef((d, h * hd), ("fsdp", "tp")),
+        "wk": ParamDef((d, hk * hd), ("fsdp", "tp")),
+        "wv": ParamDef((d, hk * hd), ("fsdp", "tp")),
+        "wo": ParamDef((h * hd, d), ("tp", "fsdp")),
+    }
+    if cfg.qk_norm and not cross:
+        defs["q_norm"] = ParamDef((hd,), (None,), "ones")
+        defs["k_norm"] = ParamDef((hd,), (None,), "ones")
+    return defs
+
+
+def _split_heads(x: Array, n: int, hd: int) -> Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def _head_axis_ok(n_heads: int) -> bool:
+    """Sharding a head axis smaller than tp makes GSPMD fall back to full
+    activation replication (measured: 8.6-17 GB/device buffers); only shard
+    the head axis when every device gets >= 1 head."""
+    return n_heads >= max(meshlib.tp_size(), 1)
+
+
+def _project_q(p: dict, cfg: ModelConfig, x: Array, layout: str = "heads") -> Array:
+    q = _split_heads(x @ p["wq"].astype(x.dtype), cfg.n_heads, cfg.hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+    if layout == "seq":  # sequence-parallel attention (few-head archs)
+        return meshlib.constraint(q, "dp", "tp", None, None)
+    if _head_axis_ok(cfg.n_heads):
+        return meshlib.constraint(q, "dp", None, "tp", None)
+    return meshlib.constraint(q, "dp", None, None, None)
+
+
+def _project_kv(p: dict, cfg: ModelConfig, x: Array) -> tuple[Array, Array]:
+    k = _split_heads(x @ p["wk"].astype(x.dtype), cfg.n_kv_heads, cfg.hd)
+    v = _split_heads(x @ p["wv"].astype(x.dtype), cfg.n_kv_heads, cfg.hd)
+    if "k_norm" in p:
+        k = rms_norm(k, p["k_norm"])
+    spec = ("dp", None, "tp", None) if _head_axis_ok(cfg.n_kv_heads) else ("dp", None, None, None)
+    k = meshlib.constraint(k, *spec)
+    v = meshlib.constraint(v, *spec)
+    return k, v
+
+
+def _rope(cfg: ModelConfig, x: Array, positions: Array) -> Array:
+    if cfg.is_encdec:  # whisper: absolute embeddings, no rotary
+        return x
+    if cfg.mrope_sections:
+        return apply_mrope(x, positions, cfg.mrope_sections, cfg.rope_theta)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+# --------------------------------------------------------------------------
+# Core scaled-dot-product with GQA grouping
+# --------------------------------------------------------------------------
+def _attend(q: Array, k: Array, v: Array, mask: Array | None) -> Array:
+    """q: (B,Sq,H,hd), k/v: (B,Sk,Hk,hd), mask broadcastable (B,1,1,Sq,Sk).
+
+    GQA sharding rule (Megatron): the kv-head axis only stays folded when it
+    divides the tensor-parallel degree; otherwise GSPMD pads the tiny Hk axis
+    to tp and falls back to replicating whole activations (measured: 8.6 GB
+    per-device batch replication on dbrx).  In that case we expand K/V to the
+    full query-head count -- the H axis shards cleanly and the expansion is
+    sliced per shard, so per-device K/V size is unchanged.
+    """
+    b, sq, h, hd = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    tp = meshlib.tp_size()
+    scale = 1.0 / jnp.sqrt(hd).astype(q.dtype)
+    if g > 1 and hk % tp == 0:
+        qg = q.reshape(b, sq, hk, g, hd)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) * scale
+        scores = scores.astype(jnp.float32)
+        if mask is not None:
+            scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+        return out.reshape(b, sq, h, hd)
+    if g > 1:  # expand kv heads; sharding depends on the phase
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        if sq == 1:
+            # decode: PRESERVE the cache's sequence sharding (split-K /
+            # flash-decoding): scores stay local over W-shards, softmax does
+            # tiny cross-shard max/sum psums, out is a (B,1,H,hd) psum.
+            # Head-wise resharding here all-gathers the entire 32k-token
+            # cache in f32 every layer (measured 0.5-1 GB x2 per layer).
+            k = meshlib.constraint(k, "dp", "tp", None, None)
+            v = meshlib.constraint(v, "dp", "tp", None, None)
+        elif _head_axis_ok(h):
+            # prefill/train: K/V were computed replicated over 'model', so
+            # the head shard is a free local slice -- and it keeps the
+            # (B, H, Sq, Sk) score tensors head-sharded (14.7 GB replicated
+            # scores measured on deepseek prefill without this).
+            k = meshlib.constraint(k, "dp", None, "tp", None)
+            v = meshlib.constraint(v, "dp", None, "tp", None)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    scores = scores.astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask[:, :, 0], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out
+
+
+def _causal_mask(sq: int, sk: int, q_off, window: int) -> Array:
+    """(1,1,1,sq,sk) mask; q rows are global rows q_off..q_off+sq-1, k cols
+    are global cols 0..sk-1 (full) -- callers with sliced keys pass offsets."""
+    i = q_off + jnp.arange(sq)[:, None]
+    j = jnp.arange(sk)[None, :]
+    m = j <= i
+    if window:
+        m = m & (j > i - window)
+    return m[None, None, None]
+
+
+# --------------------------------------------------------------------------
+# Training / prefill self-attention (full sequence in, full sequence out)
+# --------------------------------------------------------------------------
+def attn_sequence(
+    p: dict,
+    cfg: ModelConfig,
+    x: Array,
+    positions: Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 0,
+    return_kv: bool = False,
+):
+    """Self-attention over a full sequence.  Returns y [, (k, v) for caching]."""
+    b, s, _ = x.shape
+    # windowed attention with no explicit chunk: chunk at the window size so
+    # the scores stay O(s * window) instead of O(s^2)
+    if window and not q_chunk and s > window:
+        q_chunk = window
+    chunked = bool(q_chunk) and s > q_chunk and s % q_chunk == 0
+    # Few-head archs (whisper h=8, recurrentgemma h=10 < tp=16): shard the
+    # *query sequence* axis over 'model' instead of heads -- attention rows
+    # are independent, K/V stay replicated over 'model' (they are small), and
+    # the output lands already in the layer-boundary sequence-parallel layout.
+    seq_layout = not _head_axis_ok(cfg.n_heads) and s > 1
+    layout = "seq" if (seq_layout and not chunked) else "heads"
+    q = _rope(cfg, _project_q(p, cfg, x, layout), positions)
+    k, v = _project_kv(p, cfg, x)
+    k = _rope(cfg, k, positions)
+
+    if not chunked:
+        mask = _causal_mask(s, s, 0, window) if causal else None
+        y = _attend(q, k, v, mask)
+    else:
+        n_chunks = s // q_chunk
+        span = min(s, window + q_chunk) if window else s
+
+        def body(carry, c):
+            q_c = jax.lax.dynamic_slice_in_dim(q, c * q_chunk, q_chunk, 1)
+            if seq_layout:  # shard the chunk's rows over 'model'
+                q_c = meshlib.constraint(q_c, "dp", "tp", None, None)
+            if window and span < s:
+                start = jnp.clip(c * q_chunk + q_chunk - span, 0, s - span)
+                k_c = jax.lax.dynamic_slice_in_dim(k, start, span, 1)
+                v_c = jax.lax.dynamic_slice_in_dim(v, start, span, 1)
+                i = (c * q_chunk + jnp.arange(q_chunk))[:, None]
+                j = (start + jnp.arange(span))[None, :]
+                m = (j <= i) & (j > i - window) if causal else (j >= 0)
+                y_c = _attend(q_c, k_c, v_c, m[None, None, None])
+            else:
+                m = _causal_mask(q_chunk, s, c * q_chunk, window) if causal else None
+                y_c = _attend(q_c, k, v, m)
+            return carry, y_c
+
+        _, ys = jax.lax.scan(body, None, jnp.arange(n_chunks))
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, s, cfg.n_heads, cfg.hd)
+
+    y = y.reshape(b, s, cfg.n_heads * cfg.hd)
+    out = y @ p["wo"].astype(y.dtype)
+    out = meshlib.constraint(out, "dp", None, None)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Decode (one token, cache)
+# --------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    """k/v: (B, W, Hk, hd) with W = window (ring) or max_len (full)."""
+
+    k: Array
+    v: Array
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    w = min(cfg.sliding_window or max_len, max_len)
+    if cfg.local_window:
+        w = min(cfg.local_window, max_len)
+    shape = (batch, w, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attn_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: Array,
+    cache: KVCache,
+    length: Array,
+) -> tuple[Array, KVCache]:
+    """One decode step.  x: (B, 1, d); length: scalar tokens-so-far.
+
+    The new k/v row is rotated at its absolute position and written at slot
+    ``length % W`` (ring semantics when a window bounds W; plain append
+    otherwise).  Attention masks invalid (unwritten) slots; slot order is
+    irrelevant because positions are encoded in the rotated keys.
+    """
+    b = x.shape[0]
+    w = cache.k.shape[1]
+    if cfg.mrope_sections:  # text-only decode: all three streams advance together
+        pos = jnp.full((b, 1, len(cfg.mrope_sections)), length, jnp.int32)
+    else:
+        pos = jnp.full((b, 1), length, jnp.int32)
+    q = _rope(cfg, _project_q(p, cfg, x), pos)
+    k_new, v_new = _project_kv(p, cfg, x)
+    k_new = _rope(cfg, k_new, pos)
+    slot = (length % w).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, 1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, 1)
+    # Slots 0..min(length, W-1) hold data (ring: all slots once length >= W).
+    valid = jnp.arange(w) <= jnp.minimum(length, w - 1)  # (W,)
+    mask = valid[None, None, None, None, :]  # -> (B, Hk, G, 1, W) by broadcast
+    y = _attend(q, k, v, mask)
+    y = y.reshape(b, 1, cfg.n_heads * cfg.hd)
+    out = y @ p["wo"].astype(y.dtype)
+    return out, KVCache(k, v)
+
+
+# --------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# --------------------------------------------------------------------------
+def cross_attn_kv(p: dict, cfg: ModelConfig, enc_out: Array) -> tuple[Array, Array]:
+    return _project_kv(p, cfg, enc_out)
+
+
+def cross_attn(p: dict, cfg: ModelConfig, x: Array, kv: tuple[Array, Array]) -> Array:
+    b, s, _ = x.shape
+    layout = "seq" if (not _head_axis_ok(cfg.n_heads) and s > 1) else "heads"
+    q = _project_q(p, cfg, x, layout)
+    y = _attend(q, kv[0], kv[1], None)
+    y = y.reshape(b, s, cfg.n_heads * cfg.hd)
+    return y @ p["wo"].astype(y.dtype)

@@ -1,0 +1,205 @@
+"""Shared model substrate: param definitions, norms, rotary embeddings, init."""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# Parameter definition trees: shapes + logical sharding specs built together
+# so params and their shardings can never diverge.
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    spec: tuple[Any, ...]  # logical axes per dim: "fsdp" | "tp" | "expert" | None
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | small
+    scale: float = 1.0
+
+    def make(self, key: jax.Array, dtype) -> Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init == "normal":
+            return (self.scale * jax.random.normal(key, self.shape)).astype(dtype)
+        if self.init == "small":
+            return (0.02 * self.scale * jax.random.normal(key, self.shape)).astype(dtype)
+        # fan_in: std = scale / sqrt(fan_in) with fan_in = shape[-2] (or [0])
+        fan = self.shape[-2] if len(self.shape) >= 2 else self.shape[0]
+        std = self.scale / np.sqrt(max(fan, 1))
+        return (std * jax.random.normal(key, self.shape)).astype(dtype)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_tree(defs: Any, key: jax.Array, dtype) -> Any:
+    """Initialize a pytree of ParamDefs with per-leaf folded RNG keys."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves)) if leaves else []
+    return jax.tree.unflatten(treedef, [d.make(k, dtype) for d, k in zip(leaves, keys)])
+
+
+def spec_tree(defs: Any) -> Any:
+    """Extract the logical-spec pytree matching init_tree's output."""
+    return jax.tree.map(lambda d: d.spec, defs, is_leaf=is_def)
+
+
+def count_params(params: Any) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def vocab_padded(vocab: int) -> int:
+    """Pad the embedding-table vocab to the 128-lane boundary so the
+    tensor-parallel shard is even (whisper: 51865 -> 51968).  Logit positions
+    >= the true vocab are masked to -inf (see transformer.lm_logits)."""
+    return -(-vocab // 128) * 128
+
+
+def mask_vocab_pad(logits: Array, vocab: int) -> Array:
+    if logits.shape[-1] == vocab:
+        return logits
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(iota < vocab, logits, jnp.asarray(-1e9, logits.dtype))
+
+
+def cast_floats(tree: Any, dtype) -> Any:
+    """Mixed-precision entry cast: float leaves -> compute dtype (fp32 masters
+    stay in the optimizer).  Casting *before* use means FSDP all-gathers move
+    bf16, halving both the gather transients and the wire bytes."""
+    dtype = jnp.dtype(dtype)
+
+    def cast(x):
+        return x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x
+
+    return jax.tree.map(cast, tree)
+
+
+# --------------------------------------------------------------------------
+# Normalizations
+# --------------------------------------------------------------------------
+def rms_norm(x: Array, w: Array | None, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(jnp.square(x32), -1, keepdims=True) + eps)
+    if w is not None:
+        y = y * w.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def layer_norm(x: Array, w: Array | None, b: Array | None, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), -1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    if w is not None:
+        y = y * w.astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def norm_defs(kind: str, dim: int) -> dict:
+    if kind == "rmsnorm":
+        return {"w": ParamDef((dim,), (None,), "ones")}
+    if kind == "layernorm":
+        return {"w": ParamDef((dim,), (None,), "ones"), "b": ParamDef((dim,), (None,), "zeros")}
+    if kind == "layernorm_np":  # olmo: non-parametric
+        return {}
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def norm_apply(kind: str, x: Array, p: dict) -> Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, p["w"])
+    if kind == "layernorm":
+        return layer_norm(x, p["w"], p["b"])
+    if kind == "layernorm_np":
+        return layer_norm(x, None, None)
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE
+# --------------------------------------------------------------------------
+def _inv_freq(half: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: Array, freqs: Array, out_dtype=None) -> Array:
+    """x: (..., hd) fp32; freqs: broadcastable (..., hd//2) angle array.
+
+    The halves are cast to ``out_dtype`` BEFORE the concat so the big
+    concatenated tensor never materializes in fp32 (1.9 GB/layer on
+    deepseek prefill otherwise -- the trig math itself stays fp32).
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half : 2 * half]
+    cos, sin = jnp.cos(freqs), jnp.sin(freqs)
+    dt = out_dtype or x.dtype
+    out1 = (x1 * cos - x2 * sin).astype(dt)
+    out2 = (x2 * cos + x1 * sin).astype(dt)
+    rotated = jnp.concatenate([out1, out2], -1)
+    if 2 * half < x.shape[-1]:  # odd head_dim (danube hd=120 is even; safety)
+        rotated = jnp.concatenate([rotated, x[..., 2 * half :].astype(dt)], -1)
+    return rotated
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) int."""
+    half = x.shape[-1] // 2
+    freqs = positions[..., None].astype(jnp.float32) * _inv_freq(half, theta)
+    return _rotate(x.astype(jnp.float32), freqs[:, :, None, :], out_dtype=x.dtype)
+
+
+def apply_mrope(
+    x: Array, positions: Array, sections: tuple[int, ...], theta: float
+) -> Array:
+    """Qwen2-VL M-RoPE.  positions: (B, S, 3) = (temporal, height, width) ids.
+
+    The hd//2 frequency slots are split into len(sections) groups; group g's
+    angles use position stream g.  Text tokens carry identical ids in all
+    three streams (degenerates to standard RoPE, as in the paper).
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    inv = _inv_freq(half, theta)
+    parts = []
+    start = 0
+    for g, sec in enumerate(sections):
+        pos_g = positions[..., g].astype(jnp.float32)  # (B, S)
+        parts.append(pos_g[..., None] * inv[start : start + sec])
+        start += sec
+    freqs = jnp.concatenate(parts, -1)  # (B, S, half)
+    return _rotate(x.astype(jnp.float32), freqs[:, :, None, :], out_dtype=x.dtype)
+
+
+def sinusoid_positions(seq: int, dim: int) -> Array:
+    """Whisper-encoder style fixed sinusoidal embeddings (S, d)."""
+    pos = np.arange(seq)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], -1)
+    return jnp.asarray(out, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Activations
+# --------------------------------------------------------------------------
+def act_fn(name: str) -> Callable[[Array], Array]:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def softcap(x: Array, cap: float) -> Array:
+    return jnp.tanh(x / cap) * cap if cap else x

@@ -1,0 +1,160 @@
+"""Whisper-style encoder-decoder backbone (whisper-base).
+
+The conv1d audio frontend is a STUB per the brief: the encoder consumes
+precomputed frame embeddings (B, S_enc, d) provided by input_specs().
+Encoder: +sinusoidal positions, pre-LN bidirectional self-attention + GELU MLP.
+Decoder: learned positions, causal self-attention + cross-attention + MLP.
+Serving precomputes the cross-attention K/V once from the encoder output and
+caches decoder self-attention K/V per step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch import mesh as meshlib
+
+from . import attention as attn
+from .common import (
+    ParamDef,
+    mask_vocab_pad,
+    norm_apply,
+    norm_defs,
+    sinusoid_positions,
+    vocab_padded,
+)
+from .ffn import ffn_apply, ffn_defs
+
+Array = jax.Array
+
+MAX_POSITIONS = 32_768  # learned decoder position table bound (covers decode_32k)
+
+
+def _enc_layer_defs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": norm_defs(cfg.norm, cfg.d_model),
+        "attn": attn.attn_defs(cfg),
+        "ln2": norm_defs(cfg.norm, cfg.d_model),
+        "mlp": ffn_defs(cfg),
+    }
+
+
+def _dec_layer_defs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": norm_defs(cfg.norm, cfg.d_model),
+        "self_attn": attn.attn_defs(cfg),
+        "lnx": norm_defs(cfg.norm, cfg.d_model),
+        "cross_attn": attn.attn_defs(cfg, cross=True),
+        "ln2": norm_defs(cfg.norm, cfg.d_model),
+        "mlp": ffn_defs(cfg),
+    }
+
+
+def encdec_defs(cfg: ModelConfig) -> dict:
+    v_pad = vocab_padded(cfg.vocab)  # 51865 -> 51968 for even TP shards
+    return {
+        "embed": ParamDef((v_pad, cfg.d_model), ("tp", None), "small"),
+        "pos_embed": ParamDef((MAX_POSITIONS, cfg.d_model), (None, None), "small"),
+        "enc_layers": [_enc_layer_defs(cfg) for _ in range(cfg.enc_layers)],
+        "enc_norm": norm_defs(cfg.norm, cfg.d_model),
+        "dec_layers": [_dec_layer_defs(cfg) for _ in range(cfg.dec_layers)],
+        "dec_norm": norm_defs(cfg.norm, cfg.d_model),
+        "head": ParamDef((cfg.d_model, v_pad), ("fsdp", "tp")),
+    }
+
+
+def encode(params: dict, cfg: ModelConfig, frames: Array) -> Array:
+    """frames: (B, S_enc, d) stubbed frontend output -> encoder states."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s, _ = frames.shape
+    h = frames.astype(dt) + sinusoid_positions(s, cfg.d_model).astype(dt)[None]
+    h = meshlib.constraint(h, "dp", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    for lp in params["enc_layers"]:
+
+        def fn(lp_, hh):
+            x = norm_apply(cfg.norm, hh, lp_["ln1"])
+            hh = hh + attn.attn_sequence(
+                lp_["attn"], cfg, x, positions, causal=False, q_chunk=cfg.seq_chunk
+            )
+            x2 = norm_apply(cfg.norm, hh, lp_["ln2"])
+            return hh + ffn_apply(lp_["mlp"], cfg, x2)
+
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        h = fn(lp, h)
+    return norm_apply(cfg.norm, h, params["enc_norm"])
+
+
+def decode_train(
+    params: dict, cfg: ModelConfig, tokens: Array, enc_out: Array
+) -> Array:
+    """Teacher-forced decoder pass -> logits (B, S_dec, V)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s = tokens.shape
+    h = params["embed"][tokens].astype(dt) + params["pos_embed"][:s].astype(dt)[None]
+    h = meshlib.constraint(h, "dp", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    for lp in params["dec_layers"]:
+
+        def fn(lp_, hh):
+            x = norm_apply(cfg.norm, hh, lp_["ln1"])
+            hh = hh + attn.attn_sequence(
+                lp_["self_attn"], cfg, x, positions, causal=True, q_chunk=cfg.seq_chunk
+            )
+            xx = norm_apply(cfg.norm, hh, lp_["lnx"])
+            kv = attn.cross_attn_kv(lp_["cross_attn"], cfg, enc_out)
+            hh = hh + attn.cross_attn(lp_["cross_attn"], cfg, xx, kv)
+            x2 = norm_apply(cfg.norm, hh, lp_["ln2"])
+            return hh + ffn_apply(lp_["mlp"], cfg, x2)
+
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        h = fn(lp, h)
+    h = norm_apply(cfg.norm, h, params["dec_norm"])
+    logits = mask_vocab_pad(h @ params["head"].astype(dt), cfg.vocab)
+    return meshlib.constraint(logits, "dp", None, "tp")
+
+
+class EncDecCache(NamedTuple):
+    self_kv: list  # per-dec-layer attn.KVCache
+    cross_kv: list  # per-dec-layer (k, v) from the encoder output
+    length: Array
+
+
+def init_encdec_cache(
+    params: dict, cfg: ModelConfig, enc_out: Array, max_len: int, dtype
+) -> EncDecCache:
+    b = enc_out.shape[0]
+    self_kv = [attn.init_kv_cache(cfg, b, max_len, dtype) for _ in params["dec_layers"]]
+    cross_kv = [
+        attn.cross_attn_kv(lp["cross_attn"], cfg, enc_out) for lp in params["dec_layers"]
+    ]
+    return EncDecCache(self_kv, cross_kv, jnp.zeros((), jnp.int32))
+
+
+def decode_step(
+    params: dict, cfg: ModelConfig, tokens: Array, cache: EncDecCache
+) -> tuple[Array, EncDecCache]:
+    """One decode step.  tokens: (B, 1)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    b = tokens.shape[0]
+    pos_e = params["pos_embed"][cache.length][None, None, :].astype(dt)
+    h = params["embed"][tokens].astype(dt) + pos_e
+    new_self = []
+    for lp, kv_c, kv_x in zip(params["dec_layers"], cache.self_kv, cache.cross_kv):
+        x = norm_apply(cfg.norm, h, lp["ln1"])
+        y, kv_new = attn.attn_decode(lp["self_attn"], cfg, x, kv_c, cache.length)
+        h = h + y
+        new_self.append(kv_new)
+        xx = norm_apply(cfg.norm, h, lp["lnx"])
+        h = h + attn.cross_attn(lp["cross_attn"], cfg, xx, kv_x)
+        x2 = norm_apply(cfg.norm, h, lp["ln2"])
+        h = h + ffn_apply(lp["mlp"], cfg, x2)
+    h = norm_apply(cfg.norm, h, params["dec_norm"])
+    logits = mask_vocab_pad(h @ params["head"].astype(dt), cfg.vocab)
+    return logits, EncDecCache(new_self, cache.cross_kv, cache.length + 1)

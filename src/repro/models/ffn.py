@@ -1,0 +1,65 @@
+"""Dense FFN variants (SwiGLU / GeGLU / GELU-MLP) + CP-factorized option.
+
+The CP-factorized path is the paper-technique hook (DESIGN.md
+SArch-applicability): with ``cfg.cp_rank = r > 0`` the up/gate/down weights
+are replaced by rank-r CP factor pairs  W ~= A @ B^T  (a 2-way CP model, i.e.
+columns are the rank-1 terms).  Factor fitting against a trained dense weight
+uses repro.core.cp_als; here we only define the parameterization so the
+factorized model trains/serves end to end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch import mesh as meshlib
+
+from .common import ParamDef, act_fn
+
+Array = jax.Array
+
+
+def ffn_defs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    if cfg.cp_rank:
+        r = cfg.cp_rank
+        return {
+            "gate_a": ParamDef((d, r), ("fsdp", None)),
+            "gate_b": ParamDef((r, f), (None, "tp")),
+            "up_a": ParamDef((d, r), ("fsdp", None)),
+            "up_b": ParamDef((r, f), (None, "tp")),
+            "down_a": ParamDef((f, r), ("tp", None)),
+            "down_b": ParamDef((r, d), (None, "fsdp")),
+        }
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "gate": ParamDef((d, f), ("fsdp", "tp")),
+            "up": ParamDef((d, f), ("fsdp", "tp")),
+            "down": ParamDef((f, d), ("tp", "fsdp")),
+        }
+    # plain MLP (whisper)
+    return {
+        "up": ParamDef((d, f), ("fsdp", "tp")),
+        "down": ParamDef((f, d), ("tp", "fsdp")),
+    }
+
+
+def ffn_apply(p: dict, cfg: ModelConfig, x: Array) -> Array:
+    dt = x.dtype
+    act = act_fn({"swiglu": "silu", "geglu": "gelu", "gelu": "gelu"}[cfg.act])
+    if cfg.cp_rank:
+        gate = (x @ p["gate_a"].astype(dt)) @ p["gate_b"].astype(dt)
+        up = (x @ p["up_a"].astype(dt)) @ p["up_b"].astype(dt)
+        h = act(gate) * up
+        h = meshlib.constraint(h, "dp", None, "tp")
+        return (h @ p["down_a"].astype(dt)) @ p["down_b"].astype(dt)
+    if cfg.act in ("swiglu", "geglu"):
+        h = act(x @ p["gate"].astype(dt)) * (x @ p["up"].astype(dt))
+        h = meshlib.constraint(h, "dp", None, "tp")
+        return h @ p["down"].astype(dt)
+    h = act(x @ p["up"].astype(dt))
+    h = meshlib.constraint(h, "dp", None, "tp")
+    return h @ p["down"].astype(dt)

@@ -1,0 +1,171 @@
+"""Model facade: build_model(cfg) -> init / loss / prefill / decode interfaces.
+
+The Model object is what train/serve/dryrun consume; it hides the family
+differences (decoder-only vs enc-dec vs attention-free) behind four pure
+functions plus the param-definition tree (shapes + logical shardings).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch import mesh as meshlib
+
+from . import encdec, transformer
+from .common import cast_floats, init_tree, norm_apply, spec_tree
+
+Array = jax.Array
+
+
+def cross_entropy(logits: Array, labels: Array) -> tuple[Array, Array]:
+    """Mean next-token CE + accuracy.  logits: (B, S, V); labels: (B, S).
+
+    Sharding note: the vocab axis is tensor-parallel.  The label log-prob is
+    extracted with an iota-mask reduction (fuses into a single per-shard pass
+    + psum) instead of ``take_along_axis``, whose gather across the sharded
+    vocab axis makes GSPMD all-gather the full logits (26 GB/device for
+    dbrx-132b at train_4k -- measured).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    mask = vocab_iota == labels[..., None]
+    ll = jnp.sum(jnp.where(mask, logits, 0.0), axis=-1)
+    loss = jnp.mean(lse - ll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, acc
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    param_defs: Any
+
+    def init(self, key: jax.Array) -> Any:
+        return init_tree(self.param_defs, key, jnp.dtype(self.cfg.param_dtype))
+
+    def logical_specs(self) -> Any:
+        return spec_tree(self.param_defs)
+
+    def partition_specs(self, mesh, *, drop_fsdp: bool = False) -> Any:
+        """``drop_fsdp=True`` keeps only tensor parallelism (weights resident,
+        replicated over dp) -- the serving deployment layout: decode/prefill
+        read every weight once per step, so ZeRO-3 per-layer all-gathers are
+        pure collective overhead there (measured in EXPERIMENTS.md SPerf)."""
+
+        def resolve(spec):
+            if drop_fsdp:
+                spec = tuple(None if ax == "fsdp" else ax for ax in spec)
+            return meshlib.resolve_logical(spec, mesh)
+
+        return jax.tree.map(
+            resolve,
+            self.logical_specs(),
+            is_leaf=lambda x: isinstance(x, tuple),  # logical specs are tuples
+        )
+
+    # ---- training ----
+    def loss_fn(self, params: Any, batch: dict) -> tuple[Array, dict]:
+        cfg = self.cfg
+        params = cast_floats(params, cfg.compute_dtype)
+        if cfg.is_encdec:
+            enc_out = encdec.encode(params, cfg, batch["frames"])
+            logits = encdec.decode_train(params, cfg, batch["tokens"][:, :-1], enc_out)
+            loss, acc = cross_entropy(logits, batch["tokens"][:, 1:])
+            return loss, {"ce": loss, "acc": acc}
+        tokens = batch["tokens"]
+        positions = batch.get("positions")
+        if positions is not None:
+            positions = positions[:, : tokens.shape[1] - 1]
+        h, aux, _ = transformer.forward(params, cfg, tokens[:, :-1], positions)
+        logits = transformer.lm_logits(params, cfg, h)
+        loss, acc = cross_entropy(logits, tokens[:, 1:])
+        total = loss + cfg.router_aux_weight * aux if cfg.n_experts else loss
+        return total, {"ce": loss, "acc": acc, "aux": aux}
+
+    # ---- serving ----
+    def prefill(self, params: Any, batch: dict, max_len: int) -> tuple[Any, Array]:
+        """Process the prompt; returns (cache, last-token logits)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        if cfg.is_encdec:
+            enc_out = encdec.encode(params, cfg, batch["frames"])
+            cache = encdec.init_encdec_cache(params, cfg, enc_out, max_len, dt)
+            logits, cache = encdec.decode_step(params, cfg, batch["tokens"][:, :1], cache)
+            return cache, logits
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h, _, collected = transformer.forward(
+            params, cfg, tokens, batch.get("positions"), collect_cache=True
+        )  # h is already final-normed
+        cache = transformer.init_cache(cfg, b, max_len, dt)
+        entries = _fill_cache(self.cfg, cache.entries, collected, s)
+        logits = transformer.lm_logits(params, cfg, h[:, -1:, :])
+        return transformer.DecodeCache(entries, jnp.asarray(s, jnp.int32)), logits
+
+    def decode_step(self, params: Any, tokens: Array, cache: Any):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return encdec.decode_step(params, cfg, tokens, cache)
+        return transformer.decode_step(params, cfg, tokens, cache)
+
+    def init_cache(self, batch: int, max_len: int) -> Any:
+        cfg = self.cfg
+        assert not cfg.is_encdec, "enc-dec caches come from prefill()"
+        return transformer.init_cache(cfg, batch, max_len, jnp.dtype(cfg.compute_dtype))
+
+
+def _fill_cache(cfg: ModelConfig, entries: Any, collected: Any, s: int) -> Any:
+    """Write prefill K/V (or recurrent states) into a fresh decode cache.
+
+    Ring invariant (attention.attn_decode): the token at absolute position p
+    lives at slot ``p % W``.  When the prompt is longer than the window we
+    keep the last W tokens and roll them so position p lands at slot p % W --
+    the next decode write (slot s % W) then correctly evicts the oldest.
+    """
+    from .attention import KVCache
+    from .rglru import LRUState
+    from .ssm import SSMState
+
+    def fill_kv(entry: KVCache, col, seq_axis: int) -> KVCache:
+        k, v = col  # (..., S, Hk, hd) with seq at seq_axis
+        w = entry.k.shape[seq_axis]
+        if s >= w:
+            idx = [slice(None)] * k.ndim
+            idx[seq_axis] = slice(s - w, s)
+            k = jnp.roll(k[tuple(idx)], s % w, axis=seq_axis)
+            v = jnp.roll(v[tuple(idx)], s % w, axis=seq_axis)
+            return KVCache(k.astype(entry.k.dtype), v.astype(entry.v.dtype))
+        k_full = jax.lax.dynamic_update_slice_in_dim(
+            entry.k, k.astype(entry.k.dtype), 0, seq_axis
+        )
+        v_full = jax.lax.dynamic_update_slice_in_dim(
+            entry.v, v.astype(entry.v.dtype), 0, seq_axis
+        )
+        return KVCache(k_full, v_full)
+
+    def fill_state(entry, col):
+        return type(entry)(*(c.astype(e.dtype) for e, c in zip(entry, col)))
+
+    if isinstance(entries, list):  # loop stacks: seq axis 1, per-layer entries
+        out = []
+        for e, c in zip(entries, collected):
+            if isinstance(e, (SSMState, LRUState)):
+                out.append(fill_state(e, c))
+            else:
+                out.append(fill_kv(e, c, seq_axis=1))
+        return out
+    # scanned stacks: leaves carry a leading layer dim -> seq axis 2 for KV
+    if isinstance(entries, (SSMState, LRUState)):
+        return fill_state(entries, collected)
+    return fill_kv(entries, collected, seq_axis=2)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    defs = encdec.encdec_defs(cfg) if cfg.is_encdec else transformer.decoder_defs(cfg)
+    return Model(cfg=cfg, param_defs=defs)

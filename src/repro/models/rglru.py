@@ -1,0 +1,134 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin).
+
+Temporal-mixing block: x-branch linear -> causal conv4 -> RG-LRU; gate branch
+linear -> GeLU; elementwise product -> out projection.
+
+RG-LRU (Griffin eq. 1-4):
+    r_t = sigmoid(BD_a(x_t)),  i_t = sigmoid(BD_x(x_t))        (block-diag gates)
+    log a_t = -c * softplus(Lambda) * r_t                       (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is elementwise over the LRU width -> a plain parallel
+associative scan (no chunking needed: state is (B, S, w), activation-sized).
+Decode state is O(1): (h (B, w), conv tail) -- long_500k eligible.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch import mesh as meshlib
+
+from .common import ParamDef
+from .scan_utils import causal_conv1d, linear_scan
+
+Array = jax.Array
+
+LRU_C = 8.0
+_NUM_BLOCKS = 0  # resolved from cfg.n_heads
+
+
+class LRUState(NamedTuple):
+    h: Array  # (B, w)
+    conv: Array  # (B, K-1, w)
+
+
+def _nb(cfg: ModelConfig) -> int:
+    return max(cfg.n_heads, 1)
+
+
+def rglru_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    nb = _nb(cfg)
+    bw = w // nb
+    return {
+        "in_x": ParamDef((d, w), ("fsdp", "tp")),
+        "in_gate": ParamDef((d, w), ("fsdp", "tp")),
+        "conv_w": ParamDef((w, 4), ("tp", None), "normal", 0.2),
+        "conv_b": ParamDef((w,), ("tp",), "zeros"),
+        # block count = n_heads (10) does not divide tp=16; the gates are tiny
+        # (nb * bw^2 ~ 2.6 MB) so they stay replicated.
+        "gate_a_w": ParamDef((nb, bw, bw), (None, None, None)),
+        "gate_a_b": ParamDef((nb, bw), (None, None), "zeros"),
+        "gate_x_w": ParamDef((nb, bw, bw), (None, None, None)),
+        "gate_x_b": ParamDef((nb, bw), (None, None), "zeros"),
+        "lam": ParamDef((w,), (None,), "normal", 1.0),
+        "out": ParamDef((w, d), ("tp", "fsdp")),
+    }
+
+
+def _block_diag(x: Array, w: Array, b: Array, nb: int) -> Array:
+    """Block-diagonal linear: x (..., W) with W split into nb blocks."""
+    shape = x.shape
+    xb = x.reshape(shape[:-1] + (nb, shape[-1] // nb))
+    y = jnp.einsum("...nb,nbc->...nc", xb, w.astype(x.dtype)) + b.astype(x.dtype)
+    return y.reshape(shape)
+
+
+def _lru_coeffs(p: dict, cfg: ModelConfig, xc: Array):
+    """xc: (B, S, w) conv output -> (a, forced) fp32 recurrence coefficients."""
+    nb = _nb(cfg)
+    r = jax.nn.sigmoid(
+        _block_diag(xc, p["gate_a_w"], p["gate_a_b"], nb).astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        _block_diag(xc, p["gate_x_w"], p["gate_x_b"], nb).astype(jnp.float32)
+    )
+    log_a = -LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    forced = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (
+        i * xc.astype(jnp.float32)
+    )
+    return a, forced
+
+
+def rglru_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: Array,
+    state: LRUState | None = None,
+    *,
+    return_state: bool = False,
+):
+    """Full-sequence forward.  x: (B, S, d)."""
+    dt = x.dtype
+    xb = x @ p["in_x"].astype(dt)
+    gate = x @ p["in_gate"].astype(dt)
+    xb = meshlib.constraint(xb, "dp", None, "tp")
+    xc, conv_tail = causal_conv1d(
+        xb, p["conv_w"], p["conv_b"], buf=None if state is None else state.conv
+    )
+    a, forced = _lru_coeffs(p, cfg, xc)
+    h0 = None if state is None else state.h.astype(jnp.float32)
+    h_all, h_last = linear_scan(a, forced, h0, axis=1, chunk=cfg.seq_chunk)
+    y = h_all.astype(dt) * jax.nn.gelu(gate)
+    out = y @ p["out"].astype(dt)
+    out = meshlib.constraint(out, "dp", None, None)
+    if return_state:
+        return out, LRUState(h_last.astype(dt), conv_tail)
+    return out
+
+
+def rglru_decode(
+    p: dict, cfg: ModelConfig, x: Array, state: LRUState
+) -> tuple[Array, LRUState]:
+    """One-token step.  x: (B, 1, d)."""
+    dt = x.dtype
+    xb = x @ p["in_x"].astype(dt)
+    gate = x @ p["in_gate"].astype(dt)
+    xc, conv_tail = causal_conv1d(xb, p["conv_w"], p["conv_b"], buf=state.conv)
+    a, forced = _lru_coeffs(p, cfg, xc)
+    h = a[:, 0] * state.h.astype(jnp.float32) + forced[:, 0]
+    y = h[:, None, :].astype(dt) * jax.nn.gelu(gate)
+    out = y @ p["out"].astype(dt)
+    return out, LRUState(h.astype(dt), conv_tail)
+
+
+def init_lru_state(cfg: ModelConfig, batch: int, dtype) -> LRUState:
+    w = cfg.lru_width or cfg.d_model
+    return LRUState(jnp.zeros((batch, w), dtype), jnp.zeros((batch, 3, w), dtype))

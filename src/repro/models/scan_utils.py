@@ -1,0 +1,84 @@
+"""Linear-recurrence scan  h_t = a_t * h_{t-1} + b_t  (elementwise).
+
+TPU-native parallel scan via ``lax.associative_scan`` (log-depth, MXU-free,
+VPU-friendly), optionally chunked along the sequence axis: the chunk bound
+caps the materialized (B, S_c, ...) discretized-state intermediates (the
+reason falcon-mamba's (B, S, d_inner, d_state) tensor stays off HBM budgets)
+while ``lax.scan`` carries the boundary state across chunks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _combine(lhs, rhs):
+    a1, b1 = lhs
+    a2, b2 = rhs
+    return a1 * a2, a2 * b1 + b2
+
+
+def linear_scan(
+    a: Array, b: Array, h0: Array | None = None, *, axis: int = 1, chunk: int = 0
+) -> tuple[Array, Array]:
+    """Returns (h_all, h_last); a/b shaped (..., S, ...) along ``axis``.
+
+    ``h0`` (same shape as one step) seeds the recurrence.  ``chunk`` > 0 runs
+    a sequential lax.scan over S/chunk chunks, each solved with the parallel
+    associative scan -- the standard memory/depth trade.
+    """
+    s = a.shape[axis]
+    if h0 is None:
+        h0 = jnp.zeros_like(jax.lax.index_in_dim(a, 0, axis, keepdims=False))
+
+    def block(a_blk: Array, b_blk: Array, carry: Array) -> tuple[Array, Array]:
+        b0 = jax.lax.index_in_dim(b_blk, 0, axis, keepdims=False)
+        a0 = jax.lax.index_in_dim(a_blk, 0, axis, keepdims=False)
+        b_blk = jax.lax.dynamic_update_index_in_dim(
+            b_blk, b0 + a0 * carry, 0, axis
+        )
+        _, h = jax.lax.associative_scan(_combine, (a_blk, b_blk), axis=axis)
+        return h, jax.lax.index_in_dim(h, -1, axis, keepdims=False)
+
+    if not chunk or s <= chunk or s % chunk != 0:
+        return block(a, b, h0)
+
+    n = s // chunk
+
+    def body(carry, idx):
+        a_blk = jax.lax.dynamic_slice_in_dim(a, idx * chunk, chunk, axis)
+        b_blk = jax.lax.dynamic_slice_in_dim(b, idx * chunk, chunk, axis)
+        h, last = block(a_blk, b_blk, carry)
+        return last, h
+
+    last, hs = jax.lax.scan(body, h0, jnp.arange(n))
+    # hs: (n, ..., chunk, ...) -> concatenate along the sequence axis
+    hs = jnp.moveaxis(hs, 0, axis)  # (..., n, chunk, ...)
+    shape = list(a.shape)
+    h_all = hs.reshape(shape[:axis] + [s] + shape[axis + 1 :])
+    return h_all, last
+
+
+def causal_conv1d(
+    x: Array, w: Array, b: Array | None, *, buf: Array | None = None
+) -> tuple[Array, Array]:
+    """Depthwise causal 1-D conv.  x: (B, S, D); w: (D, K); returns (y, new_buf).
+
+    ``buf`` is the (B, K-1, D) tail of the previous segment (decode carries
+    it); the returned new_buf is the updated tail.
+    """
+    batch, s, d = x.shape
+    k = w.shape[1]
+    if buf is None:
+        buf = jnp.zeros((batch, k - 1, d), x.dtype)
+    xp = jnp.concatenate([buf, x], axis=1)  # (B, S+K-1, D)
+    y = jnp.zeros_like(x)
+    for j in range(k):  # K is 4: unrolled shift-mul-accumulate (VPU friendly)
+        y = y + xp[:, j : j + s, :] * w[:, j].astype(x.dtype)[None, None, :]
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    new_buf = xp[:, s:, :] if k > 1 else buf
+    return y, new_buf

@@ -1,0 +1,135 @@
+"""Mamba-1 selective-SSM block (falcon-mamba-7b).
+
+Block: in_proj -> (x | z); causal depthwise conv4 + SiLU on x; data-dependent
+(Delta, B, C); discretize  h_t = exp(Delta A) h_{t-1} + Delta B x_t;
+y = C h + D x; out = (y * SiLU(z)) @ out_proj.
+
+TPU adaptation: the recurrence is a *chunked associative scan*
+(scan_utils.linear_scan) -- parallel log-depth within chunks, sequential
+carry across chunks, bounding the (B, S_c, d_inner, d_state) discretized
+tensors to the chunk size.  d_inner is tensor-parallel ('tp'); Delta/B/C
+contract over d_inner and GSPMD inserts the psum.  Decode carries an O(1)
+state (h: (B, d_inner, d_state), conv tail: (B, K-1, d_inner)) -- the reason
+this arch runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch import mesh as meshlib
+
+from .common import ParamDef
+from .scan_utils import causal_conv1d, linear_scan
+
+Array = jax.Array
+
+
+class SSMState(NamedTuple):
+    h: Array  # (B, d_inner, N)
+    conv: Array  # (B, K-1, d_inner)
+
+
+def ssm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.expand * d
+    n = cfg.ssm_state
+    k = cfg.ssm_conv
+    dtr = cfg.dt_rank
+    return {
+        "in_proj": ParamDef((d, 2 * di), ("fsdp", "tp")),
+        "conv_w": ParamDef((di, k), ("tp", None), "normal", 0.2),
+        "conv_b": ParamDef((di,), ("tp",), "zeros"),
+        "x_proj": ParamDef((di, dtr + 2 * n), ("tp", None)),
+        "dt_w": ParamDef((dtr, di), (None, "tp")),
+        "dt_b": ParamDef((di,), ("tp",), "ones"),  # softplus(1) ~ healthy init dt
+        "a_log": ParamDef((di, n), ("tp", None), "normal", 0.5),
+        "d_skip": ParamDef((di,), ("tp",), "ones"),
+        "out_proj": ParamDef((di, d), ("tp", "fsdp")),
+    }
+
+
+def _delta_bc(p: dict, cfg: ModelConfig, xc: Array):
+    """xc: (B, S, di) conv output -> (delta (B,S,di), B (B,S,N), C (B,S,N))."""
+    dt = xc.dtype
+    dtr, n = cfg.dt_rank, cfg.ssm_state
+    x_db = xc @ p["x_proj"].astype(dt)
+    dt_r, b_in, c_in = jnp.split(x_db, [dtr, dtr + n], axis=-1)
+    delta = jax.nn.softplus(
+        (dt_r @ p["dt_w"].astype(dt)).astype(jnp.float32) + p["dt_b"]
+    )
+    return delta, b_in.astype(jnp.float32), c_in.astype(jnp.float32)
+
+
+def ssm_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: Array,
+    state: SSMState | None = None,
+    *,
+    return_state: bool = False,
+):
+    """Full-sequence forward.  x: (B, S, d)."""
+    dt = x.dtype
+    di = cfg.expand * cfg.d_model
+    xz = x @ p["in_proj"].astype(dt)
+    xz = meshlib.constraint(xz, "dp", None, "tp")
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_tail = causal_conv1d(
+        xr, p["conv_w"], p["conv_b"], buf=None if state is None else state.conv
+    )
+    xc = jax.nn.silu(xc)
+
+    delta, b_in, c_in = _delta_bc(p, cfg, xc)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, N)
+    # Discretize: decay (B,S,di,N), forced (B,S,di,N).  The gate math (exp,
+    # softplus) runs fp32; the scanned pair is cast to the compute dtype --
+    # these two tensors and the scan's log-depth intermediates dominate the
+    # layer's HBM traffic (EXPERIMENTS.md SPerf: 2x byte reduction), and the
+    # per-chunk recurrence depth (<= seq_chunk) keeps bf16 error bounded.
+    decay = jnp.exp(delta[..., None] * a).astype(dt)
+    forced = ((delta * xc.astype(jnp.float32))[..., None] * b_in[:, :, None, :]).astype(dt)
+    h0 = None if state is None else state.h.astype(dt)
+    # default chunk 128: measured ~7%/14% fewer HLO bytes than 256/512 on the
+    # train_4k dry-run (log-depth scan traffic scales with log2(chunk))
+    chunk = cfg.seq_chunk or (128 if x.shape[1] > 128 else 0)
+    h_all, h_last = linear_scan(decay, forced, h0, axis=1, chunk=chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all.astype(jnp.float32), c_in).astype(dt)
+    y = y + xc * p["d_skip"].astype(dt)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"].astype(dt)
+    out = meshlib.constraint(out, "dp", None, None)
+    if return_state:
+        return out, SSMState(h_last.astype(dt), conv_tail)
+    return out
+
+
+def ssm_decode(
+    p: dict, cfg: ModelConfig, x: Array, state: SSMState
+) -> tuple[Array, SSMState]:
+    """One-token step.  x: (B, 1, d); O(1) state update."""
+    dt = x.dtype
+    xz = x @ p["in_proj"].astype(dt)
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_tail = causal_conv1d(xr, p["conv_w"], p["conv_b"], buf=state.conv)
+    xc = jax.nn.silu(xc)
+    delta, b_in, c_in = _delta_bc(p, cfg, xc)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(delta[:, 0, :, None] * a)  # (B, di, N)
+    forced = (delta[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * b_in[:, 0, None, :]
+    h = decay * state.h.astype(jnp.float32) + forced
+    y = jnp.einsum("bdn,bn->bd", h, c_in[:, 0])[:, None, :].astype(dt)
+    y = y + xc * p["d_skip"].astype(dt)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"].astype(dt)
+    return out, SSMState(h.astype(dt), conv_tail)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    di = cfg.expand * cfg.d_model
+    return SSMState(
+        jnp.zeros((batch, di, cfg.ssm_state), dtype),
+        jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+    )

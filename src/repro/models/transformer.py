@@ -1,0 +1,318 @@
+"""Decoder-only transformer assembly: scan-over-layers, remat, caches.
+
+Homogeneous stacks (dense / vlm / moe / ssm) run under ``lax.scan`` with
+stacked per-layer params (constant-size HLO regardless of depth -- essential
+for 62-layer dry-run compiles) and per-layer ``jax.checkpoint`` when
+``cfg.remat``.  Heterogeneous stacks (recurrentgemma's (rec,rec,attn) cycle)
+use a Python loop.
+
+Layer recipes:
+  attn   : h += Attn(norm(h));        h += FFN(norm(h))
+  moe    : h += Attn(norm(h));        h += MoE(norm(h))   (+aux loss)
+  ssm    : h += Mamba(norm(h))                             (no FFN; mamba-1)
+  rec    : h += RGLRU(norm(h));       h += FFN(norm(h))
+  lattn  : h += LocalAttn(norm(h));   h += FFN(norm(h))    (window attention)
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch import mesh as meshlib
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rg
+from . import ssm as ssm_mod
+from .common import ParamDef, mask_vocab_pad, norm_apply, norm_defs, vocab_padded
+from .ffn import ffn_apply, ffn_defs
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# Layer type plan
+# --------------------------------------------------------------------------
+def layer_types(cfg: ModelConfig) -> list[str]:
+    if cfg.family == "ssm":
+        return ["ssm"] * cfg.n_layers
+    if cfg.family == "moe":
+        return ["moe"] * cfg.n_layers
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec",)
+        types = [pat[i % len(pat)] for i in range(cfg.n_layers)]
+        return ["lattn" if t == "attn" else t for t in types]
+    return ["attn"] * cfg.n_layers
+
+
+def is_scanned(cfg: ModelConfig) -> bool:
+    types = layer_types(cfg)
+    return cfg.scan_layers and len(set(types)) == 1 and cfg.n_layers > 1
+
+
+# --------------------------------------------------------------------------
+# Parameter definitions
+# --------------------------------------------------------------------------
+def _layer_defs(cfg: ModelConfig, kind: str) -> dict:
+    if kind == "attn":
+        return {
+            "ln1": norm_defs(cfg.norm, cfg.d_model),
+            "attn": attn.attn_defs(cfg),
+            "ln2": norm_defs(cfg.norm, cfg.d_model),
+            "mlp": ffn_defs(cfg),
+        }
+    if kind == "moe":
+        return {
+            "ln1": norm_defs(cfg.norm, cfg.d_model),
+            "attn": attn.attn_defs(cfg),
+            "ln2": norm_defs(cfg.norm, cfg.d_model),
+            "moe": moe_mod.moe_defs(cfg),
+        }
+    if kind == "ssm":
+        return {"ln": norm_defs(cfg.norm, cfg.d_model), "mixer": ssm_mod.ssm_defs(cfg)}
+    if kind == "rec":
+        return {
+            "ln1": norm_defs(cfg.norm, cfg.d_model),
+            "rec": rg.rglru_defs(cfg),
+            "ln2": norm_defs(cfg.norm, cfg.d_model),
+            "mlp": ffn_defs(cfg),
+        }
+    if kind == "lattn":
+        return {
+            "ln1": norm_defs(cfg.norm, cfg.d_model),
+            "attn": attn.attn_defs(cfg),
+            "ln2": norm_defs(cfg.norm, cfg.d_model),
+            "mlp": ffn_defs(cfg),
+        }
+    raise ValueError(kind)
+
+
+def _stack_defs(defs: Any, n: int) -> Any:
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (None,) + d.spec, d.init, d.scale),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def decoder_defs(cfg: ModelConfig) -> dict:
+    types = layer_types(cfg)
+    v_pad = vocab_padded(cfg.vocab)
+    embed_spec = ("tp", None)  # vocab-sharded rows; d replicated (cheap lookup)
+    defs: dict[str, Any] = {
+        "embed": ParamDef((v_pad, cfg.d_model), embed_spec, "small"),
+        "final_norm": norm_defs(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((cfg.d_model, v_pad), ("fsdp", "tp"))
+    if is_scanned(cfg):
+        defs["layers"] = _stack_defs(_layer_defs(cfg, types[0]), cfg.n_layers)
+    else:
+        defs["layers"] = [_layer_defs(cfg, t) for t in types]
+    return defs
+
+
+# --------------------------------------------------------------------------
+# Layer application (full-sequence)
+# --------------------------------------------------------------------------
+def _apply_layer(
+    p: dict,
+    cfg: ModelConfig,
+    kind: str,
+    h: Array,
+    positions: Array,
+    *,
+    collect: bool,
+):
+    """Returns (h, aux, cache_entry_or_None)."""
+    zero = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        x = norm_apply(cfg.norm, h, p["ln"])
+        if collect:
+            y, state = ssm_mod.ssm_apply(p["mixer"], cfg, x, return_state=True)
+        else:
+            y, state = ssm_mod.ssm_apply(p["mixer"], cfg, x), None
+        return h + y, zero, state
+    if kind == "rec":
+        x = norm_apply(cfg.norm, h, p["ln1"])
+        if collect:
+            y, state = rg.rglru_apply(p["rec"], cfg, x, return_state=True)
+        else:
+            y, state = rg.rglru_apply(p["rec"], cfg, x), None
+        h = h + y
+        h = h + ffn_apply(p["mlp"], cfg, norm_apply(cfg.norm, h, p["ln2"]))
+        return h, zero, state
+    # attention variants
+    window = cfg.local_window if kind == "lattn" else cfg.sliding_window
+    x = norm_apply(cfg.norm, h, p["ln1"])
+    q_chunk = cfg.seq_chunk
+    if collect:
+        y, (k, v) = attn.attn_sequence(
+            p["attn"], cfg, x, positions, window=window, q_chunk=q_chunk, return_kv=True
+        )
+        cache_entry = (k, v)
+    else:
+        y = attn.attn_sequence(
+            p["attn"], cfg, x, positions, window=window, q_chunk=q_chunk
+        )
+        cache_entry = None
+    h = h + y
+    x2 = norm_apply(cfg.norm, h, p["ln2"])
+    if kind == "moe":
+        y2, aux = moe_mod.moe_apply(p["moe"], cfg, x2)
+    else:
+        y2, aux = ffn_apply(p["mlp"], cfg, x2), zero
+    return h + y2, aux, cache_entry
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Array,
+    positions: Array | None = None,
+    *,
+    collect_cache: bool = False,
+):
+    """Token ids -> final hidden states.  Returns (hidden, aux, cache)."""
+    types = layer_types(cfg)
+    if positions is None:
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = params["embed"][tokens].astype(dt)
+    # Sequence parallelism (Megatron SP): between blocks the activations live
+    # sharded (dp, tp, -); attention/FFN entry points re-gather what they
+    # need and GSPMD turns the exits into reduce-scatters.  The lax.scan
+    # carry (the remat-saved per-layer input) then costs 1/tp the HBM.
+    sp = ("dp", "tp", None) if (cfg.seq_shard and tokens.shape[1] > 1) else ("dp", None, None)
+    h = meshlib.constraint(h, *sp)
+
+    if is_scanned(cfg):
+        kind = types[0]
+
+        def body(carry, lp):
+            hh, aux = carry
+            hh, aux_l, cache_e = _apply_layer(
+                lp, cfg, kind, hh, positions, collect=collect_cache
+            )
+            hh = meshlib.constraint(hh, *sp)
+            return (hh, aux + aux_l), cache_e
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (h, aux), cache = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), params["layers"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        cache = []
+        for lp, kind in zip(params["layers"], types):
+
+            def fn(lp_, hh, kind=kind):  # params passed explicitly for remat
+                return _apply_layer(lp_, cfg, kind, hh, positions, collect=collect_cache)
+
+            if cfg.remat:
+                fn = jax.checkpoint(fn, static_argnums=())
+            h, aux_l, cache_e = fn(lp, h)
+            h = meshlib.constraint(h, *sp)
+            aux = aux + aux_l
+            cache.append(cache_e)
+        if not collect_cache:
+            cache = None
+
+    h = norm_apply(cfg.norm, h, params["final_norm"])
+    return h, aux, cache
+
+
+def lm_logits(params: dict, cfg: ModelConfig, h: Array) -> Array:
+    dt = h.dtype
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].T.astype(dt)
+    else:
+        logits = h @ params["head"].astype(dt)
+    logits = mask_vocab_pad(logits, cfg.vocab)
+    return meshlib.constraint(logits, "dp", None, "tp")
+
+
+# --------------------------------------------------------------------------
+# Decode path
+# --------------------------------------------------------------------------
+class DecodeCache(NamedTuple):
+    """Per-model cache pytree.  ``entries``: stacked KVCache / SSMState /
+    LRUState for scanned stacks, or a list for loop stacks.  ``length``:
+    tokens written so far (scalar int32)."""
+
+    entries: Any
+    length: Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> DecodeCache:
+    types = layer_types(cfg)
+
+    def one(kind: str):
+        if kind == "ssm":
+            return ssm_mod.init_ssm_state(cfg, batch, dtype)
+        if kind == "rec":
+            return rg.init_lru_state(cfg, batch, dtype)
+        return attn.init_kv_cache(cfg, batch, max_len, dtype)
+
+    if is_scanned(cfg):
+        entry = one(types[0])
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), entry
+        )
+        return DecodeCache(stacked, jnp.zeros((), jnp.int32))
+    return DecodeCache([one(t) for t in types], jnp.zeros((), jnp.int32))
+
+
+def _decode_layer(p: dict, cfg: ModelConfig, kind: str, h: Array, entry, length):
+    if kind == "ssm":
+        y, entry = ssm_mod.ssm_decode(p["mixer"], cfg, norm_apply(cfg.norm, h, p["ln"]), entry)
+        return h + y, entry
+    if kind == "rec":
+        y, entry = rg.rglru_decode(p["rec"], cfg, norm_apply(cfg.norm, h, p["ln1"]), entry)
+        h = h + y
+        h = h + ffn_apply(p["mlp"], cfg, norm_apply(cfg.norm, h, p["ln2"]))
+        return h, entry
+    x = norm_apply(cfg.norm, h, p["ln1"])
+    y, entry = attn.attn_decode(p["attn"], cfg, x, entry, length)
+    h = h + y
+    x2 = norm_apply(cfg.norm, h, p["ln2"])
+    if kind == "moe":
+        y2, _ = moe_mod.moe_apply(p["moe"], cfg, x2)
+    else:
+        y2 = ffn_apply(p["mlp"], cfg, x2)
+    return h + y2, entry
+
+
+def decode_step(
+    params: dict, cfg: ModelConfig, tokens: Array, cache: DecodeCache
+) -> tuple[Array, DecodeCache]:
+    """One decode step.  tokens: (B, 1) int32.  Returns (logits, new cache)."""
+    types = layer_types(cfg)
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = params["embed"][tokens].astype(dt)
+    length = cache.length
+
+    if is_scanned(cfg):
+        kind = types[0]
+
+        def body(hh, xs):
+            lp, entry = xs
+            hh, new_entry = _decode_layer(lp, cfg, kind, hh, entry, length)
+            return hh, new_entry
+
+        h, new_entries = jax.lax.scan(body, h, (params["layers"], cache.entries))
+    else:
+        new_entries = []
+        for lp, kind, entry in zip(params["layers"], types, cache.entries):
+            h, ne = _decode_layer(lp, cfg, kind, h, entry, length)
+            new_entries.append(ne)
+
+    h = norm_apply(cfg.norm, h, params["final_norm"])
+    logits = lm_logits(params, cfg, h)
+    return logits, DecodeCache(new_entries, length + 1)

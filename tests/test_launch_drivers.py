@@ -1,0 +1,44 @@
+"""Launch-driver smoke tests (subprocess CLIs: train.py / serve.py)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def _run_module(mod: str, *argv: str, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", mod, *argv],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert proc.returncode == 0, f"{mod} failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout + proc.stderr
+
+
+def test_train_driver(tmp_path):
+    out = _run_module(
+        "repro.launch.train",
+        "--arch", "olmo-1b", "--reduced", "--steps", "6", "--batch", "2",
+        "--seq", "32", "--ckpt-every", "3", "--ckpt-dir", str(tmp_path),
+    )
+    assert "done: step=6" in out
+    assert any(p.startswith("step_") for p in os.listdir(tmp_path))
+
+
+def test_serve_driver_restores_checkpoint(tmp_path):
+    _run_module(
+        "repro.launch.train",
+        "--arch", "olmo-1b", "--reduced", "--steps", "4", "--batch", "2",
+        "--seq", "32", "--ckpt-every", "2", "--ckpt-dir", str(tmp_path),
+    )
+    out = _run_module(
+        "repro.launch.serve",
+        "--arch", "olmo-1b", "--reduced", "--requests", "2",
+        "--new-tokens", "4", "--ckpt-dir", str(tmp_path),
+    )
+    assert "restored step" in out
+    assert "served 2 requests" in out

@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests: reduced config, one forward/train/decode step
+on CPU, asserting output shapes and no NaNs (brief requirement (f))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, list_archs
+from repro.launch import mesh as meshlib
+from repro.models import build_model
+
+BATCH, SEQ = 2, 16
+
+
+def _batch(cfg, seq=SEQ, batch=BATCH):
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.randint(key, (batch, seq), 0, cfg.vocab, jnp.int32)
+    out = {"tokens": tokens}
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+        out["positions"] = jnp.broadcast_to(pos[..., None], (batch, seq, 3))
+    if cfg.is_encdec:
+        out["frames"] = jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32)
+    return out
+
+
+@pytest.fixture(scope="module")
+def host_mesh():
+    with meshlib.use_mesh(meshlib.make_host_mesh(1, 1)) as m:
+        yield m
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_loss_forward(arch, host_mesh):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    loss, metrics = jax.jit(model.loss_fn)(params, _batch(cfg))
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: loss={loss}"
+    assert np.isfinite(float(metrics["ce"]))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step_no_nans(arch, host_mesh):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+
+    @jax.jit
+    def step(p, batch):
+        loss, grads = jax.value_and_grad(lambda q: model.loss_fn(q, batch)[0])(p)
+        p2 = jax.tree.map(lambda a, g: a - 1e-3 * g, p, grads)
+        return loss, p2, grads
+
+    loss, params2, grads = step(params, _batch(cfg))
+    assert np.isfinite(float(loss)), arch
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat), f"{arch}: NaN grads"
+    # at least the embedding moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), params, params2
+    )
+    assert max(jax.tree.leaves(moved)) > 0.0
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_decode(arch, host_mesh):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    batch = _batch(cfg, seq=8)
+    cache, logits = jax.jit(lambda p, b: model.prefill(p, b, max_len=24))(params, batch)
+    assert logits.shape == (BATCH, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    for _ in range(3):
+        logits, cache = jax.jit(model.decode_step)(params, tok, cache)
+        assert logits.shape == (BATCH, 1, cfg.vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+
+
+def test_decode_matches_forward_dense(host_mesh):
+    """Teacher-forced decode step-by-step must match the parallel forward."""
+    cfg = get_config("olmo-1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (1, 10), 0, cfg.vocab, jnp.int32)
+
+    from repro.models import transformer
+
+    h, _, _ = transformer.forward(params, cfg, tokens)
+    full_logits = transformer.lm_logits(params, cfg, h)
+
+    cache = model.init_cache(batch=1, max_len=16)
+    step_logits = []
+    for i in range(10):
+        logits, cache = model.decode_step(params, tokens[:, i : i + 1], cache)
+        step_logits.append(np.asarray(logits[:, 0], np.float32))
+    step_logits = np.stack(step_logits, 1)
+    np.testing.assert_allclose(
+        step_logits, np.asarray(full_logits, np.float32), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_decode_matches_forward_swa(host_mesh):
+    """Sliding-window ring cache must agree with windowed parallel attention."""
+    cfg = get_config("h2o-danube-3-4b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(6))
+    n = 3 * cfg.sliding_window  # exercise ring wrap-around
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (1, n), 0, cfg.vocab, jnp.int32)
+
+    from repro.models import transformer
+
+    h, _, _ = transformer.forward(params, cfg, tokens)
+    full_logits = np.asarray(transformer.lm_logits(params, cfg, h), np.float32)
+
+    cache = model.init_cache(batch=1, max_len=n)
+    dec = jax.jit(model.decode_step)
+    step_logits = []
+    for i in range(n):
+        logits, cache = dec(params, tokens[:, i : i + 1], cache)
+        step_logits.append(np.asarray(logits[:, 0], np.float32))
+    step_logits = np.stack(step_logits, 1)
+    np.testing.assert_allclose(step_logits, full_logits, rtol=3e-3, atol=3e-3)
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    for name, cfg in ARCHS.items():
+        assert cfg.source, f"{name} missing provenance"
+
+
+def test_param_counts_full_configs():
+    """Full (non-reduced) configs must have plausible param counts."""
+    from repro.analysis.flops import param_count
+
+    expect = {
+        "qwen2-vl-7b": (6e9, 9e9),
+        "dbrx-132b": (110e9, 140e9),
+        "qwen2-moe-a2.7b": (12e9, 16e9),
+        "olmo-1b": (0.9e9, 1.6e9),
+        "deepseek-coder-33b": (30e9, 36e9),
+        "qwen3-8b": (7e9, 9.5e9),
+        "h2o-danube-3-4b": (3e9, 5e9),
+        "recurrentgemma-2b": (2e9, 3.6e9),
+        "falcon-mamba-7b": (6e9, 8.5e9),
+        "whisper-base": (0.03e9, 0.2e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = param_count(get_config(name))
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"

@@ -1,0 +1,154 @@
+"""Unit + property tests for MTTKRP algorithms (Algs. 2-4) vs einsum oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    matricize,
+    matricize_multi,
+    mttkrp,
+    mttkrp_1step,
+    mttkrp_2step,
+    mttkrp_baseline,
+    mttkrp_einsum,
+    multi_ttv,
+    random_factors,
+    random_tensor,
+    ttm,
+    ttv,
+)
+
+METHODS = ["1step", "2step", "2step-left", "2step-right", "baseline", "auto"]
+SHAPES = [(6, 7), (4, 5, 6), (3, 4, 5, 2), (2, 3, 2, 3, 2)]
+
+
+def _problem(shape, c=5, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kx, kf = jax.random.split(key)
+    x = random_tensor(kx, shape)
+    factors = random_factors(kf, shape, c)
+    return x, factors
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("method", METHODS)
+def test_mttkrp_all_modes_match_oracle(shape, method):
+    x, factors = _problem(shape)
+    for n in range(len(shape)):
+        ref = np.asarray(mttkrp_einsum(x, factors, n))
+        out = np.asarray(mttkrp(x, factors, n, method=method))
+        assert out.shape == (shape[n], 5)
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=1e-4)
+
+
+def test_mttkrp_1step_blocked_matches():
+    x, factors = _problem((4, 5, 6, 3))
+    for n in range(4):
+        ref = np.asarray(mttkrp_einsum(x, factors, n))
+        out = np.asarray(mttkrp_1step(x, factors, n, blocked=True))
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=1e-4)
+
+
+def test_2step_left_right_orders_agree():
+    x, factors = _problem((3, 4, 5, 2), c=4, seed=3)
+    for n in (1, 2):
+        left = np.asarray(mttkrp_2step(x, factors, n, order="left"))
+        right = np.asarray(mttkrp_2step(x, factors, n, order="right"))
+        np.testing.assert_allclose(left, right, rtol=2e-4, atol=1e-4)
+
+
+def test_matricize_definition():
+    """X_(n)[i, j] must equal x[..., i, ...] with j the row-major remainder."""
+    x = jnp.arange(2 * 3 * 4, dtype=jnp.float32).reshape(2, 3, 4)
+    xn = np.asarray(matricize(x, 1))
+    xnp = np.asarray(x)
+    for i in range(3):
+        col = 0
+        for a in range(2):
+            for b in range(4):
+                assert xn[i, col] == xnp[a, i, b]
+                col += 1
+
+
+def test_matricize_multi_is_reshape():
+    x = jnp.arange(2 * 3 * 4 * 5, dtype=jnp.float32).reshape(2, 3, 4, 5)
+    m = matricize_multi(x, 1)
+    assert m.shape == (6, 20)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(x).reshape(6, 20))
+
+
+def test_ttv_ttm_definitions():
+    x, _ = _problem((3, 4, 5))
+    v = jnp.arange(4, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ttv(x, v, 1)),
+        np.einsum("ijk,j->ik", np.asarray(x), np.asarray(v)),
+        rtol=1e-5,
+    )
+    m = jnp.ones((5, 2), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ttm(x, m, 2)),
+        np.einsum("ijk,kl->ijl", np.asarray(x), np.asarray(m)),
+        rtol=1e-5,
+    )
+
+
+def test_multi_ttv_matches_percolumn_loop():
+    """Alg. 4's 2nd step: batched contraction == per-column TTV loop."""
+    key = jax.random.PRNGKey(7)
+    t = jax.random.normal(key, (3, 4, 5, 6))  # (I_a, I_b, I_keep, C)
+    fa = jax.random.normal(key, (3, 6))
+    fb = jax.random.normal(key, (4, 6))
+    out = np.asarray(multi_ttv(t, [fa, fb]))
+    for c in range(6):
+        ref_c = np.einsum("abz,a,b->z", np.asarray(t[..., c]), np.asarray(fa[:, c]), np.asarray(fb[:, c]))
+        np.testing.assert_allclose(out[:, c], ref_c, rtol=1e-4, atol=1e-4)
+
+
+def test_mttkrp_grad_flows():
+    """MTTKRP is part of the CP gradient; all paths must be differentiable."""
+    x, factors = _problem((3, 4, 5), c=3)
+
+    def loss(fs, method):
+        return jnp.sum(mttkrp(x, fs, 1, method=method) ** 2)
+
+    g_ref = jax.grad(lambda fs: loss(fs, "einsum"))(factors)
+    for method in ("1step", "2step"):
+        g = jax.grad(lambda fs: loss(fs, method))(factors)
+        for a, b in zip(g, g_ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shape=st.lists(st.integers(2, 5), min_size=3, max_size=5),
+    c=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_mttkrp_property_methods_agree(shape, c, seed, data):
+    shape = tuple(shape)
+    n = data.draw(st.integers(0, len(shape) - 1))
+    method = data.draw(st.sampled_from(["1step", "2step", "baseline"]))
+    x, factors = _problem(shape, c=c, seed=seed)
+    ref = np.asarray(mttkrp_einsum(x, factors, n))
+    out = np.asarray(mttkrp(x, factors, n, method=method))
+    scale = max(1.0, float(np.abs(ref).max()))
+    np.testing.assert_allclose(out / scale, ref / scale, rtol=5e-4, atol=5e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mttkrp_property_linearity_in_tensor(seed):
+    """MTTKRP is linear in X: M(aX + bY) = a M(X) + b M(Y)."""
+    shape = (3, 4, 2)
+    x, factors = _problem(shape, c=3, seed=seed)
+    y, _ = _problem(shape, c=3, seed=seed + 1)
+    a, b = 0.7, -1.3
+    lhs = np.asarray(mttkrp(a * x + b * y, factors, 1))
+    rhs = a * np.asarray(mttkrp(x, factors, 1)) + b * np.asarray(mttkrp(y, factors, 1))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)

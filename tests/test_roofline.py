@@ -1,0 +1,119 @@
+"""Roofline analysis + dry-run spec machinery tests (no 512-device compile)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.flops import active_param_count, model_flops, param_count
+from repro.analysis.roofline import (
+    RooflineTerms,
+    extrapolate,
+    parse_collectives,
+    terms_from_record,
+)
+from repro.configs import get_config, get_shape
+
+SCHEDULED_HLO = """
+HloModule jit_step, is_scheduled=true, num_partitions=256
+
+%fused (p: f32[4,8]) -> f32[4,8] {
+  ROOT %r = f32[4,8]{1,0} parameter(0)
+}
+
+ENTRY %main {
+  %convert_fusion.1 = f32[512,2048]{1,0} fusion(%x), kind=kLoop
+  %all-gather.85 = f32[512,2048]{0,1} all-gather(%convert_fusion.1), channel_id=8, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={1}
+  %small = bf16[16,64]{1,0} fusion(%y), kind=kLoop
+  %all-reduce.3 = bf16[16,64]{1,0} all-reduce(%small), channel_id=9
+  %rs = f32[8,8]{1,0} reduce-scatter(%convert_fusion.1), channel_id=10
+}
+"""
+
+
+def test_parse_collectives_symbol_table():
+    out = parse_collectives(SCHEDULED_HLO)
+    # all-gather operand: f32[512,2048] = 4 MiB
+    assert out["bytes_by_kind"]["all-gather"] == 512 * 2048 * 4
+    assert out["bytes_by_kind"]["all-reduce"] == 16 * 64 * 2
+    assert out["bytes_by_kind"]["reduce-scatter"] == 512 * 2048 * 4
+    assert out["total_count"] == 3
+
+
+def test_parse_collectives_inline_shapes():
+    txt = "  %ar = f32[4,4]{1,0} all-reduce(f32[4,4]{1,0} %x), channel_id=1"
+    out = parse_collectives(txt)
+    assert out["bytes_by_kind"]["all-reduce"] == 64
+
+
+def test_extrapolate_linear():
+    assert extrapolate(10.0, 13.0, 5) == 10.0 + 4 * 3.0
+
+
+def test_terms_and_bottleneck():
+    t = RooflineTerms(
+        flops=197e12, hbm_bytes=819e9 * 2, coll_bytes=50e9 * 0.5,
+        model_flops_total=197e12 * 256 * 0.5, chips=256,
+    )
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert abs(t.memory_s - 2.0) < 1e-9
+    assert abs(t.collective_s - 0.5) < 1e-9
+    assert t.bottleneck == "memory"
+    assert abs(t.step_bound_s - 2.0) < 1e-9
+    assert 0 < t.mfu_bound < 1
+
+
+def test_terms_from_record_probe_path():
+    rec = {
+        "chips": 256, "n_layers": 10, "accum_steps": 2,
+        "model_flops": 1e15,
+        "probe1": {"flops": 5.0, "bytes": 50.0, "coll_bytes": 500.0},
+        "probe2": {"flops": 8.0, "bytes": 70.0, "coll_bytes": 600.0},
+    }
+    t = terms_from_record(rec)
+    assert t.flops == (5.0 + 9 * 3.0) * 2
+    assert t.hbm_bytes == (50.0 + 9 * 20.0) * 2
+    assert t.coll_bytes == (500.0 + 9 * 100.0) * 2
+
+
+def test_model_flops_kinds():
+    cfg = get_config("olmo-1b")
+    n = active_param_count(cfg)
+    assert model_flops(cfg, get_shape("train_4k")) == 6.0 * n * 256 * 4096
+    assert model_flops(cfg, get_shape("decode_32k")) == 2.0 * n * 128
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("dbrx-132b")
+    assert active_param_count(cfg) < 0.45 * param_count(cfg)
+
+
+def test_cache_structs_shapes_and_specs():
+    """Cache spec builder: shapes/specs line up for each family."""
+    from repro.launch import mesh as meshlib
+    from repro.launch.specs import cache_structs
+    from repro.models import build_model
+
+    mesh = meshlib.make_host_mesh(1, 1)
+    shape = get_shape("decode_32k")
+    for arch in ["olmo-1b", "falcon-mamba-7b", "recurrentgemma-2b", "whisper-base"]:
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        structs = cache_structs(model, shape, mesh)
+        leaves = jax.tree.leaves(structs)
+        assert leaves, arch
+        for leaf in leaves:
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+            assert leaf.sharding is not None
+
+
+def test_cell_applicability_rules():
+    from repro.configs import cell_is_applicable
+
+    ok, _ = cell_is_applicable(get_config("falcon-mamba-7b"), get_shape("long_500k"))
+    assert ok
+    ok, why = cell_is_applicable(get_config("qwen3-8b"), get_shape("long_500k"))
+    assert not ok and "full-attention" in why
+    ok, _ = cell_is_applicable(get_config("h2o-danube-3-4b"), get_shape("long_500k"))
+    assert ok  # SWA bounds the state
