@@ -1,0 +1,102 @@
+"""Version-compatibility shims over the installed jax.
+
+The codebase is written against the jax >= 0.6 public API:
+
+  * ``jax.shard_map(..., check_vma=...)``      (renamed from ``check_rep``)
+  * ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)``
+  * ``jax.sharding.Mesh(..., axis_types=...)``
+
+Older jax (the container pins 0.4.37) predates all three.  Every
+version-dependent call funnels through this module so call sites stay
+written against the new API and the supported range stays wide
+(see README "Supported jax versions"): on old jax the wrappers drop
+``axis_types`` and translate ``check_vma`` -> ``check_rep``; on new jax
+they pass everything through untouched.
+
+Importing this module also installs ``jax.shard_map`` as an alias of the
+wrapper when the attribute is missing, so scripts written against the
+public >= 0.6 surface (``from jax import shard_map``) run unchanged as
+long as anything under ``repro`` was imported first.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+JAX_VERSION: tuple[int, ...] = tuple(
+    int(p) for p in jax.__version__.split(".")[:3] if p.isdigit()
+)
+
+HAS_AXIS_TYPE: bool = hasattr(jax.sharding, "AxisType")
+
+try:  # jax >= 0.6 public API
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+_MAKE_MESH_PARAMS = frozenset(inspect.signature(jax.make_mesh).parameters)
+
+
+def auto_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` on jax >= 0.6; ``None`` (= "don't pass the
+    kwarg") on older jax, where every mesh axis is implicitly auto."""
+    if HAS_AXIS_TYPE:
+        return (jax.sharding.AxisType.Auto,) * n
+    return None
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices=None,
+    axis_types=None,
+) -> Mesh:
+    """``jax.make_mesh`` that drops ``axis_types`` on jax < 0.6."""
+    kwargs: dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and "axis_types" in _MAKE_MESH_PARAMS:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def mesh_from_devices(devices, axis_names: Sequence[str], *, axis_types=None) -> Mesh:
+    """``Mesh(device_array, names)`` constructor with optional ``axis_types``
+    (only forwarded where the installed Mesh accepts it)."""
+    devices = np.asarray(devices)
+    if axis_types is not None and "axis_types" in inspect.signature(Mesh).parameters:
+        return Mesh(devices, tuple(axis_names), axis_types=axis_types)
+    return Mesh(devices, tuple(axis_names))
+
+
+def shard_map(
+    f,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    check_vma: bool | None = None,
+    check_rep: bool | None = None,
+    **kwargs,
+):
+    """``jax.shard_map`` with the replication-check flag translated to
+    whatever name the installed jax uses (``check_vma`` >= 0.6,
+    ``check_rep`` before).  Accepts either spelling."""
+    flag = check_vma if check_vma is not None else check_rep
+    if flag is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kwargs["check_vma"] = flag
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kwargs["check_rep"] = flag
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+if not hasattr(jax, "shard_map"):  # pre-0.6: expose the public alias
+    jax.shard_map = shard_map

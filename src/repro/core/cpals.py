@@ -65,6 +65,25 @@ def hadamard_except(gs: Sequence[Array], n: int) -> Array:
     return out
 
 
+def fit_from_last_mttkrp(
+    gs: Sequence[Array],
+    weights: Array,
+    m_last: Array,
+    last_factor: Array,
+    norm_x: Array,
+) -> Array:
+    """Fit via the factored identity, reusing the final mode's MTTKRP:
+    ||X - Y||^2 = ||X||^2 - 2 <X, Y> + ||Y||^2  with
+    <X, Y> = sum(M_last * (U_last * lambda)) and
+    ||Y||^2 = lambda^T ( *_k U_k^T U_k ) lambda."""
+    n_modes = len(gs)
+    full_h = gs[-1] * hadamard_except(gs, n_modes - 1)
+    norm_y_sq = jnp.einsum("c,cd,d->", weights, full_h, weights)
+    inner = jnp.sum(m_last * (last_factor * weights[None, :]))
+    resid_sq = jnp.maximum(norm_x**2 - 2.0 * inner + norm_y_sq, 0.0)
+    return 1.0 - jnp.sqrt(resid_sq) / norm_x
+
+
 def _normalize_columns(u: Array, it: int) -> tuple[Array, Array]:
     """Column norms -> lambda.  First sweep uses 2-norm, later sweeps use
     max(1, norm) (the Tensor Toolbox convention that keeps lambdas stable)."""
@@ -99,11 +118,7 @@ def als_sweep(
         gs[n] = u.T @ u
         m_last = m
     # Fit from the last MTTKRP (standard trick; avoids forming the model).
-    full_h = gs[-1] * hadamard_except(gs, n_modes - 1)
-    norm_y_sq = jnp.einsum("c,cd,d->", weights, full_h, weights)
-    inner = jnp.sum(m_last * (factors[-1] * weights[None, :]))
-    resid_sq = jnp.maximum(norm_x**2 - 2.0 * inner + norm_y_sq, 0.0)
-    fit = 1.0 - jnp.sqrt(resid_sq) / norm_x
+    fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], norm_x)
     return factors, weights, fit
 
 

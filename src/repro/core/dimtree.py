@@ -24,7 +24,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from .cpals import _normalize_columns, grams, hadamard_except
+from .cpals import _normalize_columns, fit_from_last_mttkrp, grams, hadamard_except
 from .krp import krp_or_ones
 from .tensor_ops import tensor_norm
 
@@ -122,9 +122,5 @@ def dimtree_sweep(
         m_last = mttkrp_from_partial(t_right, sib, n - m)
         update(n, m_last)
 
-    full_h = gs[-1] * hadamard_except(gs, n_modes - 1)
-    norm_y_sq = jnp.einsum("c,cd,d->", weights, full_h, weights)
-    inner = jnp.sum(m_last * (factors[-1] * weights[None, :]))
-    resid_sq = jnp.maximum(norm_x**2 - 2.0 * inner + norm_y_sq, 0.0)
-    fit = 1.0 - jnp.sqrt(resid_sq) / norm_x
+    fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], norm_x)
     return factors, weights, fit

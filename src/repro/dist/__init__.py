@@ -1,0 +1,31 @@
+"""Distributed-memory extension of the paper's shared-memory MTTKRP.
+
+``dist_mttkrp``: block-distributed MTTKRP/CP-ALS over a device mesh --
+the device-for-thread port of the paper's parallelization, with the
+communication structure of Ballard/Knight/Rouse (comm lower bounds for
+MTTKRP) and Ballard/Hayashi/Kannan (parallel dense CP).
+
+``collectives``: bandwidth-reducing collectives (int8 quantized
+all-reduce with error feedback) and the data-parallel train step built
+on them.
+"""
+
+from .collectives import compressed_psum, init_error_state, make_compressed_dp_step
+from .dist_mttkrp import (
+    dist_als_sweep,
+    dist_cp_als,
+    dist_dimtree_sweep,
+    dist_mttkrp,
+    shard_problem,
+)
+
+__all__ = [
+    "compressed_psum",
+    "init_error_state",
+    "make_compressed_dp_step",
+    "dist_als_sweep",
+    "dist_cp_als",
+    "dist_dimtree_sweep",
+    "dist_mttkrp",
+    "shard_problem",
+]

@@ -1,0 +1,332 @@
+"""Block-distributed MTTKRP and CP-ALS over a device mesh.
+
+The paper's shared-memory parallelization assigns contiguous row blocks of
+the (never-materialized) matricization to threads; the distributed-memory
+port assigns contiguous *index blocks of the tensor modes* to devices.  A
+``mode_axes`` mapping ``{mode: mesh_axis}`` places the dense tensor on an
+N-D grid without reordering a single entry -- the defining constraint of
+the paper, kept under sharding: every device holds a natural row-major
+subtensor (a block of each mapped mode, all of each unmapped mode), and
+each factor ``U_k`` is row-distributed over the axis of its mode (or
+replicated when mode ``k`` is unmapped).
+
+Per-mode-n MTTKRP then factors exactly as in Ballard/Knight/Rouse's
+communication lower-bound analysis:
+
+  * each device runs the *local* shared-memory kernel
+    (:func:`repro.core.mttkrp.mttkrp`, 1-step or 2-step) on its block with
+    its local factor rows -- a partial sum over the mapped modes != n;
+  * one ``psum`` over the mesh axes mapped to modes != n completes the
+    contraction (the minimal all-reduce the mode->axis mapping requires);
+  * no collective touches the axis mapped to mode ``n`` itself: the output
+    rows stay distributed over it, exactly like the factor they update.
+
+``dist_cp_als`` / ``dist_dimtree_sweep`` wrap this into sharded ALS
+drivers that match the single-device ``cp_als`` / ``als_sweep`` iterates
+numerically (same update algebra; only the reduction order differs).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.core.cpals import (
+    _normalize_columns,
+    fit_from_last_mttkrp,
+    grams,
+    hadamard_except,
+)
+from repro.core.dimtree import (
+    mttkrp_from_partial,
+    partial_mttkrp_left,
+    partial_mttkrp_right,
+)
+from repro.core.mttkrp import Method, mttkrp
+from repro.core.tensor_ops import random_factors, tensor_norm
+
+Array = jax.Array
+ModeAxes = Mapping[int, str]
+
+
+def _validate(shape: Sequence[int], mode_axes: ModeAxes, mesh: Mesh) -> None:
+    seen: dict[str, int] = {}
+    for mode, axis in mode_axes.items():
+        if not 0 <= mode < len(shape):
+            raise ValueError(f"mode {mode} out of range for order-{len(shape)} tensor")
+        if axis not in mesh.shape:
+            raise ValueError(f"mesh has no axis {axis!r} (axes: {mesh.axis_names})")
+        if axis in seen:
+            raise ValueError(f"mesh axis {axis!r} mapped to modes {seen[axis]} and {mode}")
+        seen[axis] = mode
+        if shape[mode] % mesh.shape[axis]:
+            raise ValueError(
+                f"mode {mode} dim {shape[mode]} not divisible by "
+                f"axis {axis!r} size {mesh.shape[axis]}"
+            )
+
+
+def _x_spec(ndim: int, mode_axes: ModeAxes) -> P:
+    return P(*[mode_axes.get(k) for k in range(ndim)])
+
+
+def _factor_specs(ndim: int, mode_axes: ModeAxes) -> list[P]:
+    return [P(mode_axes.get(k), None) for k in range(ndim)]
+
+
+def _reduce_axes(mode_axes: ModeAxes, keep_modes: Sequence[int]) -> tuple[str, ...]:
+    """Mesh axes whose modes are contracted away (i.e. not in ``keep_modes``)."""
+    keep = set(keep_modes)
+    return tuple(mode_axes[m] for m in sorted(mode_axes) if m not in keep)
+
+
+def shard_problem(
+    x: Array, factors: Sequence[Array], mode_axes: ModeAxes, mesh: Mesh
+) -> tuple[Array, list[Array]]:
+    """Place tensor + factors on ``mesh`` per ``mode_axes``; no reordering.
+
+    The tensor is block-distributed: device ``(i, j, ...)`` holds the
+    row-major subtensor of its index block along each mapped mode (a plain
+    ``device_put`` with a NamedSharding -- entries within each block keep
+    their natural layout, so the local kernels see exactly the layout the
+    paper's algorithms assume).  Factor ``U_k`` is row-sharded over
+    ``mode_axes[k]`` when mapped, replicated otherwise.
+    """
+    _validate(x.shape, mode_axes, mesh)
+    xs = jax.device_put(x, NamedSharding(mesh, _x_spec(x.ndim, mode_axes)))
+    fs = [
+        jax.device_put(u, NamedSharding(mesh, spec))
+        for u, spec in zip(factors, _factor_specs(x.ndim, mode_axes))
+    ]
+    return xs, fs
+
+
+def dist_mttkrp(
+    x: Array,
+    factors: Sequence[Array],
+    n: int,
+    mode_axes: ModeAxes,
+    mesh: Mesh,
+    method: Method = "auto",
+) -> Array:
+    """Mode-``n`` MTTKRP of a block-distributed tensor.
+
+    Local shared-memory kernel inside ``shard_map`` + the minimal ``psum``:
+    only over axes mapped to contracted modes.  The result is distributed
+    over ``mode_axes[n]`` (replicated if mode ``n`` is unmapped) -- the
+    sharding of the factor it updates in ALS.
+    """
+    _validate(x.shape, mode_axes, mesh)
+    reduce_axes = _reduce_axes(mode_axes, keep_modes=(n,))
+
+    def local_fn(x_blk, *f_blks):
+        m = mttkrp(x_blk, list(f_blks), n, method=method)
+        if reduce_axes:
+            m = jax.lax.psum(m, reduce_axes)
+        return m
+
+    fn = compat.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(_x_spec(x.ndim, mode_axes), *_factor_specs(x.ndim, mode_axes)),
+        out_specs=P(mode_axes.get(n), None),
+        check_vma=False,
+    )
+    return fn(x, *factors)
+
+
+# --------------------------------------------------------------------------
+# Sharded ALS sweeps.  Only the X-sized contractions run inside shard_map;
+# the C x C Gram/Hadamard/pinv algebra and the (I_k, C) factor updates are
+# identical to the single-device driver and run at the global-array level
+# (GSPMD inserts the small factor collectives), which is what keeps the
+# distributed iterates numerically aligned with cp_als/als_sweep.
+# --------------------------------------------------------------------------
+def dist_als_sweep(
+    x: Array,
+    factors: list[Array],
+    weights: Array,
+    norm_x: Array,
+    it: Array,
+    mode_axes: ModeAxes,
+    mesh: Mesh,
+    method: Method = "auto",
+    normalize: bool = True,
+) -> tuple[list[Array], Array, Array]:
+    """One distributed ALS sweep; mirrors :func:`repro.core.cpals.als_sweep`."""
+    n_modes = len(factors)
+    gs = grams(factors)
+    factors = list(factors)
+    m_last = None
+    for n in range(n_modes):
+        m = dist_mttkrp(x, factors, n, mode_axes, mesh, method=method)
+        h = hadamard_except(gs, n)
+        u = m @ jnp.linalg.pinv(h)
+        if normalize:
+            u, norms = _normalize_columns(u, it)
+            weights = norms
+        factors[n] = u
+        gs[n] = u.T @ u
+        m_last = m
+    fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], norm_x)
+    return factors, weights, fit
+
+
+def _dist_partial_right(
+    x: Array, right_factors: Sequence[Array], mode_axes: ModeAxes, mesh: Mesh
+) -> Array:
+    """Distributed ``T_L``: contract the trailing ``len(right)`` modes away.
+
+    Local partial GEMM on each block + psum over the axes mapped to the
+    contracted (right) modes; the result stays distributed over the axes of
+    the surviving left modes.
+    """
+    m = x.ndim - len(right_factors)
+    reduce_axes = _reduce_axes(mode_axes, keep_modes=range(m))
+    f_specs = _factor_specs(x.ndim, mode_axes)[m:]
+
+    def local_fn(x_blk, *rf):
+        t = partial_mttkrp_right(x_blk, list(rf))
+        if reduce_axes:
+            t = jax.lax.psum(t, reduce_axes)
+        return t
+
+    return compat.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(_x_spec(x.ndim, mode_axes), *f_specs),
+        out_specs=P(*[mode_axes.get(k) for k in range(m)], None),
+        check_vma=False,
+    )(x, *right_factors)
+
+
+def _dist_partial_left(
+    x: Array, left_factors: Sequence[Array], mode_axes: ModeAxes, mesh: Mesh
+) -> Array:
+    """Distributed ``T_R``: contract the leading ``len(left)`` modes away."""
+    m = len(left_factors)
+    reduce_axes = _reduce_axes(mode_axes, keep_modes=range(m, x.ndim))
+    f_specs = _factor_specs(x.ndim, mode_axes)[:m]
+
+    def local_fn(x_blk, *lf):
+        t = partial_mttkrp_left(x_blk, list(lf))
+        if reduce_axes:
+            t = jax.lax.psum(t, reduce_axes)
+        return t
+
+    return compat.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(_x_spec(x.ndim, mode_axes), *f_specs),
+        out_specs=P(*[mode_axes.get(k) for k in range(m, x.ndim)], None),
+        check_vma=False,
+    )(x, *left_factors)
+
+
+def dist_dimtree_sweep(
+    x: Array,
+    factors: list[Array],
+    weights: Array,
+    norm_x: Array,
+    it: Array,
+    mode_axes: ModeAxes,
+    mesh: Mesh,
+    *,
+    normalize: bool = True,
+    split: int | None = None,
+) -> tuple[list[Array], Array, Array]:
+    """Distributed dimension-tree sweep; same iterates as the standard sweep.
+
+    Two distributed X-sized partial contractions per sweep (instead of N
+    full MTTKRPs): ``T_L`` from the old right factors, the per-mode updates
+    of the left half from ``T_L``, then ``T_R`` from the *fresh* left
+    factors and the right-half updates -- exactly the schedule of
+    :func:`repro.core.dimtree.dimtree_sweep`, so it reproduces standard-ALS
+    iterates while reading the distributed tensor twice per sweep.
+    """
+    n_modes = len(factors)
+    m = split if split is not None else (n_modes + 1) // 2
+    gs = grams(factors)
+    factors = list(factors)
+
+    def update(n: int, mtt: Array):
+        nonlocal weights
+        h = hadamard_except(gs, n)
+        u = mtt @ jnp.linalg.pinv(h)
+        if normalize:
+            u, norms = _normalize_columns(u, it)
+            weights = norms
+        factors[n] = u
+        gs[n] = u.T @ u
+
+    t_left = _dist_partial_right(x, factors[m:], mode_axes, mesh)
+    m_last = None
+    for n in range(m):
+        sib = [factors[k] for k in range(m) if k != n]
+        m_last = mttkrp_from_partial(t_left, sib, n)
+        update(n, m_last)
+    t_right = _dist_partial_left(x, factors[:m], mode_axes, mesh)
+    for n in range(m, n_modes):
+        sib = [factors[k] for k in range(m, n_modes) if k != n]
+        m_last = mttkrp_from_partial(t_right, sib, n - m)
+        update(n, m_last)
+
+    fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], norm_x)
+    return factors, weights, fit
+
+
+def dist_cp_als(
+    x: Array,
+    rank: int,
+    mode_axes: ModeAxes,
+    mesh: Mesh,
+    n_iters: int = 50,
+    tol: float = 1.0e-5,
+    *,
+    seed: int = 0,
+    method: Method = "auto",
+    normalize: bool = True,
+    dimtree: bool = False,
+    init_factors: list[Array] | None = None,
+) -> tuple[list[Array], Array, Array]:
+    """Sharded CP-ALS driver; same init/stop logic as core ``cp_als``.
+
+    Returns ``(factors, weights, fit)`` with factors row-distributed per
+    ``mode_axes``.  ``dimtree=True`` swaps in the distributed
+    dimension-tree sweep (identical iterates, 2 tensor reads per sweep).
+    """
+    key = jax.random.PRNGKey(seed)
+    factors = init_factors or random_factors(key, x.shape, rank, x.dtype)
+    xs, fs = shard_problem(x, factors, mode_axes, mesh)
+    weights = jnp.ones((rank,), x.dtype)
+    norm_x = tensor_norm(xs).astype(x.dtype)
+
+    if dimtree:
+        sweep_fn = partial(
+            dist_dimtree_sweep, mode_axes=mode_axes, mesh=mesh, normalize=normalize
+        )
+    else:
+        sweep_fn = partial(
+            dist_als_sweep,
+            mode_axes=mode_axes,
+            mesh=mesh,
+            method=method,
+            normalize=normalize,
+        )
+    sweep = jax.jit(sweep_fn)
+
+    fit_prev = -math.inf
+    fit = jnp.asarray(0.0, x.dtype)
+    for it in range(n_iters):
+        fs, weights, fit = sweep(xs, fs, weights, norm_x, jnp.asarray(it))
+        fit = jax.block_until_ready(fit)
+        if abs(float(fit) - float(fit_prev)) < tol:
+            break
+        fit_prev = float(fit)
+    return fs, weights, fit

@@ -26,6 +26,8 @@ from typing import Any, Sequence
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 _MESH: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar(
     "repro_mesh", default=None
 )
@@ -50,7 +52,7 @@ def in_manual_mode() -> bool:
 
 
 def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+    return compat.auto_axis_types(n)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -61,11 +63,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
         n *= s
     devices = jax.devices()
     if len(devices) == n:
-        return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+        return compat.make_mesh(shape, axes, axis_types=_auto(len(axes)))
     if len(devices) > n:  # e.g. dry-run process exposes 512; single pod uses 256
         import numpy as np
 
-        return Mesh(
+        return compat.mesh_from_devices(
             np.asarray(devices[:n]).reshape(shape), axes, axis_types=_auto(len(axes))
         )
     raise RuntimeError(
@@ -76,7 +78,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Small mesh over the locally available devices (tests / examples)."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return compat.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
 
 
 @contextlib.contextmanager
@@ -95,6 +97,13 @@ def current_mesh() -> Mesh | None:
 
 def dp_axes(mesh: Mesh) -> tuple[str, ...]:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_spec_entry(mesh: Mesh):
+    """The data-parallel axes as one PartitionSpec entry: a tuple when the
+    batch dim is sharded over several mesh axes, the bare name otherwise."""
+    dp = dp_axes(mesh)
+    return dp if len(dp) > 1 else dp[0]
 
 
 def resolve_logical(logical: Sequence[Any] | None, mesh: Mesh) -> P:

@@ -34,10 +34,7 @@ from repro.launch import mesh as meshlib
 
 from .common import ParamDef, act_fn
 
-try:  # jax >= 0.6 public API, fall back to experimental
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.compat import shard_map as _shard_map
 
 Array = jax.Array
 
@@ -68,10 +65,6 @@ def moe_defs(cfg: ModelConfig) -> dict:
     return defs
 
 
-def _dp_spec(dp: tuple[str, ...]):
-    return dp if len(dp) > 1 else dp[0]
-
-
 def moe_apply(p: dict, cfg: ModelConfig, x: Array) -> tuple[Array, Array]:
     """Returns (y, aux_loss).  x: (B, S, d) batch-sharded over dp."""
     mesh = meshlib.current_mesh()
@@ -86,7 +79,7 @@ def moe_apply(p: dict, cfg: ModelConfig, x: Array) -> tuple[Array, Array]:
         return _moe_local(p, cfg, x, e_loc=e_pad, my_first=jnp.int32(0), act=act)
 
     dp = meshlib.dp_axes(mesh)
-    dspec = _dp_spec(dp)
+    dspec = meshlib.dp_spec_entry(mesh)
     tp = mesh.shape.get("model", 1)
     if e_pad % tp:
         raise ValueError(f"padded experts {e_pad} not divisible by tp={tp}")

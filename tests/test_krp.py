@@ -4,8 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import krp, krp_naive, krp_or_ones, krp_row_block, krp_rowwise_scan
 
