@@ -6,25 +6,40 @@ algorithmic comparisons (2-step beats baseline, 1-step pays the explicit-KRP
 tax, baseline pays the reorder copy the paper's methods avoid) are
 size-stable.  We additionally time the baseline's reorder (transpose) cost
 separately -- the paper's DGEMM baseline *excludes* it, so we report both.
+
+Each shape is also planned through ``repro.plan.plan_sweep``; the measured
+rows carry the planner's predicted seconds so perf JSONs record
+predicted-vs-measured, and ``--json`` emits the full ``SweepPlan.describe()``
+next to the measurements.  ``--smoke`` shrinks to tiny shapes with one rep
+(the CI artifact path).
+
+    PYTHONPATH=src python -m benchmarks.bench_mttkrp --smoke --json out.json
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+
 import jax
-import jax.numpy as jnp
 
 from repro.core import (
     matricize,
+    mttkrp,
     mttkrp_1step,
     mttkrp_2step,
     mttkrp_baseline,
     random_factors,
     random_tensor,
 )
+from repro.plan import Problem, plan_sweep
 
 from .util import row, time_fn
 
 C = 25
+DEFAULT_TOTAL = 16e6  # ~16M entries: single-core scale
+FULL_TOTAL = 750e6  # the paper's scale (--full)
+SMOKE_TOTAL = 4096  # tiny CI-artifact scale (--smoke)
 
 
 def _dims(n: int, total: float) -> tuple[int, ...]:
@@ -32,40 +47,87 @@ def _dims(n: int, total: float) -> tuple[int, ...]:
     return (d,) * n
 
 
-def run(full: bool = False) -> list[str]:
-    total = 750e6 if full else 16e6
-    out = []
+def collect(full: bool = False, smoke: bool = False) -> dict:
+    """Measure all shapes; returns {"plans": [...], "results": [...]}."""
+    if full and smoke:
+        raise ValueError("--full and --smoke are mutually exclusive")
+    total = FULL_TOTAL if full else (SMOKE_TOTAL if smoke else DEFAULT_TOTAL)
+    reps = 1 if smoke else 3
+    plans: list[dict] = []
+    results: list[dict] = []
+
+    def rec(name: str, seconds: float, derived: str = "") -> None:
+        results.append({"name": name, "median_s": seconds, "derived": derived})
+
     for n_modes in (3, 4, 5, 6):
         shape = _dims(n_modes, total)
+        plan = plan_sweep(Problem(shape=shape, rank=C, dtype="float32"))
+        plans.append(plan.describe())
         x = random_tensor(jax.random.PRNGKey(0), shape)
         factors = random_factors(jax.random.PRNGKey(1), shape, C)
         # reorder cost: what the straightforward approach pays before DGEMM
-        for mode in range(n_modes):
+        for mp in plan.modes:
+            mode = mp.mode
             reorder = jax.jit(lambda t, m=mode: matricize(t, m))
-            t_reorder = time_fn(reorder, x, reps=3)["median_s"]
+            t_reorder = time_fn(reorder, x, reps=reps)["median_s"]
             t_base = time_fn(
-                jax.jit(lambda t, fs, m=mode: mttkrp_baseline(t, fs, m)), x, factors, reps=3
+                jax.jit(lambda t, fs, m=mode: mttkrp_baseline(t, fs, m)),
+                x, factors, reps=reps,
             )["median_s"]
             t_1step = time_fn(
-                jax.jit(lambda t, fs, m=mode: mttkrp_1step(t, fs, m)), x, factors, reps=3
+                jax.jit(lambda t, fs, m=mode: mttkrp_1step(t, fs, m)),
+                x, factors, reps=reps,
             )["median_s"]
-            names = [
-                (f"mttkrp_N{n_modes}_mode{mode}_baseline", t_base, f"reorder_s={t_reorder:.4f}"),
-                (f"mttkrp_N{n_modes}_mode{mode}_1step", t_1step,
-                 f"vs_baseline={t_base/t_1step:.2f}x"),
-            ]
+            rec(f"mttkrp_N{n_modes}_mode{mode}_baseline", t_base,
+                f"reorder_s={t_reorder:.4f}")
+            rec(f"mttkrp_N{n_modes}_mode{mode}_1step", t_1step,
+                f"vs_baseline={t_base/t_1step:.2f}x")
+            t_2step = None
             if 0 < mode < n_modes - 1:
                 t_2step = time_fn(
-                    jax.jit(lambda t, fs, m=mode: mttkrp_2step(t, fs, m)), x, factors, reps=3
+                    jax.jit(lambda t, fs, m=mode: mttkrp_2step(t, fs, m)),
+                    x, factors, reps=reps,
                 )["median_s"]
-                names.append(
-                    (f"mttkrp_N{n_modes}_mode{mode}_2step", t_2step,
-                     f"vs_baseline={t_base/t_2step:.2f}x")
-                )
-            out.extend(row(*t) for t in names)
-    return out
+                rec(f"mttkrp_N{n_modes}_mode{mode}_2step", t_2step,
+                    f"vs_baseline={t_base/t_2step:.2f}x")
+            # the planner's pick, with its prediction alongside the measurement
+            # (reuse the timing above when the pick is a variant already timed:
+            # auto's 2step order equals mttkrp_2step's own order rule)
+            if mp.algorithm == "1step":
+                t_plan = t_1step
+            elif mp.algorithm.startswith("2step") and t_2step is not None:
+                t_plan = t_2step
+            else:
+                t_plan = time_fn(
+                    jax.jit(lambda t, fs, m=mode, a=mp.algorithm: mttkrp(t, fs, m, method=a)),
+                    x, factors, reps=reps,
+                )["median_s"]
+            rec(f"mttkrp_N{n_modes}_mode{mode}_planned", t_plan,
+                f"alg={mp.algorithm};predicted_s={mp.cost.predicted_s:.3e}")
+    return {"smoke": smoke, "full": full, "rank": C, "plans": plans, "results": results}
+
+
+def run(full: bool = False, smoke: bool = False) -> list[str]:
+    data = collect(full, smoke)
+    return [row(r["name"], r["median_s"], r["derived"]) for r in data["results"]]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    scale = ap.add_mutually_exclusive_group()
+    scale.add_argument("--full", action="store_true", help="paper-scale shapes")
+    scale.add_argument("--smoke", action="store_true", help="tiny shapes, 1 rep")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write measurements + SweepPlan.describe() as JSON")
+    args = ap.parse_args()
+    data = collect(full=args.full, smoke=args.smoke)
+    for r in data["results"]:
+        print(row(r["name"], r["median_s"], r["derived"]))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(data, f, indent=1)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":
-    for line in run():
-        print(line)
+    main()

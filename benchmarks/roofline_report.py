@@ -1,4 +1,5 @@
-"""Aggregate dry-run JSONs into the SRoofline table (markdown + CSV rows)."""
+"""Aggregate dry-run JSONs into the SRoofline table (markdown + CSV rows),
+plus analytic per-dtype MTTKRP rooflines (no artifacts needed)."""
 
 from __future__ import annotations
 
@@ -6,7 +7,7 @@ import glob
 import json
 import os
 
-from repro.analysis.roofline import terms_from_record
+from repro.analysis.roofline import mttkrp_roofline, terms_from_record
 
 
 def load_records(out_dir: str = "results/dryrun") -> list[dict]:
@@ -46,8 +47,40 @@ def table(out_dir: str = "results/dryrun", mesh: str = "pod") -> list[str]:
     return lines
 
 
-def csv_rows(out_dir: str = "results/dryrun") -> list[str]:
+def mttkrp_rows(
+    rank: int | None = None,
+    dtypes=("bf16", "f32", "f64"),
+    full: bool = False,
+) -> list[str]:
+    """Analytic MTTKRP rooflines for the paper's cubic bench shapes per dtype.
+
+    The byte terms come from the dtype-aware ``mttkrp_flops``, so the bf16 /
+    f64 rows differ where the old 4-byte hard-coding made them identical.
+    ``full`` selects the paper-scale shapes, like ``bench_mttkrp --full``.
+    """
+    # shapes AND rank come from bench_mttkrp so the predicted rows stay
+    # aligned with the measured rows they sit beside in the CSV
+    from .bench_mttkrp import C, DEFAULT_TOTAL, FULL_TOTAL, _dims
+
+    rank = C if rank is None else rank
+    total = FULL_TOTAL if full else DEFAULT_TOTAL
     rows = []
+    for n_modes in (3, 4, 5, 6):
+        shape = _dims(n_modes, total)
+        mode = n_modes // 2  # an internal mode: the interesting dispatch case
+        for dt in dtypes:
+            t = mttkrp_roofline(shape, rank, mode, dtype=dt)
+            rows.append(
+                f"mttkrp_roofline_N{n_modes}_mode{mode}_{dt},"
+                f"{t['bound_s'] * 1e6:.2f},"
+                f"bound={t['bound']};intensity={t['intensity_flops_per_byte']:.1f};"
+                f"itemsize={t['itemsize']:.0f}"
+            )
+    return rows
+
+
+def csv_rows(out_dir: str = "results/dryrun", full: bool = False) -> list[str]:
+    rows = mttkrp_rows(full=full)
     for rec in load_records(out_dir):
         if rec.get("skipped") or not rec.get("ok"):
             continue

@@ -43,7 +43,7 @@ def main() -> None:
         "cpals": lambda: bench_cpals.run(args.full),
         "kernels": lambda: bench_kernels.run(args.full),
         "dimtree": lambda: bench_dimtree.run(args.full),
-        "roofline": roofline_report.csv_rows,
+        "roofline": lambda: roofline_report.csv_rows(full=args.full),
     }
     chosen = args.only or list(sections)
 

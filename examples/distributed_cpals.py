@@ -17,6 +17,7 @@ import jax  # noqa: E402
 
 from repro.core import CPConfig, cp_als, cp_full, random_factors  # noqa: E402
 from repro.dist.dist_mttkrp import dist_cp_als  # noqa: E402
+from repro.plan import Problem, plan_sweep  # noqa: E402
 
 
 def main():
@@ -25,6 +26,13 @@ def main():
     key = jax.random.PRNGKey(0)
     shape, rank = (64, 48, 40), 6
     x = cp_full(None, random_factors(key, shape, rank))
+
+    # plan the sharded sweep: per-mode algorithm + predicted psum volume
+    plan = plan_sweep(Problem.from_tensor(x, rank, mode_axes={0: "data", 1: "model"},
+                                          mesh=mesh))
+    for mp in plan.modes:
+        print(f"  mode {mp.mode}: {mp.algorithm:12s} "
+              f"psum {mp.cost.collective_bytes/1e3:8.1f} kB/device")
 
     t0 = time.perf_counter()
     factors, weights, fit = dist_cp_als(

@@ -1,9 +1,11 @@
 """Quickstart: CP decomposition of a dense tensor with the paper's MTTKRP.
 
-Builds a rank-4 planted tensor + noise, runs CP-ALS with the paper's method
-mix (1-step external modes, 2-step internal modes), prints fit trajectory and
-per-iteration timing, and cross-checks the fused Pallas kernel against the
-einsum oracle on one MTTKRP.
+Builds a rank-4 planted tensor + noise, plans the sweep through the
+``Problem -> SweepPlan -> Executor`` front door (the planner reproduces the
+paper's Sec. 5.3.3 method mix: 1-step external modes, 2-step internal
+modes), runs CP-ALS, prints fit trajectory and per-iteration timing, and
+cross-checks the fused Pallas kernel against the einsum oracle on one
+MTTKRP.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -20,6 +22,7 @@ from repro.core import (
     random_factors,
 )
 from repro.kernels import ops
+from repro.plan import Problem, plan_sweep
 
 
 def main():
@@ -29,6 +32,13 @@ def main():
     x = cp_full(None, planted)
     x = x + 0.05 * jnp.std(x) * jax.random.normal(jax.random.PRNGKey(1), x.shape)
     print(f"tensor {shape}, planted rank {rank}, noise 5% of signal std")
+
+    # the front door: plan the sweep, see what the cost model picked per mode
+    plan = plan_sweep(Problem.from_tensor(x, rank))
+    for mp in plan.modes:
+        print(f"  mode {mp.mode}: {mp.algorithm:12s} "
+              f"predicted {mp.cost.predicted_s*1e6:8.1f} us "
+              f"({mp.cost.flops:.2e} flops, {mp.cost.bytes:.2e} B)")
 
     history = []
     state = cp_als(

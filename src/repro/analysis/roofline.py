@@ -29,6 +29,8 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass
 
+import numpy as np
+
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
@@ -50,6 +52,69 @@ _COLL_RE = re.compile(
 _DEF_RE = re.compile(r"^\s+(%[\w.\-]+)\s+=\s+([a-z0-9]+)\[([0-9,]*)\]")
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+
+# numpy-spelled dtypes that np.dtype() cannot resolve without ml_dtypes
+_DTYPE_NAME_BYTES = {"bfloat16": 2, "float8_e4m3fn": 1, "float8_e5m2": 1}
+
+
+def dtype_itemsize(dtype) -> int:
+    """Bytes per element from an HLO dtype name ('bf16'), a numpy-style name
+    ('bfloat16'), or anything ``np.dtype`` accepts (numpy/jax dtypes)."""
+    if isinstance(dtype, str):
+        if dtype in _DTYPE_BYTES:
+            return _DTYPE_BYTES[dtype]
+        if dtype in _DTYPE_NAME_BYTES:
+            return _DTYPE_NAME_BYTES[dtype]
+    try:
+        return int(np.dtype(dtype).itemsize)
+    except TypeError as e:
+        raise ValueError(f"cannot resolve itemsize for dtype {dtype!r}") from e
+
+
+def mttkrp_roofline(
+    shape,
+    rank: int,
+    n: int,
+    *,
+    dtype="f32",
+    peak_flops: float = PEAK_FLOPS,
+    hbm_bw: float = HBM_BW,
+) -> dict:
+    """Analytic single-device roofline *bound* for one mode-``n`` MTTKRP.
+
+    Converts the flop/byte terms of :func:`repro.core.mttkrp.mttkrp_flops`
+    (dtype-aware, so bf16/f64 rooflines differ) into seconds against the
+    hardware constants above, assuming perfect compute/memory overlap
+    (``max`` of the two terms) and no algorithm-specific intermediates.
+    Used by ``benchmarks/roofline_report`` as the optimistic bound next to
+    measurements.  Note this is a different quantity from
+    ``repro.plan.cost.ModeCost.predicted_s``, which is an *additive*
+    no-overlap cost including per-algorithm intermediate and collective
+    traffic -- built for comparing algorithms, not bounding one.
+    """
+    from repro.core.mttkrp import mttkrp_flops  # local: keep this module jax-light
+
+    itemsize = dtype_itemsize(dtype)
+    f = mttkrp_flops(shape, rank, n, itemsize=itemsize)
+    # charge the cheapest real algorithm's extra terms, not both: external
+    # modes must form the full KRP (1-step), internal modes take the 2-step
+    # path (second-step multi-TTV + its intermediate instead of the KRP)
+    internal = f["second_step_flops"] > 0
+    flops = f["gemm_flops"] + (f["second_step_flops"] if internal else f["krp_flops"])
+    intermediate = f["second_step_flops"] / 2.0 * itemsize  # In*min(L,R)*C elems
+    bytes_ = f["tensor_bytes"] + (intermediate if internal else f["krp_bytes"])
+    compute_s, memory_s = flops / peak_flops, bytes_ / hbm_bw
+    return {
+        "flops": flops,
+        "bytes": bytes_,
+        "itemsize": f["itemsize"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "intensity_flops_per_byte": flops / bytes_ if bytes_ else 0.0,
+        "bound": "compute" if compute_s >= memory_s else "memory",
+        "bound_s": max(compute_s, memory_s),
+    }
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:

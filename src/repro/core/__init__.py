@@ -1,6 +1,6 @@
 """Core library: the paper's contribution (KRP, MTTKRP, CP-ALS) in JAX."""
 
-from .cpals import CPConfig, CPState, cp_als
+from .cpals import CPConfig, CPState, cp_als, normalize_columns
 from .krp import krp, krp_naive, krp_or_ones, krp_row_block, krp_rowwise_scan
 from .mttkrp import (
     mttkrp,
@@ -11,11 +11,13 @@ from .mttkrp import (
     mttkrp_flops,
 )
 from .tensor_ops import (
+    EINSUM_LETTERS,
     as_lir,
     cp_full,
     dims_split,
     matricize,
     matricize_multi,
+    mode_letters,
     multi_ttv,
     random_factors,
     random_tensor,
@@ -27,7 +29,10 @@ from .tensor_ops import (
 __all__ = [
     "CPConfig",
     "CPState",
+    "EINSUM_LETTERS",
     "cp_als",
+    "mode_letters",
+    "normalize_columns",
     "krp",
     "krp_naive",
     "krp_or_ones",

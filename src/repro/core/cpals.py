@@ -1,4 +1,4 @@
-"""CP-ALS driver built on the MTTKRP kernels (paper Sec. 2.2 / Sec. 5.3.3).
+"""CP-ALS entry points + the shared per-update algebra (paper Sec. 2.2).
 
 Per mode-n update (alternating least squares):
     M   = MTTKRP(X, {U_k}, n)                      (the bottleneck; Algs. 2-4)
@@ -10,24 +10,24 @@ Fit is tracked with the standard factored identity (no residual tensor):
     <X, Y>      = sum(M_last * (U_last * lambda))   (reuses the last MTTKRP)
     ||Y||^2     = lambda^T ( *_k U_k^T U_k ) lambda
 
-The whole sweep (all N modes) is one jitted function; the mode loop is a
-static Python unroll (each mode has a different shape).  The MTTKRP method is
-selectable per the paper's recommendation (1-step external / 2-step internal)
-via ``method='auto'``.
+The sweep itself lives in ONE place -- :func:`repro.plan.sweep.als_sweep` --
+driven by a ``SweepPlan`` (per-mode algorithm choice from the analytic cost
+model) and an ``Executor`` (local or sharded).  ``als_sweep`` / ``cp_als``
+below are thin back-compat wrappers that build the plan for the old
+``method=`` argument; this module keeps the small algebra helpers
+(:func:`grams`, :func:`hadamard_except`, :func:`fit_from_last_mttkrp`,
+:func:`normalize_columns`) the engine imports.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from .mttkrp import Method, mttkrp
-from .tensor_ops import random_factors, tensor_norm
+from .mttkrp import Method
 
 Array = jax.Array
 
@@ -84,12 +84,16 @@ def fit_from_last_mttkrp(
     return 1.0 - jnp.sqrt(resid_sq) / norm_x
 
 
-def _normalize_columns(u: Array, it: int) -> tuple[Array, Array]:
+def normalize_columns(u: Array, it: int) -> tuple[Array, Array]:
     """Column norms -> lambda.  First sweep uses 2-norm, later sweeps use
     max(1, norm) (the Tensor Toolbox convention that keeps lambdas stable)."""
     norms = jnp.linalg.norm(u, axis=0)
     norms = jnp.where(it == 0, norms, jnp.maximum(norms, 1.0))
     return u / norms[None, :], norms
+
+
+# Historical private name; dimtree.py and dist_mttkrp.py used to import it.
+_normalize_columns = normalize_columns
 
 
 def als_sweep(
@@ -101,25 +105,16 @@ def als_sweep(
     method: Method,
     normalize: bool,
 ) -> tuple[list[Array], Array, Array]:
-    """One full ALS sweep over all modes; returns (factors, weights, fit)."""
-    n_modes = len(factors)
-    gs = grams(factors)
-    m_last = None
-    for n in range(n_modes):
-        m = mttkrp(x, factors, n, method=method)
-        h = hadamard_except(gs, n)
-        # Solve U H = M  via pinv on the C x C Gram-Hadamard (paper Sec. 2.2).
-        u = m @ jnp.linalg.pinv(h)
-        if normalize:
-            u, norms = _normalize_columns(u, it)
-            weights = norms
-        factors = list(factors)
-        factors[n] = u
-        gs[n] = u.T @ u
-        m_last = m
-    # Fit from the last MTTKRP (standard trick; avoids forming the model).
-    fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], norm_x)
-    return factors, weights, fit
+    """One full ALS sweep over all modes; returns (factors, weights, fit).
+
+    Back-compat wrapper: builds the :class:`repro.plan.SweepPlan` for
+    ``method`` and runs the single shared sweep engine on a LocalExecutor.
+    """
+    from repro import plan as planlib
+
+    return planlib.legacy_sweep(
+        x, factors, weights, norm_x, it, strategy=method, normalize=normalize
+    )
 
 
 def cp_als(
@@ -129,28 +124,23 @@ def cp_als(
     callback: Callable[[int, float, float], None] | None = None,
 ) -> CPState:
     """Run CP-ALS.  Returns the final CPState; per-iteration times go through
-    ``callback(it, fit, seconds)`` so benchmarks can record them."""
-    key = jax.random.PRNGKey(config.seed)
-    factors = init_factors or random_factors(key, x.shape, config.rank, x.dtype)
-    weights = jnp.ones((config.rank,), x.dtype)
-    norm_x = tensor_norm(x).astype(x.dtype)
+    ``callback(it, fit, seconds)`` so benchmarks can record them.
 
-    sweep = jax.jit(
-        partial(als_sweep, method=config.method, normalize=config.normalize),
-        static_argnames=(),
+    Back-compat wrapper over the single :func:`repro.plan.cp_als` driver.
+    """
+    from repro import plan as planlib
+
+    problem = planlib.Problem.from_tensor(x, config.rank)
+    sweep_plan = planlib.plan_sweep(
+        problem, strategy=config.method, normalize=config.normalize
     )
-
-    fit_prev = -jnp.inf
-    fit = jnp.asarray(0.0, x.dtype)
-    it = 0
-    for it in range(config.n_iters):
-        t0 = time.perf_counter()
-        factors, weights, fit = sweep(x, factors, weights, norm_x, it)
-        fit = jax.block_until_ready(fit)
-        dt = time.perf_counter() - t0
-        if callback is not None:
-            callback(it, float(fit), dt)
-        if config.track_fit and abs(float(fit) - float(fit_prev)) < config.tol:
-            break
-        fit_prev = fit
-    return CPState(factors=factors, weights=weights, fit=fit, it=it + 1)
+    return planlib.cp_als(
+        x,
+        sweep_plan,
+        n_iters=config.n_iters,
+        tol=config.tol,
+        seed=config.seed,
+        track_fit=config.track_fit,
+        init_factors=init_factors,
+        callback=callback,
+    )

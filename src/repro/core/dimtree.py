@@ -24,13 +24,10 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from .cpals import _normalize_columns, fit_from_last_mttkrp, grams, hadamard_except
 from .krp import krp_or_ones
-from .tensor_ops import tensor_norm
+from .tensor_ops import mode_letters
 
 Array = jax.Array
-
-_LETTERS = "abdefghijklm"
 
 
 def partial_mttkrp_right(x: Array, right_factors: Sequence[Array]) -> Array:
@@ -67,7 +64,7 @@ def mttkrp_from_partial(t: Array, siblings: Sequence[Array], pos: int) -> Array:
     ``siblings``: factors of the half's other modes (in order, skipping pos).
     """
     order = t.ndim - 1
-    letters = _LETTERS[:order]
+    letters = mode_letters(order)
     terms = [letters + "c"]
     args: list[Array] = [t]
     si = 0
@@ -92,35 +89,13 @@ def dimtree_sweep(
 ):
     """One full ALS sweep via the dimension tree; same signature contract as
     cpals.als_sweep (returns (factors, weights, fit)) and identical iterates.
+
+    Back-compat wrapper: builds the ``strategy='dimtree'`` plan and runs the
+    single shared sweep engine on a LocalExecutor.
     """
-    n_modes = len(factors)
-    m = split if split is not None else (n_modes + 1) // 2
-    gs = grams(factors)
-    factors = list(factors)
+    from repro import plan as planlib
 
-    def update(n: int, mtt: Array):
-        nonlocal weights
-        h = hadamard_except(gs, n)
-        u = mtt @ jnp.linalg.pinv(h)
-        if normalize:
-            u, norms = _normalize_columns(u, it)
-            weights = norms
-        factors[n] = u
-        gs[n] = u.T @ u
-
-    # left half: T_L depends only on (old) right factors
-    t_left = partial_mttkrp_right(x, factors[m:])
-    m_last = None
-    for n in range(m):
-        sib = [factors[k] for k in range(m) if k != n]
-        m_last = mttkrp_from_partial(t_left, sib, n)
-        update(n, m_last)
-    # right half: T_R from the freshly updated left factors
-    t_right = partial_mttkrp_left(x, factors[:m])
-    for n in range(m, n_modes):
-        sib = [factors[k] for k in range(m, n_modes) if k != n]
-        m_last = mttkrp_from_partial(t_right, sib, n - m)
-        update(n, m_last)
-
-    fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], norm_x)
-    return factors, weights, fit
+    return planlib.legacy_sweep(
+        x, factors, weights, norm_x, it,
+        strategy="dimtree", normalize=normalize, split=split,
+    )

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from .krp import krp, krp_or_ones
-from .tensor_ops import as_lir, dims_split, matricize, multi_ttv
+from .tensor_ops import as_lir, dims_split, matricize, mode_letters, multi_ttv
 
 Array = jax.Array
 Method = Literal["auto", "1step", "2step", "2step-left", "2step-right", "einsum", "baseline", "fused"]
@@ -36,7 +36,7 @@ def _split_factors(factors: Sequence[Array], n: int):
 
 def mttkrp_einsum(x: Array, factors: Sequence[Array], n: int) -> Array:
     """Direct einsum oracle (no algorithmic structure; for tests/autodiff ref)."""
-    letters = "abdefghijklm"[: x.ndim]
+    letters = mode_letters(x.ndim)
     terms = [letters]
     args: list[Array] = [x]
     for k, u in enumerate(factors):
@@ -165,12 +165,27 @@ def mttkrp(
     raise ValueError(f"unknown method {method!r}")
 
 
-def mttkrp_flops(shape: Sequence[int], rank: int, n: int) -> dict[str, float]:
-    """Analytic flop/byte model per algorithm (used by benchmarks/roofline).
+def mttkrp_flops(
+    shape: Sequence[int],
+    rank: int,
+    n: int,
+    *,
+    dtype=None,
+    itemsize: float | None = None,
+) -> dict[str, float]:
+    """Analytic flop/byte model per algorithm (used by benchmarks/roofline
+    and the ``repro.plan`` cost model).
 
     Returns flops for the GEMM part, the KRP part, and bytes touched for the
     tensor read -- mirrors the paper's O(IC) GEMM / O(I_{neq n} C) KRP split.
+    Byte terms scale with the element size: pass ``dtype`` (anything
+    ``jnp.dtype`` accepts) or ``itemsize`` directly so bf16/f64 rooflines are
+    correct; the default remains 4-byte (f32) elements.
     """
+    if itemsize is None:
+        import numpy as np  # jax dtypes (incl. bfloat16 via ml_dtypes) resolve here
+
+        itemsize = float(np.dtype(dtype).itemsize) if dtype is not None else 4.0
     L, In, R = dims_split(shape, n)
     total = math.prod(shape)
     gemm = 2.0 * total * rank
@@ -182,6 +197,7 @@ def mttkrp_flops(shape: Sequence[int], rank: int, n: int) -> dict[str, float]:
         "krp_flops": krp_full,
         "krp_naive_flops": krp_naive,
         "second_step_flops": second_step,
-        "tensor_bytes": 4.0 * total,
-        "krp_bytes": 4.0 * L * R * rank,
+        "tensor_bytes": itemsize * total,
+        "krp_bytes": itemsize * L * R * rank,
+        "itemsize": float(itemsize),
     }

@@ -32,6 +32,25 @@ import numpy as np
 
 Array = jax.Array
 
+# Mode-index einsum letters shared by every contraction in the package.
+# 'c' is reserved for the CP rank axis, 'z' for a kept mode in multi_ttv,
+# hence both are absent from the pool.
+EINSUM_LETTERS = "abdefghijklm"
+
+
+def mode_letters(order: int) -> str:
+    """Einsum letters for the modes of an order-``order`` tensor.
+
+    One shared pool (rather than per-module copies) so the supported-order
+    limit is enforced in one place instead of silently truncating.
+    """
+    if not 0 < order <= len(EINSUM_LETTERS):
+        raise ValueError(
+            f"tensor order {order} outside supported range 1..{len(EINSUM_LETTERS)} "
+            "('c' is reserved for the CP rank axis, 'z' for the kept mode)"
+        )
+    return EINSUM_LETTERS[:order]
+
 
 def dims_split(shape: Sequence[int], n: int) -> tuple[int, int, int]:
     """Return ``(L, I_n, R)`` for mode ``n`` of ``shape`` (see module docstring)."""
@@ -110,7 +129,8 @@ def multi_ttv(t: Array, factors: Sequence[Array], cols_last: bool = True) -> Arr
     # Contract the leading len(factors) modes; the kept mode is the last
     # non-rank axis.  einsum with a shared 'c' index implements the per-column
     # TTVs of Alg. 4 lines 7-9 / 13-15 as one batched contraction.
-    letters = "abdefghijklm"[: order - 1]
+    # order-1 letters for the contracted modes ('z' names the kept mode)
+    letters = mode_letters(order - 1) if order > 1 else ""
     spec_t = letters + "z" + "c"
     spec_fs = [let + "c" for let in letters]
     return jnp.einsum(",".join([spec_t] + spec_fs) + "->zc", t, *factors)
@@ -140,7 +160,7 @@ def cp_full(weights: Array | None, factors: Sequence[Array]) -> Array:
     rank = factors[0].shape[1]
     if weights is None:
         weights = jnp.ones((rank,), factors[0].dtype)
-    letters = "abdefghijklm"[: len(factors)]
+    letters = mode_letters(len(factors))
     spec = ",".join(["c"] + [let + "c" for let in letters]) + "->" + letters
     return jnp.einsum(spec, weights, *factors)
 

@@ -24,32 +24,21 @@ communication lower-bound analysis:
 ``dist_cp_als`` / ``dist_dimtree_sweep`` wrap this into sharded ALS
 drivers that match the single-device ``cp_als`` / ``als_sweep`` iterates
 numerically (same update algebra; only the reduction order differs).
+All sweeps route through the single engine in :mod:`repro.plan.sweep`
+(``ShardedExecutor`` wraps the shard_map + psum placement below); this
+module keeps the placement primitives and the back-compat entry points.
 """
 
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Mapping, Sequence
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core.cpals import (
-    _normalize_columns,
-    fit_from_last_mttkrp,
-    grams,
-    hadamard_except,
-)
-from repro.core.dimtree import (
-    mttkrp_from_partial,
-    partial_mttkrp_left,
-    partial_mttkrp_right,
-)
+from repro.core.dimtree import partial_mttkrp_left, partial_mttkrp_right
 from repro.core.mttkrp import Method, mttkrp
-from repro.core.tensor_ops import random_factors, tensor_norm
 
 Array = jax.Array
 ModeAxes = Mapping[int, str]
@@ -143,10 +132,11 @@ def dist_mttkrp(
 
 # --------------------------------------------------------------------------
 # Sharded ALS sweeps.  Only the X-sized contractions run inside shard_map;
-# the C x C Gram/Hadamard/pinv algebra and the (I_k, C) factor updates are
-# identical to the single-device driver and run at the global-array level
-# (GSPMD inserts the small factor collectives), which is what keeps the
-# distributed iterates numerically aligned with cp_als/als_sweep.
+# the C x C Gram/Hadamard/pinv algebra and the (I_k, C) factor updates run
+# at the global-array level (GSPMD inserts the small factor collectives),
+# which is what keeps the distributed iterates numerically aligned with
+# cp_als/als_sweep.  The algebra itself lives ONCE in repro.plan.sweep;
+# these wrappers build the sharded plan + executor for the old signatures.
 # --------------------------------------------------------------------------
 def dist_als_sweep(
     x: Array,
@@ -160,22 +150,12 @@ def dist_als_sweep(
     normalize: bool = True,
 ) -> tuple[list[Array], Array, Array]:
     """One distributed ALS sweep; mirrors :func:`repro.core.cpals.als_sweep`."""
-    n_modes = len(factors)
-    gs = grams(factors)
-    factors = list(factors)
-    m_last = None
-    for n in range(n_modes):
-        m = dist_mttkrp(x, factors, n, mode_axes, mesh, method=method)
-        h = hadamard_except(gs, n)
-        u = m @ jnp.linalg.pinv(h)
-        if normalize:
-            u, norms = _normalize_columns(u, it)
-            weights = norms
-        factors[n] = u
-        gs[n] = u.T @ u
-        m_last = m
-    fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], norm_x)
-    return factors, weights, fit
+    from repro import plan as planlib
+
+    return planlib.legacy_sweep(
+        x, factors, weights, norm_x, it,
+        strategy=method, normalize=normalize, mode_axes=mode_axes, mesh=mesh,
+    )
 
 
 def _dist_partial_right(
@@ -246,39 +226,17 @@ def dist_dimtree_sweep(
     Two distributed X-sized partial contractions per sweep (instead of N
     full MTTKRPs): ``T_L`` from the old right factors, the per-mode updates
     of the left half from ``T_L``, then ``T_R`` from the *fresh* left
-    factors and the right-half updates -- exactly the schedule of
-    :func:`repro.core.dimtree.dimtree_sweep`, so it reproduces standard-ALS
-    iterates while reading the distributed tensor twice per sweep.
+    factors and the right-half updates -- the schedule of the shared engine's
+    dimtree path, so it reproduces standard-ALS iterates while reading the
+    distributed tensor twice per sweep.
     """
-    n_modes = len(factors)
-    m = split if split is not None else (n_modes + 1) // 2
-    gs = grams(factors)
-    factors = list(factors)
+    from repro import plan as planlib
 
-    def update(n: int, mtt: Array):
-        nonlocal weights
-        h = hadamard_except(gs, n)
-        u = mtt @ jnp.linalg.pinv(h)
-        if normalize:
-            u, norms = _normalize_columns(u, it)
-            weights = norms
-        factors[n] = u
-        gs[n] = u.T @ u
-
-    t_left = _dist_partial_right(x, factors[m:], mode_axes, mesh)
-    m_last = None
-    for n in range(m):
-        sib = [factors[k] for k in range(m) if k != n]
-        m_last = mttkrp_from_partial(t_left, sib, n)
-        update(n, m_last)
-    t_right = _dist_partial_left(x, factors[:m], mode_axes, mesh)
-    for n in range(m, n_modes):
-        sib = [factors[k] for k in range(m, n_modes) if k != n]
-        m_last = mttkrp_from_partial(t_right, sib, n - m)
-        update(n, m_last)
-
-    fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], norm_x)
-    return factors, weights, fit
+    return planlib.legacy_sweep(
+        x, factors, weights, norm_x, it,
+        strategy="dimtree", normalize=normalize, split=split,
+        mode_axes=mode_axes, mesh=mesh,
+    )
 
 
 def dist_cp_als(
@@ -300,33 +258,23 @@ def dist_cp_als(
     Returns ``(factors, weights, fit)`` with factors row-distributed per
     ``mode_axes``.  ``dimtree=True`` swaps in the distributed
     dimension-tree sweep (identical iterates, 2 tensor reads per sweep).
+
+    Back-compat wrapper over the single :func:`repro.plan.cp_als` driver
+    with a :class:`repro.plan.ShardedExecutor`.
     """
-    key = jax.random.PRNGKey(seed)
-    factors = init_factors or random_factors(key, x.shape, rank, x.dtype)
-    xs, fs = shard_problem(x, factors, mode_axes, mesh)
-    weights = jnp.ones((rank,), x.dtype)
-    norm_x = tensor_norm(xs).astype(x.dtype)
+    from repro import plan as planlib
 
-    if dimtree:
-        sweep_fn = partial(
-            dist_dimtree_sweep, mode_axes=mode_axes, mesh=mesh, normalize=normalize
-        )
-    else:
-        sweep_fn = partial(
-            dist_als_sweep,
-            mode_axes=mode_axes,
-            mesh=mesh,
-            method=method,
-            normalize=normalize,
-        )
-    sweep = jax.jit(sweep_fn)
-
-    fit_prev = -math.inf
-    fit = jnp.asarray(0.0, x.dtype)
-    for it in range(n_iters):
-        fs, weights, fit = sweep(xs, fs, weights, norm_x, jnp.asarray(it))
-        fit = jax.block_until_ready(fit)
-        if abs(float(fit) - float(fit_prev)) < tol:
-            break
-        fit_prev = float(fit)
-    return fs, weights, fit
+    problem = planlib.Problem.from_tensor(x, rank, mode_axes=mode_axes, mesh=mesh)
+    sweep_plan = planlib.plan_sweep(
+        problem, strategy="dimtree" if dimtree else method, normalize=normalize
+    )
+    st = planlib.cp_als(
+        x,
+        sweep_plan,
+        executor=planlib.ShardedExecutor(mesh, mode_axes),
+        n_iters=n_iters,
+        tol=tol,
+        seed=seed,
+        init_factors=init_factors,
+    )
+    return st.factors, st.weights, st.fit

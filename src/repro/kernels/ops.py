@@ -55,8 +55,12 @@ def _block(dim: int, target: int) -> int:
     return min(dim, target)
 
 
-def _balanced_split(dims: Sequence[int]) -> int:
-    """Split index minimizing |log prod(left) - log prod(right)| (>=1 each side)."""
+def balanced_split(dims: Sequence[int]) -> int:
+    """Split index minimizing |log prod(left) - log prod(right)| (>=1 each side).
+
+    Public because the ``repro.plan`` cost model mirrors the fused kernel's
+    partial-KRP split when predicting its HBM traffic.
+    """
     best, best_val = 1, float("inf")
     total = math.prod(dims)
     acc = 1
@@ -66,6 +70,9 @@ def _balanced_split(dims: Sequence[int]) -> int:
         if val < best_val:
             best, best_val = i, val
     return best
+
+
+_balanced_split = balanced_split
 
 
 @partial(jax.jit, static_argnames=("n", "block_i", "block_b", "interpret", "pad_rank_to"))

@@ -1,0 +1,46 @@
+"""``repro.plan`` -- one front door: Problem -> SweepPlan -> Executor.
+
+The solver API redesigned around three pieces:
+
+* :class:`Problem` -- immutable descriptor (shape, rank, dtype, optional
+  mode->mesh-axis mapping) every planner call keys on.
+* :func:`plan_sweep` -- picks each mode's MTTKRP algorithm (1-step /
+  2-step-left / 2-step-right / dimension-tree / fused) from the analytic
+  flop/byte/collective cost model; :meth:`SweepPlan.describe` exposes the
+  predictions so benchmarks report predicted-vs-measured.
+* :class:`Executor` -- where contractions run: :class:`LocalExecutor`
+  (single device) or :class:`ShardedExecutor` (``shard_map`` + minimal psum
+  over a device mesh).
+
+Exactly one :func:`als_sweep` engine and one :func:`cp_als` driver consume
+them; the pre-redesign entry points (``core.cpals.cp_als``,
+``core.dimtree.dimtree_sweep``, ``dist.dist_mttkrp.dist_cp_als`` /
+``dist_dimtree_sweep``) remain as thin wrappers that build the
+corresponding plan.
+"""
+
+from .cost import ALGORITHMS, ModeCost, dimtree_mode_cost, mode_cost, ring_allreduce_bytes
+from .executor import Executor, LocalExecutor, ShardedExecutor
+from .planner import STRATEGIES, ModePlan, SweepPlan, plan_sweep
+from .problem import Problem
+from .sweep import SweepState, als_sweep, cp_als, legacy_sweep
+
+__all__ = [
+    "ALGORITHMS",
+    "STRATEGIES",
+    "Executor",
+    "LocalExecutor",
+    "ModeCost",
+    "ModePlan",
+    "Problem",
+    "ShardedExecutor",
+    "SweepPlan",
+    "SweepState",
+    "als_sweep",
+    "cp_als",
+    "dimtree_mode_cost",
+    "legacy_sweep",
+    "mode_cost",
+    "plan_sweep",
+    "ring_allreduce_bytes",
+]

@@ -1,0 +1,221 @@
+"""Analytic per-mode cost model behind ``plan_sweep``.
+
+Extends the flop/byte model of :func:`repro.core.mttkrp.mttkrp_flops` with
+the algorithm-specific intermediate traffic (the full-KRP materialization of
+1-step, the partial tensor of 2-step, the half-tensors of the dimension
+tree) and -- for sharded problems -- the per-mode psum volume the
+``mode_axes`` placement requires (ring all-reduce over the axes mapped to
+contracted modes, per Ballard/Knight/Rouse's collective-volume accounting).
+
+Seconds are predicted against the roofline constants of
+``repro.analysis.roofline`` additively (``flops/PEAK + bytes/HBM +
+coll/ICI`` -- a no-overlap model; the async-collective ROADMAP item will
+turn the collective term into a ``max``).  Absolute numbers are
+hardware-nominal; the planner only ever compares costs of the same mode
+across algorithms, where the shared GEMM term cancels.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.core.mttkrp import mttkrp_flops
+from repro.core.tensor_ops import dims_split
+
+from .problem import Problem
+
+ALGORITHMS = (
+    "1step",
+    "2step",
+    "2step-left",
+    "2step-right",
+    "dimtree",
+    "fused",
+    "einsum",
+    "baseline",
+)
+
+
+@dataclass(frozen=True)
+class ModeCost:
+    """Cost terms for one mode-n MTTKRP under one algorithm.
+
+    ``gemm_flops`` / ``krp_flops`` / ``second_step_flops`` are the terms of
+    ``mttkrp_flops`` (local block dims for sharded problems); ``bytes`` is
+    total HBM traffic including intermediates; ``collective_bytes`` is the
+    per-device psum volume (0 on unsharded problems).
+    """
+
+    gemm_flops: float
+    krp_flops: float
+    second_step_flops: float
+    bytes: float
+    collective_bytes: float = 0.0
+
+    @property
+    def flops(self) -> float:
+        return self.gemm_flops + self.krp_flops + self.second_step_flops
+
+    @property
+    def predicted_s(self) -> float:
+        return (
+            self.flops / PEAK_FLOPS
+            + self.bytes / HBM_BW
+            + self.collective_bytes / ICI_BW
+        )
+
+    def as_dict(self) -> dict:
+        return {
+            "gemm_flops": self.gemm_flops,
+            "krp_flops": self.krp_flops,
+            "second_step_flops": self.second_step_flops,
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": self.collective_bytes,
+            "predicted_s": self.predicted_s,
+        }
+
+
+def ring_allreduce_bytes(block_bytes: float, participants: int) -> float:
+    """Per-device wire bytes of a ring all-reduce of a ``block_bytes`` blob."""
+    if participants <= 1:
+        return 0.0
+    return 2.0 * block_bytes * (participants - 1) / participants
+
+
+def _fused_krp_dims(local_shape, n: int) -> tuple[int, int]:
+    """Row counts of the two partial KRPs the fused Pallas kernel streams
+    (internal modes: the L/R sides; external modes: the log-balanced split
+    used by ``repro.kernels.ops.fused_mttkrp``)."""
+    L, _, R = dims_split(local_shape, n)
+    if 0 < n < len(local_shape) - 1:
+        return L, R
+    from repro.kernels.ops import balanced_split  # lazy: kernels import pallas
+
+    dims = [d for k, d in enumerate(local_shape) if k != n]
+    if len(dims) < 2:
+        return dims[0] if dims else 1, 1
+    s = balanced_split(dims)
+    return math.prod(dims[:s]), math.prod(dims[s:])
+
+
+def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
+    """Cost of one mode-``n`` MTTKRP under ``algorithm``.
+
+    Computed on the per-device block dims; the psum volume for sharded
+    problems is the ring all-reduce of the local partial result over the
+    axes mapped to contracted modes (no collective when mode ``n`` itself is
+    the only mapped mode -- its axis carries the output rows).
+    """
+    if algorithm not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {algorithm!r} (choose from {ALGORITHMS})")
+    shape = problem.local_shape
+    c = problem.rank
+    s = problem.itemsize
+    base = mttkrp_flops(shape, c, n, itemsize=s)
+    L, In, R = dims_split(shape, n)
+    out_bytes = In * c * s
+    coll = ring_allreduce_bytes(out_bytes, problem.reduce_participants((n,)))
+
+    if algorithm == "2step" and not problem.external_mode(n):
+        # forced 2-step resolves its order by cost, like the Alg. 4 line-4 rule
+        left = mode_cost(problem, n, "2step-left")
+        right = mode_cost(problem, n, "2step-right")
+        return left if left.predicted_s < right.predicted_s else right
+
+    if algorithm == "1step" or (
+        problem.external_mode(n) and algorithm in ("2step", "2step-left", "2step-right")
+    ):
+        # explicit KRP: L*R*C materialized (written once, read once by the GEMM)
+        return ModeCost(
+            gemm_flops=base["gemm_flops"],
+            krp_flops=base["krp_flops"],
+            second_step_flops=0.0,
+            bytes=base["tensor_bytes"] + 2.0 * base["krp_bytes"] + out_bytes,
+            collective_bytes=coll,
+        )
+    if algorithm in ("2step-left", "2step-right"):
+        # left-first contracts K_L in the GEMM, multi-TTVs over R (and vice
+        # versa); intermediate is In * contracted-side * C.
+        second_side = R if algorithm == "2step-left" else L
+        intermediate = In * second_side * c * s
+        return ModeCost(
+            gemm_flops=base["gemm_flops"],
+            krp_flops=float((L + R) * c),  # two small KRPs instead of one huge
+            second_step_flops=2.0 * In * second_side * c,
+            bytes=base["tensor_bytes"] + 2.0 * intermediate + (L + R) * c * s + out_bytes,
+            collective_bytes=coll,
+        )
+    if algorithm == "fused":
+        da, db = _fused_krp_dims(shape, n)
+        return ModeCost(
+            gemm_flops=base["gemm_flops"],
+            krp_flops=float((da + db) * c),
+            second_step_flops=0.0,
+            # the full KRP never hits HBM -- only the two partials stream in
+            bytes=base["tensor_bytes"] + (da + db) * c * s + out_bytes,
+            collective_bytes=coll,
+        )
+    if algorithm == "einsum":
+        return ModeCost(
+            gemm_flops=base["gemm_flops"],
+            krp_flops=0.0,
+            second_step_flops=0.0,
+            bytes=base["tensor_bytes"] + (L + In + R) * c * s + out_bytes,
+            collective_bytes=coll,
+        )
+    if algorithm == "baseline":
+        # reorder (transpose copy: read + write) then one GEMM over the copy
+        return ModeCost(
+            gemm_flops=base["gemm_flops"],
+            krp_flops=base["krp_flops"],
+            second_step_flops=0.0,
+            bytes=3.0 * base["tensor_bytes"] + 2.0 * base["krp_bytes"] + out_bytes,
+            collective_bytes=coll,
+        )
+    # "dimtree" needs the half split, which only the planner knows.
+    raise ValueError("dimtree mode costs are built by plan_sweep via dimtree_mode_cost")
+
+
+def dimtree_mode_cost(problem: Problem, n: int, split: int) -> ModeCost:
+    """Dimension-tree cost of mode ``n`` given the half split at ``split``.
+
+    The first mode of each half carries the half's partial contraction (one
+    X-sized GEMM + its psum); every mode then pays the multi-TTV over its
+    half's partial tensor.
+    """
+    shape = problem.local_shape
+    c = problem.rank
+    s = problem.itemsize
+    in_left = n < split
+    half_modes = range(split) if in_left else range(split, problem.ndim)
+    half_elems = math.prod(shape[m] for m in half_modes)
+    t_bytes = half_elems * c * s
+    out_bytes = shape[n] * c * s
+
+    # multi-TTV: contract every sibling mode of the half away from T
+    ttv_flops = 2.0 * half_elems * c if len(list(half_modes)) > 1 else 0.0
+    gemm = krp = 0.0
+    coll = 0.0
+    if n == (0 if in_left else split):  # first mode of the half: build T
+        total = math.prod(shape)
+        gemm = 2.0 * total * c
+        other = [m for m in range(problem.ndim) if (m >= split) == in_left]
+        # KRP of the other half: prod(other dims) x C elements (~1 hadamard
+        # multiply per element with the reuse fold -- same convention as
+        # mttkrp_flops' krp_flops)
+        krp_elems = math.prod(shape[m] for m in other) * c if other else 0
+        krp = float(krp_elems)
+        coll = ring_allreduce_bytes(t_bytes, problem.reduce_participants(half_modes))
+        bytes_ = total * s + 2.0 * krp_elems * s + 2.0 * t_bytes + out_bytes
+    else:
+        bytes_ = t_bytes + out_bytes
+    return ModeCost(
+        gemm_flops=gemm,
+        krp_flops=krp,
+        second_step_flops=ttv_flops,
+        bytes=bytes_,
+        collective_bytes=coll,
+    )

@@ -1,0 +1,97 @@
+"""Executors: where a planned contraction actually runs.
+
+The sweep engine (:mod:`repro.plan.sweep`) is executor-agnostic: it asks for
+"the mode-n MTTKRP of this ModePlan" or "the half-partial of these factors"
+and never touches placement.  ``LocalExecutor`` runs the paper's
+shared-memory kernels directly; ``ShardedExecutor`` wraps the
+``shard_map`` + minimal-``psum`` placement of :mod:`repro.dist.dist_mttkrp`
+(local kernel per device block, one psum over the axes mapped to contracted
+modes).  New backends -- async-collective variants, other accelerators --
+implement the same four methods and every driver picks them up unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, Sequence, runtime_checkable
+
+import jax
+
+from repro.core.dimtree import partial_mttkrp_left, partial_mttkrp_right
+from repro.core.mttkrp import mttkrp
+from repro.dist.dist_mttkrp import (
+    _dist_partial_left,
+    _dist_partial_right,
+    dist_mttkrp,
+    shard_problem,
+)
+
+from .planner import ModePlan
+from .problem import Problem
+
+Array = jax.Array
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """The four contractions an ALS sweep needs, placement included."""
+
+    def prepare(self, problem: Problem, x: Array, factors: Sequence[Array]):
+        """Place tensor + factors for this executor (identity when local)."""
+        ...
+
+    def mttkrp(self, x: Array, factors: Sequence[Array], mp: ModePlan) -> Array:
+        """Full mode-``mp.mode`` MTTKRP with ``mp.algorithm``."""
+        ...
+
+    def partial_right(self, x: Array, right_factors: Sequence[Array]) -> Array:
+        """Dimension-tree ``T_L``: contract the trailing modes away."""
+        ...
+
+    def partial_left(self, x: Array, left_factors: Sequence[Array]) -> Array:
+        """Dimension-tree ``T_R``: contract the leading modes away."""
+        ...
+
+
+class LocalExecutor:
+    """Single-device execution of the paper's shared-memory kernels."""
+
+    def prepare(self, problem: Problem, x: Array, factors: Sequence[Array]):
+        return x, list(factors)
+
+    def mttkrp(self, x: Array, factors: Sequence[Array], mp: ModePlan) -> Array:
+        return mttkrp(x, list(factors), mp.mode, method=mp.algorithm)
+
+    def partial_right(self, x: Array, right_factors: Sequence[Array]) -> Array:
+        return partial_mttkrp_right(x, list(right_factors))
+
+    def partial_left(self, x: Array, left_factors: Sequence[Array]) -> Array:
+        return partial_mttkrp_left(x, list(left_factors))
+
+
+class ShardedExecutor:
+    """Block-distributed execution over a device mesh.
+
+    Holds the concrete ``Mesh`` + ``mode_axes`` mapping (the Problem only
+    carries their sizes).  Every contraction is the local shared-memory
+    kernel inside ``shard_map`` plus the minimal psum the mapping requires;
+    the small Gram/pinv algebra stays at the global-array level in the
+    engine, exactly as the previous hand-written distributed sweeps did.
+    """
+
+    def __init__(self, mesh, mode_axes):
+        self.mesh = mesh
+        self.mode_axes = dict(mode_axes)
+
+    def prepare(self, problem: Problem, x: Array, factors: Sequence[Array]):
+        return shard_problem(x, factors, self.mode_axes, self.mesh)
+
+    def mttkrp(self, x: Array, factors: Sequence[Array], mp: ModePlan) -> Array:
+        return dist_mttkrp(
+            x, list(factors), mp.mode, self.mode_axes, self.mesh, method=mp.algorithm
+        )
+
+    def partial_right(self, x: Array, right_factors: Sequence[Array]) -> Array:
+        return _dist_partial_right(x, list(right_factors), self.mode_axes, self.mesh)
+
+    def partial_left(self, x: Array, left_factors: Sequence[Array]) -> Array:
+        return _dist_partial_left(x, list(left_factors), self.mode_axes, self.mesh)

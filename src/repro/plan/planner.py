@@ -1,0 +1,154 @@
+"""``plan_sweep``: the single front door for ALS algorithm choice.
+
+The paper's Sec. 5.3.3 finding -- 1-step on external modes, 2-step on
+internal modes -- used to be hard-coded inside ``mttkrp(method="auto")`` and
+re-derived independently by four sweep implementations.  It now lives here,
+driven by the analytic cost model of :mod:`repro.plan.cost`: ``auto`` picks
+each mode's algorithm by predicted seconds, breaking near-ties (within 10%)
+toward the paper's empirical recommendation, which exactly reproduces the
+Sec. 5.3.3 dispatch on the benchmark shapes while letting genuinely lopsided
+shapes (e.g. one huge mode flanked by tiny ones) escape the heuristic.
+
+Future ROADMAP items (async psum overlap, compressed factor all-reduce, new
+backends) hook in here: they change a cost term or add an algorithm, and
+every driver -- local, dimension-tree, distributed -- picks it up for free.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .cost import ALGORITHMS, ModeCost, dimtree_mode_cost, mode_cost
+from .problem import Problem
+
+STRATEGIES = (
+    "auto",
+    "1step",
+    "2step",
+    "2step-left",
+    "2step-right",
+    "dimtree",
+    "fused",
+    "einsum",
+    "baseline",
+)
+
+# auto prefers 2-step on internal modes unless 1-step is predicted >10%
+# cheaper: the flop/byte terms of the two algorithms cross within model noise
+# on near-cubic shapes (where the paper measured 2-step ahead), so the model
+# alone decides only clear wins.
+_NEAR_TIE = 0.9
+
+
+@dataclass(frozen=True)
+class ModePlan:
+    """Algorithm choice + predicted cost for one mode's MTTKRP."""
+
+    mode: int
+    algorithm: str
+    cost: ModeCost
+
+    def as_dict(self) -> dict:
+        return {"mode": self.mode, "algorithm": self.algorithm, **self.cost.as_dict()}
+
+
+@dataclass(frozen=True)
+class SweepPlan:
+    """Per-mode algorithm schedule for one full ALS sweep.
+
+    ``split`` is set only for dimension-tree plans (the half boundary);
+    ``normalize`` is carried here because it is part of the sweep recipe the
+    executors share.  ``describe()`` is the JSON-ready prediction surface
+    benchmarks report against measurements.
+    """
+
+    problem: Problem
+    strategy: str
+    modes: tuple[ModePlan, ...]
+    split: int | None = None
+    normalize: bool = True
+
+    @property
+    def kind(self) -> str:
+        return "dimtree" if self.split is not None else "permode"
+
+    def total_cost(self) -> dict:
+        return {
+            "flops": sum(m.cost.flops for m in self.modes),
+            "bytes": sum(m.cost.bytes for m in self.modes),
+            "collective_bytes": sum(m.cost.collective_bytes for m in self.modes),
+            "predicted_s": sum(m.cost.predicted_s for m in self.modes),
+        }
+
+    def describe(self) -> dict:
+        """Predicted flops / HBM bytes / collective bytes per mode + totals."""
+        return {
+            "shape": list(self.problem.shape),
+            "rank": self.problem.rank,
+            "dtype": self.problem.dtype_str,
+            "strategy": self.strategy,
+            "kind": self.kind,
+            "split": self.split,
+            "sharded": self.problem.sharded,
+            "mode_axes": {str(k): v for k, v in self.problem.mode_axes.items()},
+            "local_shape": list(self.problem.local_shape),
+            "modes": [m.as_dict() for m in self.modes],
+            "totals": self.total_cost(),
+        }
+
+
+def _auto_mode(problem: Problem, n: int) -> ModePlan:
+    """Cost-model dispatch for one mode (reproduces paper Sec. 5.3.3)."""
+    if problem.external_mode(n):
+        # 2-step degenerates to 1-step here; only 1-step is a real candidate.
+        return ModePlan(n, "1step", mode_cost(problem, n, "1step"))
+    right = mode_cost(problem, n, "2step-right")
+    left = mode_cost(problem, n, "2step-left")
+    # strict < keeps the Alg. 4 tie convention (L == R resolves right-first)
+    two_alg, two = ("2step-left", left) if left.predicted_s < right.predicted_s else ("2step-right", right)
+    one = mode_cost(problem, n, "1step")
+    if one.predicted_s < _NEAR_TIE * two.predicted_s:
+        return ModePlan(n, "1step", one)
+    return ModePlan(n, two_alg, two)
+
+
+def plan_sweep(
+    problem: Problem,
+    strategy: str = "auto",
+    *,
+    split: int | None = None,
+    normalize: bool = True,
+) -> SweepPlan:
+    """Plan one full ALS sweep for ``problem``.
+
+    ``strategy='auto'`` selects per-mode among 1-step / 2-step-left /
+    2-step-right by predicted cost; ``'dimtree'`` plans the two-partial
+    dimension-tree schedule (``split`` defaults to the balanced half);
+    any other value forces that algorithm on every mode (the old
+    ``method=`` passthrough, kept for the back-compat wrappers).
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r} (choose from {STRATEGIES})")
+    if split is not None and strategy != "dimtree":
+        raise ValueError("split is only meaningful for strategy='dimtree'")
+
+    n_modes = problem.ndim
+    if strategy == "dimtree":
+        m = split if split is not None else (n_modes + 1) // 2
+        if not 0 < m < n_modes:
+            raise ValueError(f"split {m} out of range for order-{n_modes} tensor")
+        modes = tuple(
+            ModePlan(n, "dimtree", dimtree_mode_cost(problem, n, m))
+            for n in range(n_modes)
+        )
+        return SweepPlan(problem, strategy, modes, split=m, normalize=normalize)
+
+    if strategy == "auto":
+        modes = tuple(_auto_mode(problem, n) for n in range(n_modes))
+    else:
+        assert strategy in ALGORITHMS
+        modes = tuple(
+            ModePlan(n, strategy, mode_cost(problem, n, strategy))
+            for n in range(n_modes)
+        )
+    return SweepPlan(problem, strategy, modes, normalize=normalize)

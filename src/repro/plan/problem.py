@@ -1,0 +1,148 @@
+"""``Problem``: the immutable descriptor every planner/executor call keys on.
+
+A Problem captures everything the analytic cost model needs -- tensor shape,
+CP rank, element dtype, and (for sharded problems) the mode -> mesh-axis
+mapping plus the mesh axis sizes.  It deliberately does NOT hold the tensor
+or the mesh object itself: planning is pure arithmetic on static metadata,
+so plans can be built for hardware that isn't attached (capacity planning,
+dry-runs) and inside ``jit`` traces (shapes are static under tracing).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Mapping
+
+import numpy as np
+
+from repro.analysis.roofline import dtype_itemsize
+
+
+@dataclass(frozen=True)
+class Problem:
+    """Descriptor of one CP-ALS / MTTKRP problem.
+
+    ``mode_axes`` maps tensor modes to mesh axis names (the block
+    distribution of ``repro.dist``); ``axis_sizes`` maps each mesh axis name
+    to its device count.  Both empty means a single-device problem.
+    """
+
+    shape: tuple[int, ...]
+    rank: int
+    dtype: Any = "float32"
+    mode_axes: Mapping[int, str] = field(default_factory=dict)
+    axis_sizes: Mapping[str, int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape", tuple(int(d) for d in self.shape))
+        object.__setattr__(self, "rank", int(self.rank))
+        object.__setattr__(
+            self, "mode_axes", {int(m): str(a) for m, a in dict(self.mode_axes).items()}
+        )
+        object.__setattr__(
+            self, "axis_sizes", {str(a): int(s) for a, s in dict(self.axis_sizes).items()}
+        )
+        self._validate()
+
+    def __hash__(self):
+        # the generated frozen-dataclass hash would include the dict fields
+        # (unhashable); hash the canonical projections instead so plans can
+        # be cached/memoized keyed on the Problem
+        return hash(
+            (
+                self.shape,
+                self.rank,
+                self.dtype_str,
+                tuple(sorted(self.mode_axes.items())),
+                tuple(sorted(self.axis_sizes.items())),
+            )
+        )
+
+    def _validate(self) -> None:
+        if self.rank < 1:
+            raise ValueError(f"rank must be >= 1, got {self.rank}")
+        self.itemsize  # fail at construction on an unresolvable dtype
+        seen: dict[str, int] = {}
+        for mode, axis in self.mode_axes.items():
+            if not 0 <= mode < self.ndim:
+                raise ValueError(
+                    f"mode {mode} out of range for order-{self.ndim} tensor"
+                )
+            if axis not in self.axis_sizes:
+                raise ValueError(
+                    f"no size known for mesh axis {axis!r} "
+                    f"(axes: {sorted(self.axis_sizes)})"
+                )
+            if axis in seen:
+                raise ValueError(
+                    f"mesh axis {axis!r} mapped to modes {seen[axis]} and {mode}"
+                )
+            seen[axis] = mode
+            if self.shape[mode] % self.axis_sizes[axis]:
+                raise ValueError(
+                    f"mode {mode} dim {self.shape[mode]} not divisible by "
+                    f"axis {axis!r} size {self.axis_sizes[axis]}"
+                )
+
+    @classmethod
+    def from_tensor(cls, x, rank: int, mode_axes=None, mesh=None) -> "Problem":
+        """Build a Problem from an array (or tracer / ShapeDtypeStruct).
+
+        Pass ``mode_axes`` + ``mesh`` for a block-distributed problem; the
+        mesh contributes only its axis sizes (the object stays with the
+        executor).
+        """
+        return cls(
+            shape=tuple(x.shape),
+            rank=rank,
+            dtype=x.dtype,
+            mode_axes=mode_axes or {},
+            axis_sizes=dict(mesh.shape) if mesh is not None else {},
+        )
+
+    # ------------------------------------------------------------- derived
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def itemsize(self) -> float:
+        # dtype_itemsize also accepts HLO-style ('bf16') and numpy-name
+        # ('bfloat16') strings, matching analysis.roofline.mttkrp_roofline
+        return float(dtype_itemsize(self.dtype))
+
+    @property
+    def dtype_str(self) -> str:
+        try:
+            return str(np.dtype(self.dtype))
+        except TypeError:
+            return str(self.dtype)  # HLO-style names np.dtype can't resolve
+
+    @property
+    def sharded(self) -> bool:
+        return bool(self.mode_axes)
+
+    def mode_shards(self, n: int) -> int:
+        """Device count along the axis of mode ``n`` (1 when unmapped)."""
+        axis = self.mode_axes.get(n)
+        return self.axis_sizes[axis] if axis is not None else 1
+
+    @property
+    def local_shape(self) -> tuple[int, ...]:
+        """Per-device block dims under the ``mode_axes`` distribution."""
+        return tuple(d // self.mode_shards(m) for m, d in enumerate(self.shape))
+
+    def reduce_participants(self, keep_modes: Iterable[int]) -> int:
+        """Devices participating in the psum that completes a contraction
+        keeping only ``keep_modes`` -- the product of the axis sizes of every
+        mapped mode that is contracted away."""
+        keep = set(keep_modes)
+        p = 1
+        for mode in self.mode_axes:
+            if mode not in keep:
+                p *= self.mode_shards(mode)
+        return p
+
+    def external_mode(self, n: int) -> bool:
+        """External modes (first/last) are where 2-step degenerates to 1-step."""
+        return n in (0, self.ndim - 1)

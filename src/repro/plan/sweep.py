@@ -1,0 +1,203 @@
+"""THE ALS sweep: the one copy of the update algebra, plan- and executor-driven.
+
+Per mode-n update (alternating least squares, paper Sec. 2.2):
+    M   = MTTKRP(X, {U_k}, n)               (bottleneck; executor + plan decide how)
+    H   = *_{k != n} (U_k^T U_k)            (Hadamard of Gram matrices)
+    U_n = M @ pinv(H);  column-normalize -> lambda
+with the fit tracked through the factored identity reusing the last MTTKRP.
+
+This module replaces the four hand-written sweeps (``core.cpals.als_sweep``,
+``core.dimtree.dimtree_sweep``, ``dist.dist_mttkrp.dist_als_sweep`` and
+``dist_dimtree_sweep``), which survive as thin wrappers building the
+corresponding plan + executor.  The Gram/Hadamard/pinv/normalize/fit algebra
+exists ONLY here.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cpals import (
+    CPState,
+    fit_from_last_mttkrp,
+    grams,
+    hadamard_except,
+    normalize_columns,
+)
+from repro.core.dimtree import mttkrp_from_partial
+from repro.core.tensor_ops import random_factors, tensor_norm
+
+from .executor import Executor, LocalExecutor, ShardedExecutor
+from .planner import SweepPlan, plan_sweep
+from .problem import Problem
+
+Array = jax.Array
+
+
+@dataclass
+class SweepState:
+    """Pytree carried across sweeps: the tensor rides along unchanged so the
+    jitted sweep is a pure ``state -> state`` function."""
+
+    x: Array
+    factors: list[Array]
+    weights: Array
+    norm_x: Array
+    it: Array
+    fit: Array | float = 0.0
+
+
+jax.tree_util.register_pytree_node(
+    SweepState,
+    lambda s: ((s.x, s.factors, s.weights, s.norm_x, s.it, s.fit), None),
+    lambda _, c: SweepState(*c),
+)
+
+
+def als_sweep(
+    problem: Problem, plan: SweepPlan, executor: Executor, state: SweepState
+) -> SweepState:
+    """One full ALS sweep over all modes, following ``plan`` on ``executor``.
+
+    Per-mode plans run one planned MTTKRP per mode; dimension-tree plans run
+    the two half-partials (left half from the *old* right factors, right half
+    from the *fresh* left factors -- the schedule that reproduces exact
+    standard-ALS iterates while reading X twice instead of N times).
+    """
+    x = state.x
+    factors = list(state.factors)
+    weights = state.weights
+    it = state.it
+    n_modes = len(factors)
+    gs = grams(factors)
+    m_last = None
+
+    def update(n: int, m: Array, weights: Array) -> Array:
+        h = hadamard_except(gs, n)
+        # Solve U H = M  via pinv on the C x C Gram-Hadamard (paper Sec. 2.2).
+        u = m @ jnp.linalg.pinv(h)
+        if plan.normalize:
+            u, norms = normalize_columns(u, it)
+            weights = norms
+        factors[n] = u
+        gs[n] = u.T @ u
+        return weights
+
+    if plan.kind == "dimtree":
+        split = plan.split
+        # left half: T_L depends only on the (old) right factors
+        t_left = executor.partial_right(x, factors[split:])
+        for n in range(split):
+            sib = [factors[k] for k in range(split) if k != n]
+            m_last = mttkrp_from_partial(t_left, sib, n)
+            weights = update(n, m_last, weights)
+        # right half: T_R from the freshly updated left factors
+        t_right = executor.partial_left(x, factors[:split])
+        for n in range(split, n_modes):
+            sib = [factors[k] for k in range(split, n_modes) if k != n]
+            m_last = mttkrp_from_partial(t_right, sib, n - split)
+            weights = update(n, m_last, weights)
+    else:
+        for mp in plan.modes:
+            m_last = executor.mttkrp(x, factors, mp)
+            weights = update(mp.mode, m_last, weights)
+
+    # Fit from the last MTTKRP (standard trick; avoids forming the model).
+    fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], state.norm_x)
+    return SweepState(
+        x=x, factors=factors, weights=weights, norm_x=state.norm_x, it=it, fit=fit
+    )
+
+
+def legacy_sweep(
+    x: Array,
+    factors: Sequence[Array],
+    weights: Array,
+    norm_x: Array,
+    it,
+    *,
+    strategy: str,
+    normalize: bool = True,
+    split: int | None = None,
+    mode_axes=None,
+    mesh=None,
+) -> tuple[list[Array], Array, Array]:
+    """The one bridge behind the pre-redesign sweep signatures.
+
+    Builds the Problem/plan/executor for an old-style ``(x, factors,
+    weights, norm_x, it)`` call -- sharded when ``mesh`` is given -- runs
+    the engine, and returns the historical ``(factors, weights, fit)``
+    triple.  All four back-compat wrappers delegate here so the legacy
+    plumbing exists once.
+    """
+    problem = Problem.from_tensor(
+        x, factors[0].shape[1], mode_axes=mode_axes, mesh=mesh
+    )
+    plan = plan_sweep(problem, strategy=strategy, split=split, normalize=normalize)
+    executor = ShardedExecutor(mesh, mode_axes) if mesh is not None else LocalExecutor()
+    state = SweepState(
+        x=x, factors=list(factors), weights=weights, norm_x=norm_x, it=jnp.asarray(it)
+    )
+    out = als_sweep(problem, plan, executor, state)
+    return out.factors, out.weights, out.fit
+
+
+def cp_als(
+    x: Array,
+    plan: SweepPlan,
+    *,
+    executor: Executor | None = None,
+    n_iters: int = 50,
+    tol: float = 1.0e-5,
+    seed: int = 0,
+    track_fit: bool = True,
+    init_factors: list[Array] | None = None,
+    callback: Callable[[int, float, float], None] | None = None,
+) -> CPState:
+    """THE CP-ALS driver: init, jitted sweep loop, convergence stop.
+
+    Replaces both ``core.cpals.cp_als`` and ``dist.dist_mttkrp.dist_cp_als``
+    (which wrap it).  ``executor`` defaults to :class:`LocalExecutor`; pass a
+    :class:`ShardedExecutor` for block-distributed problems -- ``prepare``
+    places the tensor/factors before the loop.  Per-iteration wall times go
+    through ``callback(it, fit, seconds)`` so benchmarks can record them.
+    """
+    problem = plan.problem
+    executor = executor if executor is not None else LocalExecutor()
+    key = jax.random.PRNGKey(seed)
+    factors = init_factors or random_factors(key, x.shape, problem.rank, x.dtype)
+    x, factors = executor.prepare(problem, x, factors)
+    weights = jnp.ones((problem.rank,), x.dtype)
+    norm_x = tensor_norm(x).astype(x.dtype)
+
+    # jit only the (factors, weights, fit) outputs: returning state.x from the
+    # compiled fn would make XLA emit a full-tensor copy every iteration.
+    def _sweep(state: SweepState):
+        out = als_sweep(problem, plan, executor, state)
+        return out.factors, out.weights, out.fit
+
+    sweep = jax.jit(_sweep)
+
+    fit_prev = -math.inf
+    fit = jnp.asarray(0.0, x.dtype)
+    it = 0
+    for it in range(n_iters):
+        t0 = time.perf_counter()
+        state = SweepState(
+            x=x, factors=factors, weights=weights, norm_x=norm_x, it=jnp.asarray(it)
+        )
+        factors, weights, fit = sweep(state)
+        fit = jax.block_until_ready(fit)
+        dt = time.perf_counter() - t0
+        if callback is not None:
+            callback(it, float(fit), dt)
+        if track_fit and abs(float(fit) - float(fit_prev)) < tol:
+            break
+        fit_prev = float(fit)
+    return CPState(factors=factors, weights=weights, fit=fit, it=it + 1)
