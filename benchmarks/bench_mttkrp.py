@@ -13,6 +13,13 @@ predicted-vs-measured, and ``--json`` emits the full ``SweepPlan.describe()``
 next to the measurements.  ``--smoke`` shrinks to tiny shapes with one rep
 (the CI artifact path).
 
+The JSON additionally carries an ``overlap`` section: per-mode
+predicted-vs-measured efficiency of the communication-hiding executors on a
+small sharded problem (sharded vs overlapping psum pipeline, plus the
+planner's executor pick).  Measurements need >1 device -- run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` as CI does;
+predicted rows are emitted either way (planning is pure arithmetic).
+
     PYTHONPATH=src python -m benchmarks.bench_mttkrp --smoke --json out.json
 """
 
@@ -40,6 +47,85 @@ C = 25
 DEFAULT_TOTAL = 16e6  # ~16M entries: single-core scale
 FULL_TOTAL = 750e6  # the paper's scale (--full)
 SMOKE_TOTAL = 4096  # tiny CI-artifact scale (--smoke)
+
+# sharded problem of the overlap section: mode 0 rides the single mesh axis,
+# so every other mode's MTTKRP psums over it (the hidable collective)
+OVERLAP_SHAPE = (8, 32, 8)
+OVERLAP_RANK = 8
+
+
+def overlap_section(reps: int) -> dict:
+    """Predicted-vs-measured overlap efficiency of the sharded executors.
+
+    Predictions come straight from the bounded-overlap cost model (computed
+    even without devices -- capacity-planning style, assuming 8 shards when
+    no multi-device runtime is attached).  Measurements time the plain vs
+    overlapped dist_mttkrp per mode when the runtime has >1 device.
+    """
+    from repro.dist.dist_mttkrp import (
+        dist_mttkrp,
+        dist_mttkrp_overlapped,
+        shard_problem,
+    )
+
+    n_dev = jax.device_count()
+    shards = n_dev if n_dev > 1 and OVERLAP_SHAPE[0] % n_dev == 0 else 8
+    mode_axes = {0: "shard"}
+    problem = Problem(
+        shape=OVERLAP_SHAPE, rank=OVERLAP_RANK,
+        mode_axes=mode_axes, axis_sizes={"shard": shards},
+    )
+    plans = {
+        ex: plan_sweep(problem, executor=ex)
+        for ex in ("sharded", "overlapping", "compressed")
+    }
+    rows = []
+    for n in range(len(OVERLAP_SHAPE)):
+        sh, ov = plans["sharded"].modes[n], plans["overlapping"].modes[n]
+        pred_sh, pred_ov = sh.cost.predicted_s, ov.cost.predicted_s
+        rows.append({
+            "mode": n,
+            "algorithm": ov.algorithm,
+            # model internals: fraction of the hidable (smaller) term hidden
+            "predicted_overlap_efficiency": ov.cost.predicted_overlap_efficiency,
+            # the directly measurable quantity the saving rows compare against
+            "predicted_saving_vs_sharded": (pred_sh - pred_ov) / pred_sh,
+            "predicted_s_sharded": pred_sh,
+            "predicted_s_overlapping": pred_ov,
+            "predicted_s_compressed": plans["compressed"].modes[n].cost.predicted_s,
+            "measured_s_sharded": None,
+            "measured_s_overlapping": None,
+            "measured_saving_vs_sharded": None,
+        })
+    measured = n_dev > 1 and OVERLAP_SHAPE[0] % n_dev == 0
+    if measured:
+        mesh = jax.make_mesh((n_dev,), ("shard",))
+        x = random_tensor(jax.random.PRNGKey(2), OVERLAP_SHAPE)
+        factors = random_factors(jax.random.PRNGKey(3), OVERLAP_SHAPE, OVERLAP_RANK)
+        xs, fs = shard_problem(x, factors, mode_axes, mesh)
+        for r in rows:
+            n = r["mode"]
+            t_sh = time_fn(
+                jax.jit(lambda t, fl, m=n: dist_mttkrp(t, fl, m, mode_axes, mesh)),
+                xs, fs, reps=reps,
+            )["median_s"]
+            t_ov = time_fn(
+                jax.jit(lambda t, fl, m=n: dist_mttkrp_overlapped(t, fl, m, mode_axes, mesh)),
+                xs, fs, reps=reps,
+            )["median_s"]
+            r["measured_s_sharded"] = t_sh
+            r["measured_s_overlapping"] = t_ov
+            # realized saving as a fraction of the no-overlap time -- the
+            # same quantity predicted_saving_vs_sharded models
+            r["measured_saving_vs_sharded"] = (t_sh - t_ov) / t_sh if t_sh > 0 else None
+    return {
+        "shape": list(OVERLAP_SHAPE),
+        "rank": OVERLAP_RANK,
+        "shards": shards,
+        "measured": measured,
+        "selected_executor": plan_sweep(problem).executor,
+        "modes": rows,
+    }
 
 
 def _dims(n: int, total: float) -> tuple[int, ...]:
@@ -104,7 +190,19 @@ def collect(full: bool = False, smoke: bool = False) -> dict:
                 )["median_s"]
             rec(f"mttkrp_N{n_modes}_mode{mode}_planned", t_plan,
                 f"alg={mp.algorithm};predicted_s={mp.cost.predicted_s:.3e}")
-    return {"smoke": smoke, "full": full, "rank": C, "plans": plans, "results": results}
+    overlap = overlap_section(reps)
+    for r in overlap["modes"]:
+        if r["measured_saving_vs_sharded"] is not None:
+            rec(
+                f"dist_mttkrp_overlap_mode{r['mode']}",
+                r["measured_s_overlapping"],
+                f"measured_saving={r['measured_saving_vs_sharded']:.2f};"
+                f"predicted_saving={r['predicted_saving_vs_sharded']:.2f}",
+            )
+    return {
+        "smoke": smoke, "full": full, "rank": C,
+        "plans": plans, "results": results, "overlap": overlap,
+    }
 
 
 def run(full: bool = False, smoke: bool = False) -> list[str]:

@@ -27,12 +27,16 @@ def main():
     shape, rank = (64, 48, 40), 6
     x = cp_full(None, random_factors(key, shape, rank))
 
-    # plan the sharded sweep: per-mode algorithm + predicted psum volume
+    # plan the sharded sweep: per-mode algorithm + predicted psum volume,
+    # plus the cost-argmin executor pick (overlapping hides the psums behind
+    # the chunked local GEMMs; see docs/distributed.md)
     plan = plan_sweep(Problem.from_tensor(x, rank, mode_axes={0: "data", 1: "model"},
                                           mesh=mesh))
+    print(f"  planner picked executor: {plan.executor}")
     for mp in plan.modes:
         print(f"  mode {mp.mode}: {mp.algorithm:12s} "
-              f"psum {mp.cost.collective_bytes/1e3:8.1f} kB/device")
+              f"psum {mp.cost.collective_bytes/1e3:8.1f} kB/device "
+              f"overlap_eff {mp.cost.predicted_overlap_efficiency:.2f}")
 
     t0 = time.perf_counter()
     factors, weights, fit = dist_cp_als(

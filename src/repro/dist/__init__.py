@@ -3,7 +3,13 @@
 ``dist_mttkrp``: block-distributed MTTKRP/CP-ALS over a device mesh --
 the device-for-thread port of the paper's parallelization, with the
 communication structure of Ballard/Knight/Rouse (comm lower bounds for
-MTTKRP) and Ballard/Hayashi/Kannan (parallel dense CP).
+MTTKRP) and Ballard/Hayashi/Kannan (parallel dense CP).  The lower bounds
+say the per-mode reduction volume cannot shrink, so the communication-
+hiding variants attack latency instead: ``dist_mttkrp_overlapped`` chunks
+the local kernel so each slab's psum runs under the next slab's GEMM
+(exact), and ``dist_mttkrp_compressed`` + ``init_mttkrp_error_state``
+swap the fp32 psum for the int8 error-feedback collective (approximate,
+convergent).
 
 ``collectives``: bandwidth-reducing collectives (int8 quantized
 all-reduce with error feedback) and the data-parallel train step built
@@ -16,6 +22,9 @@ from .dist_mttkrp import (
     dist_cp_als,
     dist_dimtree_sweep,
     dist_mttkrp,
+    dist_mttkrp_compressed,
+    dist_mttkrp_overlapped,
+    init_mttkrp_error_state,
     shard_problem,
 )
 
@@ -27,5 +36,8 @@ __all__ = [
     "dist_cp_als",
     "dist_dimtree_sweep",
     "dist_mttkrp",
+    "dist_mttkrp_compressed",
+    "dist_mttkrp_overlapped",
+    "init_mttkrp_error_state",
     "shard_problem",
 ]

@@ -9,6 +9,12 @@ residual keeps the *accumulated* compression error bounded by one
 quantization step instead of growing with the step count, which is what
 lets a compressed data-parallel trainer track the exact run.
 
+Two call sites consume the compressor: the data-parallel gradient
+exchange below, and the compressed factor all-reduce of
+``dist_mttkrp.dist_mttkrp_compressed`` (the
+``repro.plan.CompressedShardedExecutor`` path, which threads the
+residuals through the ALS sweep as carry state).
+
 ``make_compressed_dp_step`` builds the data-parallel train step on top:
 per-device grads inside ``shard_map``, compressed (or exact) mean over
 the data axes, then the usual AdamW update on the synchronized grads.
@@ -41,7 +47,9 @@ def compressed_psum(
 ) -> tuple[Array, Array]:
     """int8-quantized ``psum`` of ``x`` over ``axis_name`` with error feedback.
 
-    Must be called inside ``shard_map``.  ``err`` is this device's carried
+    Must be called inside ``shard_map``.  ``axis_name`` may be a single mesh
+    axis or a tuple of axes (the gather then spans their product of devices,
+    like ``psum`` over multiple axes).  ``err`` is this device's carried
     residual from the previous round (zeros initially, same shape as ``x``).
     Returns ``(sum, new_err)``: the all-reduced dequantized sum (every
     participant gets the same value) and the new local residual, bounded by

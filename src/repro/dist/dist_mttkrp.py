@@ -34,14 +34,23 @@ from __future__ import annotations
 from typing import Mapping, Sequence
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core.dimtree import partial_mttkrp_left, partial_mttkrp_right
 from repro.core.mttkrp import Method, mttkrp
 
+from .collectives import compressed_psum
+
 Array = jax.Array
 ModeAxes = Mapping[int, str]
+
+# default chunk count of the overlapped psum pipeline; the canonical knob
+# the planner uses is repro.plan.cost.DEFAULT_OVERLAP_CHUNKS (same value --
+# kept as a plain literal here so repro.dist never imports repro.plan at
+# module level).
+DEFAULT_OVERLAP_CHUNKS = 4
 
 
 def _validate(shape: Sequence[int], mode_axes: ModeAxes, mesh: Mesh) -> None:
@@ -128,6 +137,141 @@ def dist_mttkrp(
         check_vma=False,
     )
     return fn(x, *factors)
+
+
+def _chunk_bounds(extent: int, n_chunks: int) -> list[int]:
+    """Split ``[0, extent)`` into ``<= n_chunks`` near-equal static slices."""
+    k = max(1, min(int(n_chunks), int(extent)))
+    sizes = [extent // k + (1 if i < extent % k else 0) for i in range(k)]
+    bounds = [0]
+    for s in sizes:
+        bounds.append(bounds[-1] + s)
+    return bounds
+
+
+def dist_mttkrp_overlapped(
+    x: Array,
+    factors: Sequence[Array],
+    n: int,
+    mode_axes: ModeAxes,
+    mesh: Mesh,
+    method: Method = "auto",
+    n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
+) -> Array:
+    """Mode-``n`` MTTKRP with the completing psum hidden behind the GEMMs.
+
+    Identical placement and *bitwise-identical per-element reduction* to
+    :func:`dist_mttkrp`, but the local block is split into ``n_chunks``
+    row slabs along mode ``n`` and each slab's psum is issued as soon as
+    its local MTTKRP finishes -- a double-buffered pipeline: the collective
+    of chunk ``k`` has no data dependency on the GEMM of chunk ``k+1``, so
+    XLA's latency-hiding scheduler runs them concurrently and only the
+    first GEMM and the last psum stay exposed (the ``1/n_chunks``
+    serialization fraction of the cost model).  Chunk psums touch disjoint
+    output rows, so concatenating them equals the unchunked psum exactly.
+
+    Falls back to :func:`dist_mttkrp` when the mapping requires no
+    collective (nothing to hide) or ``n_chunks <= 1``.
+    """
+    _validate(x.shape, mode_axes, mesh)
+    reduce_axes = _reduce_axes(mode_axes, keep_modes=(n,))
+    local_in = x.shape[n] // (mesh.shape[mode_axes[n]] if n in mode_axes else 1)
+    if not reduce_axes or n_chunks <= 1 or local_in <= 1:
+        return dist_mttkrp(x, factors, n, mode_axes, mesh, method=method)
+    bounds = _chunk_bounds(local_in, n_chunks)
+
+    def local_fn(x_blk, *f_blks):
+        # issue order GEMM_0, (GEMM_1, psum_0), (GEMM_2, psum_1), ...: each
+        # psum depends only on its own slab's GEMM, never on the next one.
+        partials = [
+            mttkrp(
+                jax.lax.slice_in_dim(x_blk, i0, i1, axis=n),
+                list(f_blks),
+                n,
+                method=method,
+            )
+            for i0, i1 in zip(bounds[:-1], bounds[1:])
+        ]
+        reduced = [jax.lax.psum(p, reduce_axes) for p in partials]
+        return jnp.concatenate(reduced, axis=0)
+
+    fn = compat.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(_x_spec(x.ndim, mode_axes), *_factor_specs(x.ndim, mode_axes)),
+        out_specs=P(mode_axes.get(n), None),
+        check_vma=False,
+    )
+    return fn(x, *factors)
+
+
+def init_mttkrp_error_state(
+    shape: Sequence[int], rank: int, mode_axes: ModeAxes, mesh: Mesh
+) -> dict[int, Array]:
+    """Zero error-feedback residuals for the compressed factor all-reduce.
+
+    One fp32 array per mode whose MTTKRP needs a psum (mapped modes other
+    than the mode itself exist).  Every participating device carries its own
+    residual: the global array for mode ``n`` has one leading axis per
+    reduced mesh axis (sharded over that axis) followed by the ``(I_n, C)``
+    output dims sharded like the factor the MTTKRP updates.  Thread the dict
+    through :func:`dist_mttkrp_compressed` calls; it is ordinary sweep state
+    (checkpointable, donate-able) exactly like the residuals of
+    ``make_compressed_dp_step``.
+    """
+    _validate(shape, mode_axes, mesh)
+    errs: dict[int, Array] = {}
+    for n in range(len(shape)):
+        reduce_axes = _reduce_axes(mode_axes, keep_modes=(n,))
+        if not reduce_axes:
+            continue
+        lead = tuple(mesh.shape[a] for a in reduce_axes)
+        e = jnp.zeros(lead + (shape[n], rank), jnp.float32)
+        spec = P(*reduce_axes, mode_axes.get(n), None)
+        errs[n] = jax.device_put(e, NamedSharding(mesh, spec))
+    return errs
+
+
+def dist_mttkrp_compressed(
+    x: Array,
+    factors: Sequence[Array],
+    n: int,
+    mode_axes: ModeAxes,
+    mesh: Mesh,
+    err: Array,
+    method: Method = "auto",
+) -> tuple[Array, Array]:
+    """Mode-``n`` MTTKRP completed by the int8 error-feedback collective.
+
+    Same local kernel and placement as :func:`dist_mttkrp`, but the
+    completing fp32 psum is replaced by
+    :func:`repro.dist.collectives.compressed_psum` over the same mesh axes:
+    each device quantizes ``partial + err`` to int8 with a private scale,
+    all-gathers the payloads, and dequant-sums locally.  ``err`` is this
+    mode's entry of :func:`init_mttkrp_error_state`; returns ``(result,
+    new_err)``.  The carried residual keeps the accumulated quantization
+    error bounded by one int8 step, which is what lets compressed CP-ALS
+    track the exact fit across sweeps.
+    """
+    _validate(x.shape, mode_axes, mesh)
+    reduce_axes = _reduce_axes(mode_axes, keep_modes=(n,))
+    if not reduce_axes:
+        return dist_mttkrp(x, factors, n, mode_axes, mesh, method=method), err
+    err_spec = P(*reduce_axes, mode_axes.get(n), None)
+
+    def local_fn(x_blk, err_blk, *f_blks):
+        m = mttkrp(x_blk, list(f_blks), n, method=method)
+        total, new_e = compressed_psum(m, reduce_axes, err_blk.reshape(m.shape))
+        return total, new_e.reshape(err_blk.shape)
+
+    fn = compat.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(_x_spec(x.ndim, mode_axes), err_spec, *_factor_specs(x.ndim, mode_axes)),
+        out_specs=(P(mode_axes.get(n), None), err_spec),
+        check_vma=False,
+    )
+    return fn(x, err, *factors)
 
 
 # --------------------------------------------------------------------------
@@ -252,6 +396,7 @@ def dist_cp_als(
     normalize: bool = True,
     dimtree: bool = False,
     init_factors: list[Array] | None = None,
+    executor: str = "sharded",
 ) -> tuple[list[Array], Array, Array]:
     """Sharded CP-ALS driver; same init/stop logic as core ``cp_als``.
 
@@ -259,19 +404,32 @@ def dist_cp_als(
     ``mode_axes``.  ``dimtree=True`` swaps in the distributed
     dimension-tree sweep (identical iterates, 2 tensor reads per sweep).
 
-    Back-compat wrapper over the single :func:`repro.plan.cp_als` driver
-    with a :class:`repro.plan.ShardedExecutor`.
+    ``executor`` picks the communication strategy of the factor all-reduce:
+    ``"sharded"`` (the frozen default -- plain psum), ``"overlapping"``
+    (chunked psum hidden behind the local GEMMs; exact),
+    ``"compressed"`` (int8 error-feedback all-gather; approximate, with the
+    per-mode residuals threaded through the sweep), or ``"auto"`` to let
+    :func:`repro.plan.select_executor` cost-argmin among them.
+
+    Back-compat wrapper over the single :func:`repro.plan.cp_als` driver.
     """
     from repro import plan as planlib
 
     problem = planlib.Problem.from_tensor(x, rank, mode_axes=mode_axes, mesh=mesh)
+    # the executor kind propagates verbatim: plan_sweep resolves "auto"
+    # (dimtree auto-selects the exact sharded executor) and raises on an
+    # explicit overlapping/compressed request for a dimtree plan rather
+    # than silently running the exact path
     sweep_plan = planlib.plan_sweep(
-        problem, strategy="dimtree" if dimtree else method, normalize=normalize
+        problem,
+        strategy="dimtree" if dimtree else method,
+        normalize=normalize,
+        executor=executor,
     )
     st = planlib.cp_als(
         x,
         sweep_plan,
-        executor=planlib.ShardedExecutor(mesh, mode_axes),
+        executor=planlib.make_executor(sweep_plan.executor, mesh, mode_axes),
         n_iters=n_iters,
         tol=tol,
         seed=seed,

@@ -6,41 +6,72 @@ The solver API redesigned around three pieces:
   mode->mesh-axis mapping) every planner call keys on.
 * :func:`plan_sweep` -- picks each mode's MTTKRP algorithm (1-step /
   2-step-left / 2-step-right / dimension-tree / fused) from the analytic
-  flop/byte/collective cost model; :meth:`SweepPlan.describe` exposes the
-  predictions so benchmarks report predicted-vs-measured.
+  flop/byte/collective cost model, and -- via :func:`select_executor` --
+  the executor kind (local / sharded / overlapping / compressed) under the
+  bounded-overlap model; :meth:`SweepPlan.describe` exposes the predictions
+  so benchmarks report predicted-vs-measured.
 * :class:`Executor` -- where contractions run: :class:`LocalExecutor`
-  (single device) or :class:`ShardedExecutor` (``shard_map`` + minimal psum
-  over a device mesh).
+  (single device), :class:`ShardedExecutor` (``shard_map`` + minimal psum
+  over a device mesh), :class:`OverlappingExecutor` (chunked psums hidden
+  behind the local GEMMs; exact), or :class:`CompressedShardedExecutor`
+  (int8 error-feedback factor all-reduce; approximate).
+  :func:`make_executor` builds the instance a ``SweepPlan.executor`` kind
+  names.
 
 Exactly one :func:`als_sweep` engine and one :func:`cp_als` driver consume
 them; the pre-redesign entry points (``core.cpals.cp_als``,
 ``core.dimtree.dimtree_sweep``, ``dist.dist_mttkrp.dist_cp_als`` /
-``dist_dimtree_sweep``) remain as thin wrappers that build the
+``dist_dimtree_sweep``) remain as frozen thin wrappers that build the
 corresponding plan.
 """
 
-from .cost import ALGORITHMS, ModeCost, dimtree_mode_cost, mode_cost, ring_allreduce_bytes
-from .executor import Executor, LocalExecutor, ShardedExecutor
-from .planner import STRATEGIES, ModePlan, SweepPlan, plan_sweep
+from .cost import (
+    ALGORITHMS,
+    DEFAULT_OVERLAP_CHUNKS,
+    EXECUTORS,
+    ModeCost,
+    compressed_allgather_bytes,
+    dimtree_mode_cost,
+    executor_mode_cost,
+    mode_cost,
+    ring_allreduce_bytes,
+)
+from .executor import (
+    CompressedShardedExecutor,
+    Executor,
+    LocalExecutor,
+    OverlappingExecutor,
+    ShardedExecutor,
+    make_executor,
+)
+from .planner import STRATEGIES, ModePlan, SweepPlan, plan_sweep, select_executor
 from .problem import Problem
 from .sweep import SweepState, als_sweep, cp_als, legacy_sweep
 
 __all__ = [
     "ALGORITHMS",
+    "DEFAULT_OVERLAP_CHUNKS",
+    "EXECUTORS",
     "STRATEGIES",
+    "CompressedShardedExecutor",
     "Executor",
     "LocalExecutor",
     "ModeCost",
     "ModePlan",
+    "OverlappingExecutor",
     "Problem",
     "ShardedExecutor",
     "SweepPlan",
     "SweepState",
     "als_sweep",
+    "compressed_allgather_bytes",
     "cp_als",
     "dimtree_mode_cost",
+    "executor_mode_cost",
     "legacy_sweep",
+    "make_executor",
     "mode_cost",
     "plan_sweep",
     "ring_allreduce_bytes",
+    "select_executor",
 ]

@@ -8,17 +8,31 @@ tree) and -- for sharded problems -- the per-mode psum volume the
 contracted modes, per Ballard/Knight/Rouse's collective-volume accounting).
 
 Seconds are predicted against the roofline constants of
-``repro.analysis.roofline`` additively (``flops/PEAK + bytes/HBM +
-coll/ICI`` -- a no-overlap model; the async-collective ROADMAP item will
-turn the collective term into a ``max``).  Absolute numbers are
-hardware-nominal; the planner only ever compares costs of the same mode
-across algorithms, where the shared GEMM term cancels.
+``repro.analysis.roofline`` with a *bounded-overlap* model:
+
+    predicted_s = max(compute_s, collective_s)
+                + serial_fraction * min(compute_s, collective_s)
+
+where ``compute_s = flops/PEAK + bytes/HBM`` and ``collective_s =
+collective_bytes/ICI``.  ``serial_fraction`` is the per-executor fraction
+of the smaller term that cannot be hidden behind the larger one: 1.0 for
+the plain sharded executor (psum strictly after the local GEMM -- the model
+degenerates to the old additive sum), ``1/n_chunks`` for the overlapping
+executor (chunk ``k``'s psum runs under chunk ``k+1``'s GEMM; only the
+first GEMM and the last psum stay exposed).  :func:`executor_mode_cost`
+applies these per-executor adjustments -- including the compressed
+executor's int8 wire volume -- on top of the per-algorithm terms of
+:func:`mode_cost`.
+
+Absolute numbers are hardware-nominal; the planner only ever compares
+costs of the same mode across algorithms/executors, where shared terms
+cancel.
 """
 
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 from repro.core.mttkrp import mttkrp_flops
@@ -37,6 +51,21 @@ ALGORITHMS = (
     "baseline",
 )
 
+# Executor kinds the planner dispatches over (repro.plan.executor classes).
+EXECUTORS = ("local", "sharded", "overlapping", "compressed")
+
+# Default chunk count of the overlapping executor's double-buffered psum
+# pipeline: the serialization fraction is ~1/n_chunks, so 4 already hides
+# 75% of the hidable term while keeping per-chunk GEMMs large enough to
+# stay compute-efficient.
+DEFAULT_OVERLAP_CHUNKS = 4
+
+# compressed_psum payload: 1 int8 byte per element + one fp32 scale per
+# sender (so the wire ratio vs the uncompressed dtype depends on itemsize:
+# 1/4 for fp32, 1/2 for bf16, 1/8 for f64).
+_INT8_ITEMSIZE = 1.0
+_SCALE_BYTES = 4.0
+
 
 @dataclass(frozen=True)
 class ModeCost:
@@ -45,7 +74,9 @@ class ModeCost:
     ``gemm_flops`` / ``krp_flops`` / ``second_step_flops`` are the terms of
     ``mttkrp_flops`` (local block dims for sharded problems); ``bytes`` is
     total HBM traffic including intermediates; ``collective_bytes`` is the
-    per-device psum volume (0 on unsharded problems).
+    per-device wire volume (0 on unsharded problems).  ``serial_fraction``
+    is the executor's unhidable share of the smaller of compute/collective
+    time (1.0 = no overlap, the additive model).
     """
 
     gemm_flops: float
@@ -53,20 +84,41 @@ class ModeCost:
     second_step_flops: float
     bytes: float
     collective_bytes: float = 0.0
+    serial_fraction: float = 1.0
 
     @property
     def flops(self) -> float:
+        """Total floating-point operations across all three terms."""
         return self.gemm_flops + self.krp_flops + self.second_step_flops
 
     @property
+    def compute_s(self) -> float:
+        """Local roofline time: GEMM/KRP flops + HBM traffic, no collectives."""
+        return self.flops / PEAK_FLOPS + self.bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        """Wire time of the completing collective at nominal ICI bandwidth."""
+        return self.collective_bytes / ICI_BW
+
+    @property
     def predicted_s(self) -> float:
-        return (
-            self.flops / PEAK_FLOPS
-            + self.bytes / HBM_BW
-            + self.collective_bytes / ICI_BW
-        )
+        """Bounded-overlap roofline: ``max + serial_fraction * min`` of the
+        compute and collective terms (``serial_fraction=1`` recovers the
+        additive no-overlap model)."""
+        c, q = self.compute_s, self.collective_s
+        return max(c, q) + self.serial_fraction * min(c, q)
+
+    @property
+    def predicted_overlap_efficiency(self) -> float:
+        """Fraction of the hidable (smaller) term actually hidden:
+        ``1 - serial_fraction`` when there is a collective to hide, else 0."""
+        if self.collective_bytes <= 0.0:
+            return 0.0
+        return 1.0 - self.serial_fraction
 
     def as_dict(self) -> dict:
+        """JSON-ready projection of all terms plus the derived predictions."""
         return {
             "gemm_flops": self.gemm_flops,
             "krp_flops": self.krp_flops,
@@ -74,6 +126,10 @@ class ModeCost:
             "flops": self.flops,
             "bytes": self.bytes,
             "collective_bytes": self.collective_bytes,
+            "serial_fraction": self.serial_fraction,
+            "compute_s": self.compute_s,
+            "collective_s": self.collective_s,
+            "predicted_overlap_efficiency": self.predicted_overlap_efficiency,
             "predicted_s": self.predicted_s,
         }
 
@@ -83,6 +139,27 @@ def ring_allreduce_bytes(block_bytes: float, participants: int) -> float:
     if participants <= 1:
         return 0.0
     return 2.0 * block_bytes * (participants - 1) / participants
+
+
+def compressed_allgather_bytes(
+    block_bytes: float, participants: int, itemsize: float = 4.0
+) -> float:
+    """Per-device wire bytes of ``dist.collectives.compressed_psum``.
+
+    The compressed collective is an all-gather of int8 payloads (scales are
+    private per sender, so summation happens after dequantization on every
+    receiver): each device receives ``participants - 1`` remote blocks at
+    one byte per element -- ``block_bytes / itemsize`` -- plus one fp32
+    scale each.  Versus the fp32 ring all-reduce (``2 B (p-1)/p``) the
+    ratio is ``p/8`` -- a real win for few participants (4x at p=2) that
+    *vanishes at p=8* and inverts beyond, which is exactly why executor
+    selection is cost-driven rather than a flag.  Pass the problem's
+    ``itemsize`` for non-fp32 dtypes (bf16 compresses only 2x per element).
+    """
+    if participants <= 1:
+        return 0.0
+    payload = block_bytes * _INT8_ITEMSIZE / itemsize
+    return (participants - 1) * (payload + _SCALE_BYTES)
 
 
 def _fused_krp_dims(local_shape, n: int) -> tuple[int, int]:
@@ -177,6 +254,61 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
         )
     # "dimtree" needs the half split, which only the planner knows.
     raise ValueError("dimtree mode costs are built by plan_sweep via dimtree_mode_cost")
+
+
+def executor_mode_cost(
+    problem: Problem,
+    n: int,
+    algorithm: str,
+    executor: str = "sharded",
+    *,
+    n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
+) -> ModeCost:
+    """Cost of one mode-``n`` MTTKRP under ``algorithm`` on ``executor``.
+
+    Applies the executor's placement-specific adjustments on top of
+    :func:`mode_cost`:
+
+    * ``"local"`` / ``"sharded"`` -- the per-algorithm terms unchanged
+      (``serial_fraction`` 1.0: the psum waits for the whole local GEMM).
+    * ``"overlapping"`` -- same flops/bytes/wire volume, but the chunked
+      double-buffered pipeline hides all but ``1/n_chunks`` of the smaller
+      of compute/collective time (chunk count is capped by the local row
+      count of mode ``n``).
+    * ``"compressed"`` -- the fp32 ring all-reduce is replaced by the int8
+      error-feedback all-gather: wire bytes become
+      :func:`compressed_allgather_bytes`, and HBM traffic grows by the
+      quantize/dequantize passes (write + read the int8 block, read the
+      gathered payloads).
+    """
+    if executor not in EXECUTORS:
+        raise ValueError(f"unknown executor {executor!r} (choose from {EXECUTORS})")
+    if executor == "local" and problem.sharded:
+        raise ValueError("executor 'local' cannot run a sharded problem")
+    if executor in ("overlapping", "compressed") and not problem.sharded:
+        raise ValueError(f"executor {executor!r} needs a sharded problem")
+    base = mode_cost(problem, n, algorithm)
+    if executor in ("local", "sharded") or base.collective_bytes <= 0.0:
+        return base
+    if executor == "overlapping":
+        in_local = problem.local_shape[n]
+        chunks = max(1, min(int(n_chunks), in_local))
+        return replace(base, serial_fraction=1.0 / chunks)
+    # compressed: recompute the wire term from the output block size, over
+    # exactly the axes the executor's collective reduces
+    _, in_local, _ = dims_split(problem.local_shape, n)
+    s = problem.itemsize
+    block = in_local * problem.rank * s
+    p = math.prod(problem.axis_sizes[a] for a in problem.reduce_axes_for(n))
+    # quantize (read+write the int8 block) and dequantize (read the p-1
+    # gathered payloads), at one byte per element
+    int8_block = block * _INT8_ITEMSIZE / s
+    quant_bytes = (p + 1) * int8_block
+    return replace(
+        base,
+        collective_bytes=compressed_allgather_bytes(block, p, s),
+        bytes=base.bytes + quant_bytes,
+    )
 
 
 def dimtree_mode_cost(problem: Problem, n: int, split: int) -> ModeCost:

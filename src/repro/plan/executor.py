@@ -2,17 +2,28 @@
 
 The sweep engine (:mod:`repro.plan.sweep`) is executor-agnostic: it asks for
 "the mode-n MTTKRP of this ModePlan" or "the half-partial of these factors"
-and never touches placement.  ``LocalExecutor`` runs the paper's
-shared-memory kernels directly; ``ShardedExecutor`` wraps the
-``shard_map`` + minimal-``psum`` placement of :mod:`repro.dist.dist_mttkrp`
-(local kernel per device block, one psum over the axes mapped to contracted
-modes).  New backends -- async-collective variants, other accelerators --
-implement the same four methods and every driver picks them up unchanged.
+and never touches placement.  Four executors implement the protocol:
+
+* :class:`LocalExecutor` -- the paper's shared-memory kernels, one device.
+* :class:`ShardedExecutor` -- the ``shard_map`` + minimal-``psum`` placement
+  of :mod:`repro.dist.dist_mttkrp` (local kernel per device block, one psum
+  over the axes mapped to contracted modes).
+* :class:`OverlappingExecutor` -- same numerics, but each mode's local
+  MTTKRP is chunked so chunk ``k``'s psum overlaps chunk ``k+1``'s GEMM
+  (communication hiding; exact).
+* :class:`CompressedShardedExecutor` -- the completing psum runs through
+  the int8 error-feedback collective, with per-mode residuals threaded
+  through the sweep as carry state (communication compression;
+  approximate but convergent).
+
+``plan_sweep(executor="auto")`` picks among them by predicted cost; use
+:func:`make_executor` to turn the chosen ``SweepPlan.executor`` kind into
+an instance bound to a concrete mesh.
 """
 
 from __future__ import annotations
 
-from typing import Protocol, Sequence, runtime_checkable
+from typing import Any, Protocol, Sequence, runtime_checkable
 
 import jax
 
@@ -22,9 +33,13 @@ from repro.dist.dist_mttkrp import (
     _dist_partial_left,
     _dist_partial_right,
     dist_mttkrp,
+    dist_mttkrp_compressed,
+    dist_mttkrp_overlapped,
+    init_mttkrp_error_state,
     shard_problem,
 )
 
+from .cost import DEFAULT_OVERLAP_CHUNKS, EXECUTORS
 from .planner import ModePlan
 from .problem import Problem
 
@@ -33,7 +48,15 @@ Array = jax.Array
 
 @runtime_checkable
 class Executor(Protocol):
-    """The four contractions an ALS sweep needs, placement included."""
+    """The four contractions an ALS sweep needs, placement included.
+
+    Executors that carry state across MTTKRP calls (e.g. error-feedback
+    residuals) additionally implement the optional carry extension --
+    ``init_carry(problem, x, factors)`` and ``mttkrp_carry(x, factors, mp,
+    carry) -> (m, carry)`` -- which the sweep engine threads through
+    ``SweepState.carry`` when present (``hasattr`` duck typing; stateless
+    executors skip both).
+    """
 
     def prepare(self, problem: Problem, x: Array, factors: Sequence[Array]):
         """Place tensor + factors for this executor (identity when local)."""
@@ -56,15 +79,19 @@ class LocalExecutor:
     """Single-device execution of the paper's shared-memory kernels."""
 
     def prepare(self, problem: Problem, x: Array, factors: Sequence[Array]):
+        """No placement needed on one device: returns inputs unchanged."""
         return x, list(factors)
 
     def mttkrp(self, x: Array, factors: Sequence[Array], mp: ModePlan) -> Array:
+        """Mode-``mp.mode`` MTTKRP via the planned local algorithm."""
         return mttkrp(x, list(factors), mp.mode, method=mp.algorithm)
 
     def partial_right(self, x: Array, right_factors: Sequence[Array]) -> Array:
+        """Local dimension-tree ``T_L`` (contract trailing modes)."""
         return partial_mttkrp_right(x, list(right_factors))
 
     def partial_left(self, x: Array, left_factors: Sequence[Array]) -> Array:
+        """Local dimension-tree ``T_R`` (contract leading modes)."""
         return partial_mttkrp_left(x, list(left_factors))
 
 
@@ -83,15 +110,113 @@ class ShardedExecutor:
         self.mode_axes = dict(mode_axes)
 
     def prepare(self, problem: Problem, x: Array, factors: Sequence[Array]):
+        """Block-distribute tensor + factors per ``mode_axes`` (no reorder)."""
         return shard_problem(x, factors, self.mode_axes, self.mesh)
 
     def mttkrp(self, x: Array, factors: Sequence[Array], mp: ModePlan) -> Array:
+        """Local planned kernel per block + one psum over contracted axes."""
         return dist_mttkrp(
             x, list(factors), mp.mode, self.mode_axes, self.mesh, method=mp.algorithm
         )
 
     def partial_right(self, x: Array, right_factors: Sequence[Array]) -> Array:
+        """Distributed dimension-tree ``T_L`` (psum over trailing-mode axes)."""
         return _dist_partial_right(x, list(right_factors), self.mode_axes, self.mesh)
 
     def partial_left(self, x: Array, left_factors: Sequence[Array]) -> Array:
+        """Distributed dimension-tree ``T_R`` (psum over leading-mode axes)."""
         return _dist_partial_left(x, list(left_factors), self.mode_axes, self.mesh)
+
+
+class OverlappingExecutor(ShardedExecutor):
+    """Communication-hiding sharded executor (exact).
+
+    Identical placement and results to :class:`ShardedExecutor`, but each
+    mode's local MTTKRP is split into ``n_chunks`` row slabs so the psum of
+    chunk ``k`` is issued while the GEMM of chunk ``k+1`` runs
+    (:func:`repro.dist.dist_mttkrp.dist_mttkrp_overlapped`).  Chunk psums
+    cover disjoint output rows, so the iterates match the plain sharded
+    executor exactly; only the schedule changes.  The dimension-tree
+    partials are inherited unchunked (ROADMAP).
+    """
+
+    def __init__(self, mesh, mode_axes, n_chunks: int = DEFAULT_OVERLAP_CHUNKS):
+        super().__init__(mesh, mode_axes)
+        self.n_chunks = int(n_chunks)
+
+    def mttkrp(self, x: Array, factors: Sequence[Array], mp: ModePlan) -> Array:
+        """Chunked local kernel with per-chunk psums (double-buffered)."""
+        return dist_mttkrp_overlapped(
+            x,
+            list(factors),
+            mp.mode,
+            self.mode_axes,
+            self.mesh,
+            method=mp.algorithm,
+            n_chunks=self.n_chunks,
+        )
+
+
+class CompressedShardedExecutor(ShardedExecutor):
+    """Communication-compressing sharded executor (approximate, convergent).
+
+    Runs the factor all-reduce of every mode through the int8
+    error-feedback collective
+    (:func:`repro.dist.dist_mttkrp.dist_mttkrp_compressed`): each device
+    quantizes its partial MTTKRP plus its carried residual, all-gathers the
+    int8 payloads, and dequant-sums locally.  The per-mode residuals are
+    persistent sweep state -- created by :meth:`init_carry`, threaded
+    through :meth:`mttkrp_carry` by the engine -- so the accumulated
+    quantization error stays bounded by one int8 step and compressed CP-ALS
+    converges to the exact fit.  Modes whose mapping needs no psum run the
+    exact path.
+    """
+
+    def init_carry(
+        self, problem: Problem, x: Array, factors: Sequence[Array]
+    ) -> dict[int, Array]:
+        """Zero per-mode error-feedback residuals, placed on the mesh."""
+        return init_mttkrp_error_state(
+            problem.shape, problem.rank, self.mode_axes, self.mesh
+        )
+
+    def mttkrp_carry(
+        self, x: Array, factors: Sequence[Array], mp: ModePlan, carry: Any
+    ) -> tuple[Array, Any]:
+        """Compressed mode-``mp.mode`` MTTKRP; returns result + new carry."""
+        n = mp.mode
+        if carry is None or n not in carry:
+            return self.mttkrp(x, factors, mp), carry
+        m, new_err = dist_mttkrp_compressed(
+            x, list(factors), n, self.mode_axes, self.mesh, carry[n],
+            method=mp.algorithm,
+        )
+        return m, {**carry, n: new_err}
+
+
+def make_executor(
+    kind: str,
+    mesh=None,
+    mode_axes=None,
+    *,
+    n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
+) -> Executor:
+    """Instantiate the executor for a planner-chosen kind.
+
+    ``kind`` is a ``SweepPlan.executor`` value (one of
+    :data:`repro.plan.cost.EXECUTORS`); the sharded kinds need the concrete
+    ``mesh`` + ``mode_axes``, which the Problem deliberately does not carry
+    (plans are pure metadata).  ``n_chunks`` sizes the overlapping
+    executor's psum pipeline.
+    """
+    if kind not in EXECUTORS:
+        raise ValueError(f"unknown executor kind {kind!r} (choose from {EXECUTORS})")
+    if kind == "local":
+        return LocalExecutor()
+    if mesh is None or mode_axes is None:
+        raise ValueError(f"executor {kind!r} needs mesh and mode_axes")
+    if kind == "sharded":
+        return ShardedExecutor(mesh, mode_axes)
+    if kind == "overlapping":
+        return OverlappingExecutor(mesh, mode_axes, n_chunks=n_chunks)
+    return CompressedShardedExecutor(mesh, mode_axes)

@@ -9,16 +9,28 @@ toward the paper's empirical recommendation, which exactly reproduces the
 Sec. 5.3.3 dispatch on the benchmark shapes while letting genuinely lopsided
 shapes (e.g. one huge mode flanked by tiny ones) escape the heuristic.
 
-Future ROADMAP items (async psum overlap, compressed factor all-reduce, new
-backends) hook in here: they change a cost term or add an algorithm, and
-every driver -- local, dimension-tree, distributed -- picks it up for free.
+Beyond the per-mode algorithm, ``plan_sweep`` also picks WHERE the sweep
+runs: ``executor='auto'`` cost-argmins over the executor kinds of
+:data:`repro.plan.cost.EXECUTORS` (``local`` for unsharded problems;
+``sharded`` / ``overlapping`` / ``compressed`` for sharded ones) under the
+bounded-overlap model, so communication hiding and compression are planner
+decisions, not call-site flags.  The chosen kind lands on
+``SweepPlan.executor``; :func:`repro.plan.executor.make_executor` turns it
+into the matching executor instance given the concrete mesh.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-from .cost import ALGORITHMS, ModeCost, dimtree_mode_cost, mode_cost
+from .cost import (
+    ALGORITHMS,
+    DEFAULT_OVERLAP_CHUNKS,
+    EXECUTORS,
+    ModeCost,
+    dimtree_mode_cost,
+    executor_mode_cost,
+)
 from .problem import Problem
 
 STRATEGIES = (
@@ -39,6 +51,11 @@ STRATEGIES = (
 # alone decides only clear wins.
 _NEAR_TIE = 0.9
 
+# the compressed executor changes numerics (int8 + error feedback), so it
+# must beat the best *exact* executor by >10% predicted time to be selected
+# -- mirroring the _NEAR_TIE convention of the algorithm dispatch.
+_COMPRESS_MARGIN = 0.9
+
 
 @dataclass(frozen=True)
 class ModePlan:
@@ -49,6 +66,7 @@ class ModePlan:
     cost: ModeCost
 
     def as_dict(self) -> dict:
+        """JSON-ready row: mode, algorithm, and every cost term."""
         return {"mode": self.mode, "algorithm": self.algorithm, **self.cost.as_dict()}
 
 
@@ -67,12 +85,15 @@ class SweepPlan:
     modes: tuple[ModePlan, ...]
     split: int | None = None
     normalize: bool = True
+    executor: str = "local"
 
     @property
     def kind(self) -> str:
+        """``"dimtree"`` for two-partial plans, ``"permode"`` otherwise."""
         return "dimtree" if self.split is not None else "permode"
 
     def total_cost(self) -> dict:
+        """Sweep-level sums of the per-mode cost terms and predictions."""
         return {
             "flops": sum(m.cost.flops for m in self.modes),
             "bytes": sum(m.cost.bytes for m in self.modes),
@@ -88,6 +109,7 @@ class SweepPlan:
             "dtype": self.problem.dtype_str,
             "strategy": self.strategy,
             "kind": self.kind,
+            "executor": self.executor,
             "split": self.split,
             "sharded": self.problem.sharded,
             "mode_axes": {str(k): v for k, v in self.problem.mode_axes.items()},
@@ -97,19 +119,75 @@ class SweepPlan:
         }
 
 
-def _auto_mode(problem: Problem, n: int) -> ModePlan:
+def _auto_mode(
+    problem: Problem, n: int, executor: str, n_chunks: int
+) -> ModePlan:
     """Cost-model dispatch for one mode (reproduces paper Sec. 5.3.3)."""
+
+    def cost(alg: str) -> ModeCost:
+        return executor_mode_cost(problem, n, alg, executor, n_chunks=n_chunks)
+
     if problem.external_mode(n):
         # 2-step degenerates to 1-step here; only 1-step is a real candidate.
-        return ModePlan(n, "1step", mode_cost(problem, n, "1step"))
-    right = mode_cost(problem, n, "2step-right")
-    left = mode_cost(problem, n, "2step-left")
+        return ModePlan(n, "1step", cost("1step"))
+    right = cost("2step-right")
+    left = cost("2step-left")
     # strict < keeps the Alg. 4 tie convention (L == R resolves right-first)
     two_alg, two = ("2step-left", left) if left.predicted_s < right.predicted_s else ("2step-right", right)
-    one = mode_cost(problem, n, "1step")
+    one = cost("1step")
     if one.predicted_s < _NEAR_TIE * two.predicted_s:
         return ModePlan(n, "1step", one)
     return ModePlan(n, two_alg, two)
+
+
+def _plan_modes(
+    problem: Problem, strategy: str, executor: str, n_chunks: int
+) -> tuple[ModePlan, ...]:
+    """Per-mode ModePlans for a non-dimtree strategy on one executor kind."""
+    if strategy == "auto":
+        return tuple(
+            _auto_mode(problem, n, executor, n_chunks) for n in range(problem.ndim)
+        )
+    assert strategy in ALGORITHMS
+    return tuple(
+        ModePlan(
+            n, strategy, executor_mode_cost(problem, n, strategy, executor, n_chunks=n_chunks)
+        )
+        for n in range(problem.ndim)
+    )
+
+
+def select_executor(
+    problem: Problem,
+    strategy: str = "auto",
+    *,
+    n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
+) -> str:
+    """Cost-argmin executor kind for ``problem`` under ``strategy``.
+
+    Unsharded problems run locally.  Sharded per-mode plans compare the
+    plain ``sharded`` executor against ``overlapping`` (communication
+    hidden behind chunked GEMMs) and ``compressed`` (int8 error-feedback
+    all-gather) on total predicted sweep seconds; ``compressed`` changes
+    numerics, so it must beat the best exact executor by >10%
+    (``_COMPRESS_MARGIN``) -- ties resolve to the exact executor.  Dimtree
+    plans stay on ``sharded``: overlap/compression of the two half-partial
+    contractions is not implemented (ROADMAP).
+    """
+    if not problem.sharded:
+        return "local"
+    if strategy == "dimtree":
+        return "sharded"
+
+    def total(executor: str) -> float:
+        modes = _plan_modes(problem, strategy, executor, n_chunks)
+        return sum(m.cost.predicted_s for m in modes)
+
+    t_sharded, t_overlap = total("sharded"), total("overlapping")
+    best_exact = "overlapping" if t_overlap < t_sharded else "sharded"
+    if total("compressed") < _COMPRESS_MARGIN * min(t_sharded, t_overlap):
+        return "compressed"
+    return best_exact
 
 
 def plan_sweep(
@@ -118,6 +196,8 @@ def plan_sweep(
     *,
     split: int | None = None,
     normalize: bool = True,
+    executor: str = "auto",
+    n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
 ) -> SweepPlan:
     """Plan one full ALS sweep for ``problem``.
 
@@ -126,11 +206,33 @@ def plan_sweep(
     dimension-tree schedule (``split`` defaults to the balanced half);
     any other value forces that algorithm on every mode (the old
     ``method=`` passthrough, kept for the back-compat wrappers).
+
+    ``executor='auto'`` additionally picks the executor kind via
+    :func:`select_executor` (cost-argmin under the bounded-overlap model);
+    pass an explicit kind from :data:`repro.plan.cost.EXECUTORS` to force
+    one.  ``n_chunks`` sizes the overlapping executor's psum pipeline.
+    The choice lands on ``SweepPlan.executor``;
+    :func:`repro.plan.executor.make_executor` builds the matching instance.
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r} (choose from {STRATEGIES})")
     if split is not None and strategy != "dimtree":
         raise ValueError("split is only meaningful for strategy='dimtree'")
+    if executor != "auto" and executor not in EXECUTORS:
+        raise ValueError(
+            f"unknown executor {executor!r} (choose from {('auto',) + EXECUTORS})"
+        )
+    if strategy == "dimtree" and executor in ("overlapping", "compressed"):
+        raise ValueError(
+            f"executor {executor!r} does not support dimtree plans: the half-"
+            "partial contractions are neither chunked nor compressed (ROADMAP)"
+        )
+    if executor == "auto":
+        executor = select_executor(problem, strategy, n_chunks=n_chunks)
+    elif executor == "local" and problem.sharded:
+        raise ValueError("executor 'local' cannot run a sharded problem")
+    elif executor in ("overlapping", "compressed") and not problem.sharded:
+        raise ValueError(f"executor {executor!r} needs a sharded problem")
 
     n_modes = problem.ndim
     if strategy == "dimtree":
@@ -141,14 +243,9 @@ def plan_sweep(
             ModePlan(n, "dimtree", dimtree_mode_cost(problem, n, m))
             for n in range(n_modes)
         )
-        return SweepPlan(problem, strategy, modes, split=m, normalize=normalize)
-
-    if strategy == "auto":
-        modes = tuple(_auto_mode(problem, n) for n in range(n_modes))
-    else:
-        assert strategy in ALGORITHMS
-        modes = tuple(
-            ModePlan(n, strategy, mode_cost(problem, n, strategy))
-            for n in range(n_modes)
+        return SweepPlan(
+            problem, strategy, modes, split=m, normalize=normalize, executor=executor
         )
-    return SweepPlan(problem, strategy, modes, normalize=normalize)
+
+    modes = _plan_modes(problem, strategy, executor, n_chunks)
+    return SweepPlan(problem, strategy, modes, normalize=normalize, executor=executor)

@@ -103,16 +103,21 @@ class Problem:
     # ------------------------------------------------------------- derived
     @property
     def ndim(self) -> int:
+        """Tensor order (number of modes)."""
         return len(self.shape)
 
     @property
     def itemsize(self) -> float:
-        # dtype_itemsize also accepts HLO-style ('bf16') and numpy-name
-        # ('bfloat16') strings, matching analysis.roofline.mttkrp_roofline
+        """Bytes per element of ``dtype``.
+
+        ``dtype_itemsize`` also accepts HLO-style ('bf16') and numpy-name
+        ('bfloat16') strings, matching ``analysis.roofline.mttkrp_roofline``.
+        """
         return float(dtype_itemsize(self.dtype))
 
     @property
     def dtype_str(self) -> str:
+        """Canonical dtype name for describe()/JSON output."""
         try:
             return str(np.dtype(self.dtype))
         except TypeError:
@@ -120,6 +125,7 @@ class Problem:
 
     @property
     def sharded(self) -> bool:
+        """True when any mode is mapped to a mesh axis."""
         return bool(self.mode_axes)
 
     def mode_shards(self, n: int) -> int:
@@ -142,6 +148,20 @@ class Problem:
             if mode not in keep:
                 p *= self.mode_shards(mode)
         return p
+
+    def reduce_axes_for(self, n: int) -> tuple[str, ...]:
+        """Mesh axes the mode-``n`` MTTKRP psums over, in mode order.
+
+        These are the axes of every mapped mode other than ``n`` -- the
+        contracted modes whose partial sums the collective completes.  Empty
+        when mode ``n`` is the only mapped mode (the output rows ride its own
+        axis; no collective is needed) or the problem is unsharded.  Matches
+        the axis order :func:`repro.dist.dist_mttkrp.dist_mttkrp` reduces
+        over, so cost terms and executors agree on the participant set.
+        """
+        return tuple(
+            self.mode_axes[m] for m in sorted(self.mode_axes) if m != n
+        )
 
     def external_mode(self, n: int) -> bool:
         """External modes (first/last) are where 2-step degenerates to 1-step."""

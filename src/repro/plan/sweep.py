@@ -18,7 +18,7 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass
-from typing import Callable, Sequence
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +43,13 @@ Array = jax.Array
 @dataclass
 class SweepState:
     """Pytree carried across sweeps: the tensor rides along unchanged so the
-    jitted sweep is a pure ``state -> state`` function."""
+    jitted sweep is a pure ``state -> state`` function.
+
+    ``carry`` is executor-private state threaded through the sweep (e.g. the
+    per-mode error-feedback residuals of
+    :class:`repro.plan.executor.CompressedShardedExecutor`); ``None`` for
+    stateless executors.
+    """
 
     x: Array
     factors: list[Array]
@@ -51,11 +57,12 @@ class SweepState:
     norm_x: Array
     it: Array
     fit: Array | float = 0.0
+    carry: Any = None
 
 
 jax.tree_util.register_pytree_node(
     SweepState,
-    lambda s: ((s.x, s.factors, s.weights, s.norm_x, s.it, s.fit), None),
+    lambda s: ((s.x, s.factors, s.weights, s.norm_x, s.it, s.fit, s.carry), None),
     lambda _, c: SweepState(*c),
 )
 
@@ -69,11 +76,17 @@ def als_sweep(
     the two half-partials (left half from the *old* right factors, right half
     from the *fresh* left factors -- the schedule that reproduces exact
     standard-ALS iterates while reading X twice instead of N times).
+
+    Executors implementing the carry extension (``mttkrp_carry``; see the
+    :class:`repro.plan.executor.Executor` protocol) have their private state
+    threaded through ``state.carry`` across the per-mode updates.
     """
     x = state.x
     factors = list(state.factors)
     weights = state.weights
     it = state.it
+    carry = state.carry
+    use_carry = hasattr(executor, "mttkrp_carry")
     n_modes = len(factors)
     gs = grams(factors)
     m_last = None
@@ -105,13 +118,17 @@ def als_sweep(
             weights = update(n, m_last, weights)
     else:
         for mp in plan.modes:
-            m_last = executor.mttkrp(x, factors, mp)
+            if use_carry:
+                m_last, carry = executor.mttkrp_carry(x, factors, mp, carry)
+            else:
+                m_last = executor.mttkrp(x, factors, mp)
             weights = update(mp.mode, m_last, weights)
 
     # Fit from the last MTTKRP (standard trick; avoids forming the model).
     fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], state.norm_x)
     return SweepState(
-        x=x, factors=factors, weights=weights, norm_x=state.norm_x, it=it, fit=fit
+        x=x, factors=factors, weights=weights, norm_x=state.norm_x, it=it, fit=fit,
+        carry=carry,
     )
 
 
@@ -139,7 +156,12 @@ def legacy_sweep(
     problem = Problem.from_tensor(
         x, factors[0].shape[1], mode_axes=mode_axes, mesh=mesh
     )
-    plan = plan_sweep(problem, strategy=strategy, split=split, normalize=normalize)
+    # legacy wrappers are frozen on the exact executors: plan costs and
+    # execution must keep matching the pre-redesign behavior bit for bit.
+    plan = plan_sweep(
+        problem, strategy=strategy, split=split, normalize=normalize,
+        executor="sharded" if mesh is not None else "local",
+    )
     executor = ShardedExecutor(mesh, mode_axes) if mesh is not None else LocalExecutor()
     state = SweepState(
         x=x, factors=list(factors), weights=weights, norm_x=norm_x, it=jnp.asarray(it)
@@ -163,24 +185,40 @@ def cp_als(
     """THE CP-ALS driver: init, jitted sweep loop, convergence stop.
 
     Replaces both ``core.cpals.cp_als`` and ``dist.dist_mttkrp.dist_cp_als``
-    (which wrap it).  ``executor`` defaults to :class:`LocalExecutor`; pass a
-    :class:`ShardedExecutor` for block-distributed problems -- ``prepare``
-    places the tensor/factors before the loop.  Per-iteration wall times go
-    through ``callback(it, fit, seconds)`` so benchmarks can record them.
+    (which wrap it).  ``executor`` defaults to :class:`LocalExecutor` for
+    local plans; for sharded plans pass the matching instance (build one
+    from ``plan.executor`` with :func:`repro.plan.executor.make_executor`)
+    -- ``prepare`` places the tensor/factors before the loop, and executors
+    with carry state (compressed collectives) have it initialized here and
+    threaded across iterations.  Per-iteration wall times go through
+    ``callback(it, fit, seconds)`` so benchmarks can record them.
     """
     problem = plan.problem
-    executor = executor if executor is not None else LocalExecutor()
+    if executor is None:
+        if plan.executor != "local":
+            raise ValueError(
+                f"plan.executor={plan.executor!r} needs an executor instance: "
+                "the Problem carries only axis sizes, so build one with "
+                "repro.plan.make_executor(plan.executor, mesh, mode_axes)"
+            )
+        executor = LocalExecutor()
     key = jax.random.PRNGKey(seed)
     factors = init_factors or random_factors(key, x.shape, problem.rank, x.dtype)
     x, factors = executor.prepare(problem, x, factors)
     weights = jnp.ones((problem.rank,), x.dtype)
     norm_x = tensor_norm(x).astype(x.dtype)
+    carry = (
+        executor.init_carry(problem, x, factors)
+        if hasattr(executor, "init_carry")
+        else None
+    )
 
-    # jit only the (factors, weights, fit) outputs: returning state.x from the
-    # compiled fn would make XLA emit a full-tensor copy every iteration.
+    # jit only the (factors, weights, fit, carry) outputs: returning state.x
+    # from the compiled fn would make XLA emit a full-tensor copy every
+    # iteration.
     def _sweep(state: SweepState):
         out = als_sweep(problem, plan, executor, state)
-        return out.factors, out.weights, out.fit
+        return out.factors, out.weights, out.fit, out.carry
 
     sweep = jax.jit(_sweep)
 
@@ -190,9 +228,10 @@ def cp_als(
     for it in range(n_iters):
         t0 = time.perf_counter()
         state = SweepState(
-            x=x, factors=factors, weights=weights, norm_x=norm_x, it=jnp.asarray(it)
+            x=x, factors=factors, weights=weights, norm_x=norm_x,
+            it=jnp.asarray(it), carry=carry,
         )
-        factors, weights, fit = sweep(state)
+        factors, weights, fit, carry = sweep(state)
         fit = jax.block_until_ready(fit)
         dt = time.perf_counter() - t0
         if callback is not None:

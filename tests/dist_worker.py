@@ -121,6 +121,86 @@ def case_elastic_restore():
     print("elastic_restore OK")
 
 
+def case_overlap_mttkrp():
+    """OverlappingExecutor == ShardedExecutor: chunked per-slab psums cover
+    disjoint output rows, so overlap changes the schedule, not the result."""
+    from repro.core.tensor_ops import tensor_norm
+    from repro.dist.dist_mttkrp import dist_mttkrp, dist_mttkrp_overlapped
+    from repro.plan import (
+        OverlappingExecutor,
+        Problem,
+        ShardedExecutor,
+        SweepState,
+        als_sweep,
+        plan_sweep,
+    )
+
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    x = random_tensor(jax.random.PRNGKey(0), (8, 6, 4, 5))
+    factors = random_factors(jax.random.PRNGKey(1), x.shape, 7)
+    mode_axes = {0: "data", 2: "model"}
+    xs, fs = shard_problem(x, factors, mode_axes, mesh)
+    # per-mode MTTKRP: overlapped == plain for every mode and chunk count
+    for n in range(4):
+        ref = dist_mttkrp(xs, fs, n, mode_axes, mesh)
+        for n_chunks in (1, 2, 3, 8):
+            out = dist_mttkrp_overlapped(xs, fs, n, mode_axes, mesh, n_chunks=n_chunks)
+            np.testing.assert_allclose(
+                np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6
+            )
+    # full ALS sweeps: iterates stay matched across several sweeps
+    problem = Problem.from_tensor(x, 7, mode_axes=mode_axes, mesh=mesh)
+    plan = plan_sweep(problem, executor="overlapping")
+    assert plan.executor == "overlapping"
+    assert any(m.cost.predicted_overlap_efficiency > 0 for m in plan.modes)
+    w = jnp.ones((7,), x.dtype)
+    norm_x = tensor_norm(x)
+    f_sh, f_ov = list(fs), list(fs)
+    w_sh = w_ov = w
+    for it in range(3):
+        st_sh = SweepState(x=xs, factors=f_sh, weights=w_sh, norm_x=norm_x, it=jnp.asarray(it))
+        st_ov = SweepState(x=xs, factors=f_ov, weights=w_ov, norm_x=norm_x, it=jnp.asarray(it))
+        out_sh = als_sweep(problem, plan, ShardedExecutor(mesh, mode_axes), st_sh)
+        out_ov = als_sweep(problem, plan, OverlappingExecutor(mesh, mode_axes, n_chunks=3), st_ov)
+        f_sh, w_sh = out_sh.factors, out_sh.weights
+        f_ov, w_ov = out_ov.factors, out_ov.weights
+        for a, b in zip(f_sh, f_ov):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(out_sh.fit), float(out_ov.fit), atol=1e-5)
+    print("overlap_mttkrp OK")
+
+
+def case_compressed_cpals():
+    """Error-feedback convergence: CP-ALS with the compressed factor
+    all-reduce reaches the uncompressed fit within tolerance on a fixed
+    iteration budget (seeded planted problem)."""
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    planted = random_factors(jax.random.PRNGKey(7), (8, 8, 8), 3)
+    x = cp_full(None, planted)
+    mode_axes = {0: "data", 1: "model"}
+    budget = 40
+    f_e, w_e, fit_exact = dist_cp_als(
+        x, rank=3, mode_axes=mode_axes, mesh=mesh, n_iters=budget, tol=1e-9,
+        executor="sharded",
+    )
+    f_c, w_c, fit_comp = dist_cp_als(
+        x, rank=3, mode_axes=mode_axes, mesh=mesh, n_iters=budget, tol=1e-9,
+        executor="compressed",
+    )
+    assert float(fit_comp) > 0.75, float(fit_comp)
+    assert abs(float(fit_comp) - float(fit_exact)) < 2e-2, (
+        float(fit_comp), float(fit_exact),
+    )
+    # selection surface: a few-participant, collective-bound problem picks
+    # compressed; this planted shape keeps an exact executor
+    from repro.plan import Problem, select_executor
+
+    p2 = Problem(shape=(2, 64, 2), rank=4096, mode_axes={0: "data"}, axis_sizes={"data": 2})
+    assert select_executor(p2) == "compressed", select_executor(p2)
+    print("compressed_cpals OK", float(fit_comp), float(fit_exact))
+
+
 def case_compressed_psum():
     mesh = jax.make_mesh((8,), ("data",))
     from jax import shard_map
@@ -182,6 +262,8 @@ if __name__ == "__main__":
         "dist_cpals": case_dist_cpals,
         "dist_dimtree": case_dist_dimtree,
         "elastic_restore": case_elastic_restore,
+        "overlap_mttkrp": case_overlap_mttkrp,
+        "compressed_cpals": case_compressed_cpals,
         "compressed_psum": case_compressed_psum,
         "compressed_dp": case_compressed_dp_trainer,
     }[sys.argv[1]]()

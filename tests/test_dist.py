@@ -41,6 +41,16 @@ def test_dist_dimtree_matches_standard_als():
     assert "dist_dimtree OK" in out
 
 
+def test_overlapping_executor_matches_sharded():
+    out = _run("overlap_mttkrp")
+    assert "overlap_mttkrp OK" in out
+
+
+def test_compressed_cpals_reaches_exact_fit():
+    out = _run("compressed_cpals")
+    assert "compressed_cpals OK" in out
+
+
 def test_compressed_psum_error_feedback():
     out = _run("compressed_psum")
     assert "compressed_psum OK" in out

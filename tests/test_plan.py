@@ -232,6 +232,156 @@ def test_mode_letters_rejects_unsupported_order():
         mode_letters(0)
 
 
+# ------------------------------------------------- executor selection / cost
+def test_overlap_model_degenerates_to_additive_sum():
+    """serial_fraction=1 (sharded/local): max + min == the old additive model."""
+    from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+    problem = Problem(
+        shape=(8, 6, 4, 4), rank=3,
+        mode_axes={0: "data", 2: "model"}, axis_sizes={"data": 2, "model": 4},
+    )
+    for n in range(4):
+        c = mode_cost(problem, n, "1step")
+        assert c.serial_fraction == 1.0
+        additive = c.flops / PEAK_FLOPS + c.bytes / HBM_BW + c.collective_bytes / ICI_BW
+        assert c.predicted_s == pytest.approx(additive)
+        assert c.predicted_s >= max(c.compute_s, c.collective_s)
+
+
+def test_overlapping_cost_hides_all_but_one_chunk():
+    from repro.plan import DEFAULT_OVERLAP_CHUNKS, executor_mode_cost
+
+    # every mode keeps local extent >= DEFAULT_OVERLAP_CHUNKS (local (4,16,4))
+    problem = Problem(
+        shape=(8, 16, 16), rank=5,
+        mode_axes={0: "data", 2: "model"}, axis_sizes={"data": 2, "model": 4},
+    )
+    for n in range(3):
+        sh = executor_mode_cost(problem, n, "1step", "sharded")
+        ov = executor_mode_cost(problem, n, "1step", "overlapping")
+        # same physical terms, only the schedule differs
+        assert ov.flops == sh.flops and ov.bytes == sh.bytes
+        assert ov.collective_bytes == sh.collective_bytes
+        assert ov.serial_fraction == pytest.approx(1.0 / DEFAULT_OVERLAP_CHUNKS)
+        assert ov.predicted_s < sh.predicted_s  # every mode psums here
+        assert ov.predicted_overlap_efficiency == pytest.approx(
+            1.0 - 1.0 / DEFAULT_OVERLAP_CHUNKS
+        )
+    # chunk count is capped by the local row count of the mode
+    tiny = Problem(
+        shape=(4, 2, 4), rank=5,
+        mode_axes={0: "data", 2: "model"}, axis_sizes={"data": 2, "model": 4},
+    )
+    ov = executor_mode_cost(tiny, 1, "1step", "overlapping", n_chunks=8)
+    assert ov.serial_fraction == pytest.approx(1.0 / 2)
+
+
+def test_compressed_cost_wire_ratio():
+    """int8 all-gather wire bytes: (p-1) * B/4 vs the ring's 2B(p-1)/p --
+    a 4x win at p=2 that vanishes at p=8."""
+    from repro.plan import compressed_allgather_bytes, ring_allreduce_bytes
+
+    B = 1e6
+    assert compressed_allgather_bytes(B, 1) == 0.0
+    assert compressed_allgather_bytes(B, 2) == pytest.approx(
+        ring_allreduce_bytes(B, 2) / 4, rel=1e-4
+    )
+    assert compressed_allgather_bytes(B, 8) == pytest.approx(
+        ring_allreduce_bytes(B, 8), rel=1e-4
+    )
+    # int8 payload is per-*element*: bf16 blocks compress 2x, not 4x
+    assert compressed_allgather_bytes(B, 2, itemsize=2.0) == pytest.approx(
+        B / 2, rel=1e-4
+    )
+    # and the executor cost threads the problem dtype through
+    from repro.plan import executor_mode_cost
+
+    for dtype, ratio in (("float32", 4.0), (jnp.bfloat16, 2.0), ("float64", 8.0)):
+        p = Problem(
+            shape=(2, 64, 2), rank=32, dtype=dtype,
+            mode_axes={0: "data"}, axis_sizes={"data": 2},
+        )
+        sh = executor_mode_cost(p, 1, "1step", "sharded")
+        co = executor_mode_cost(p, 1, "1step", "compressed")
+        # ring moves 2B(p-1)/p = B at p=2; the gather moves ~B/ratio
+        assert co.collective_bytes == pytest.approx(
+            sh.collective_bytes / ratio, rel=1e-2
+        )
+
+
+def test_select_executor_cost_argmin():
+    from repro.plan import EXECUTORS, select_executor
+
+    assert EXECUTORS == ("local", "sharded", "overlapping", "compressed")
+    # unsharded -> local
+    assert select_executor(Problem(shape=(8, 8, 8), rank=4)) == "local"
+    # sharded with real collectives -> overlapping (hiding is free in the model)
+    sharded = Problem(
+        shape=(8, 6, 4, 4), rank=3,
+        mode_axes={0: "data", 2: "model"}, axis_sizes={"data": 2, "model": 4},
+    )
+    assert select_executor(sharded) == "overlapping"
+    # few participants + collective-bound -> compressed beats exact by >10%
+    bound = Problem(
+        shape=(2, 64, 2), rank=4096, mode_axes={0: "data"}, axis_sizes={"data": 2}
+    )
+    assert select_executor(bound) == "compressed"
+    # dimtree partials are not chunked/compressed -> plain sharded
+    assert select_executor(sharded, "dimtree") == "sharded"
+    # plan_sweep agrees and stamps the choice on the plan
+    for problem in (sharded, bound):
+        plan = plan_sweep(problem)
+        assert plan.executor == select_executor(problem)
+        assert json.loads(json.dumps(plan.describe()))["executor"] == plan.executor
+
+
+def test_plan_executor_validation():
+    from repro.plan import make_executor
+
+    sharded = Problem(
+        shape=(4, 4), rank=2, mode_axes={0: "data"}, axis_sizes={"data": 2}
+    )
+    with pytest.raises(ValueError):  # local executor cannot run sharded problems
+        plan_sweep(sharded, executor="local")
+    with pytest.raises(ValueError):  # overlap needs a sharded problem
+        plan_sweep(Problem(shape=(4, 4), rank=2), executor="overlapping")
+    with pytest.raises(ValueError):  # dimtree halves are not chunked
+        plan_sweep(
+            Problem(shape=(4, 4, 4), rank=2), strategy="dimtree", executor="compressed"
+        )
+    with pytest.raises(ValueError):
+        plan_sweep(Problem(shape=(4, 4), rank=2), executor="nope")
+    with pytest.raises(ValueError):  # sharded kinds need the concrete mesh
+        make_executor("overlapping")
+    with pytest.raises(ValueError):
+        make_executor("nope")
+    # a sharded plan refuses to run on the default LocalExecutor
+    plan = plan_sweep(sharded)
+    with pytest.raises(ValueError, match="make_executor"):
+        cp_als(jnp.zeros((4, 4)), plan)
+
+
+def test_make_executor_builds_matching_kinds():
+    from repro.launch import mesh as meshlib
+    from repro.plan import (
+        CompressedShardedExecutor,
+        LocalExecutor,
+        OverlappingExecutor,
+        ShardedExecutor,
+        make_executor,
+    )
+
+    mesh = meshlib.make_host_mesh(1, 1)
+    mode_axes = {0: "data"}
+    assert isinstance(make_executor("local"), LocalExecutor)
+    sh = make_executor("sharded", mesh, mode_axes)
+    assert isinstance(sh, ShardedExecutor) and not isinstance(sh, OverlappingExecutor)
+    ov = make_executor("overlapping", mesh, mode_axes, n_chunks=7)
+    assert isinstance(ov, OverlappingExecutor) and ov.n_chunks == 7
+    assert isinstance(make_executor("compressed", mesh, mode_axes), CompressedShardedExecutor)
+
+
 # --------------------------------------------- hypothesis planner invariants
 # Optional dev dep: only these two property tests need it, so absence must
 # degrade to visible skips (repo convention) -- not a module-level

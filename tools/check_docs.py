@@ -1,0 +1,112 @@
+"""Docs checker: markdown link check + executable fenced snippets.
+
+Two passes, no dependencies beyond the repo's own runtime:
+
+1. **Links** -- every ``[text](target)`` in ``README.md`` and ``docs/*.md``
+   must resolve: relative paths must exist on disk, ``#anchors`` must match
+   a heading slug (GitHub slugification) in the target file.  External
+   ``http(s)://`` / ``mailto:`` links are skipped (no network in CI).
+2. **Snippets** -- every fenced block whose info string is exactly
+   ``python`` in ``docs/*.md`` is executed, top to bottom, in one shared
+   namespace per file (so later snippets can build on earlier ones).  A
+   raised exception fails the run with the file and snippet line.  README
+   fences are link-checked but not executed (they elide setup by design).
+
+Run from the repo root:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python tools/check_docs.py
+
+The multi-device flag is defaulted below (before jax's first import) so a
+bare invocation works too.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+import traceback
+from pathlib import Path
+
+# must be set before any snippet triggers jax's backend init
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"^```(\w*)[^\n]*\n(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, spaces to dashes, drop punctuation."""
+    text = re.sub(r"[`*_]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(md_path: Path) -> set[str]:
+    return {github_slug(h) for h in HEADING_RE.findall(md_path.read_text())}
+
+
+def check_links(md_path: Path) -> list[str]:
+    """Return human-readable problems for every unresolvable link."""
+    problems = []
+    text = md_path.read_text()
+    # fenced code often contains pseudo-links (dict literals etc.); drop it
+    prose = FENCE_RE.sub("", text)
+    for target in LINK_RE.findall(prose):
+        if target.startswith(EXTERNAL):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = md_path if not path_part else (md_path.parent / path_part).resolve()
+        if not dest.exists():
+            problems.append(f"{md_path}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md" and github_slug(anchor) not in anchors_of(dest):
+            problems.append(f"{md_path}: missing anchor -> {target}")
+    return problems
+
+
+def run_snippets(md_path: Path) -> list[str]:
+    """Execute the file's ``python`` fences in one shared namespace."""
+    problems = []
+    text = md_path.read_text()
+    ns: dict = {"__name__": f"docs_snippet[{md_path.name}]"}
+    for m in FENCE_RE.finditer(text):
+        lang, code = m.group(1), m.group(2)
+        if lang != "python":
+            continue
+        line = text[: m.start()].count("\n") + 2  # first line inside the fence
+        try:
+            exec(compile(code, f"{md_path}:{line}", "exec"), ns)  # noqa: S102
+        except Exception:
+            problems.append(
+                f"{md_path}:{line}: snippet raised\n{traceback.format_exc()}"
+            )
+    return problems
+
+
+def main() -> int:
+    md_files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    problems: list[str] = []
+    for f in md_files:
+        problems.extend(check_links(f))
+    for f in md_files:
+        if f.parent.name == "docs":
+            print(f"executing snippets: {f.relative_to(ROOT)}")
+            problems.extend(run_snippets(f))
+    if problems:
+        print("\n--- docs check FAILED ---")
+        for p in problems:
+            print(p)
+        return 1
+    print(f"docs check OK ({len(md_files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
