@@ -13,14 +13,23 @@ predicted-vs-measured, and ``--json`` emits the full ``SweepPlan.describe()``
 next to the measurements.  ``--smoke`` shrinks to tiny shapes with one rep
 (the CI artifact path).
 
-The JSON additionally carries an ``overlap`` section: per-mode
+The JSON additionally carries an ``overlap`` section (per-mode
 predicted-vs-measured efficiency of the communication-hiding executors on a
-small sharded problem (sharded vs overlapping psum pipeline, plus the
-planner's executor pick).  Measurements need >1 device -- run under
+small sharded problem) and a ``schedule`` section (per-NODE
+predicted-vs-measured seconds of the auto-chosen contraction schedule on an
+order-4 sharded problem -- the tree the planner argmin'd over flat / binary
+/ chain shapes).  Measurements need >1 device -- run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` as CI does;
 predicted rows are emitted either way (planning is pure arithmetic).
 
-    PYTHONPATH=src python -m benchmarks.bench_mttkrp --smoke --json out.json
+``--calibrate`` fits per-executor ``serial_fraction`` constants from the
+overlap section's measured rows (the unhidable share of the smaller
+roofline term implied by each measured sharded/overlapped pair), records
+them in the JSON, and re-plans through
+``plan_sweep(..., serial_fractions=...)`` so the artifact also carries the
+calibrated predictions -- closing the model-calibration loop.
+
+    PYTHONPATH=src python -m benchmarks.bench_mttkrp --smoke --calibrate --json out.json
 """
 
 from __future__ import annotations
@@ -39,7 +48,7 @@ from repro.core import (
     random_factors,
     random_tensor,
 )
-from repro.plan import Problem, plan_sweep
+from repro.plan import Problem, enumerate_schedules, make_executor, plan_sweep
 
 from .util import row, time_fn
 
@@ -52,6 +61,11 @@ SMOKE_TOTAL = 4096  # tiny CI-artifact scale (--smoke)
 # so every other mode's MTTKRP psums over it (the hidable collective)
 OVERLAP_SHAPE = (8, 32, 8)
 OVERLAP_RANK = 8
+
+# order-4 problem of the schedule section: big enough for the planner to
+# enumerate flat / binary@{1,2,3} / chain and pick a real tree
+SCHEDULE_SHAPE = (8, 6, 4, 4)
+SCHEDULE_RANK = 8
 
 
 def overlap_section(reps: int) -> dict:
@@ -75,8 +89,10 @@ def overlap_section(reps: int) -> dict:
         shape=OVERLAP_SHAPE, rank=OVERLAP_RANK,
         mode_axes=mode_axes, axis_sizes={"shard": shards},
     )
+    # flat schedule: these are per-MODE rows (tree shapes get their own
+    # per-node section below)
     plans = {
-        ex: plan_sweep(problem, executor=ex)
+        ex: plan_sweep(problem, schedule="flat", executor=ex)
         for ex in ("sharded", "overlapping", "compressed")
     }
     rows = []
@@ -128,12 +144,127 @@ def overlap_section(reps: int) -> dict:
     }
 
 
+def schedule_section(reps: int) -> dict:
+    """Predicted-vs-measured seconds per contraction-schedule NODE.
+
+    Plans the order-4 sharded problem with the full joint argmin (tree
+    shape x executor), then -- when the runtime has a matching multi-device
+    mesh -- walks the chosen schedule exactly like the sweep engine does,
+    timing each node's ``executor.contract`` against its ``NodePlan``
+    prediction.  Internal nodes' outputs are cached so children time the
+    real reuse path.
+    """
+    n_dev = jax.device_count()
+    shards = n_dev if n_dev > 1 and SCHEDULE_SHAPE[0] % n_dev == 0 else 8
+    mode_axes = {0: "shard"}
+    problem = Problem(
+        shape=SCHEDULE_SHAPE, rank=SCHEDULE_RANK,
+        mode_axes=mode_axes, axis_sizes={"shard": shards},
+    )
+    plan = plan_sweep(problem)
+    sched = plan.resolved_schedule
+    rows = [
+        {
+            "node": np_.node.id,
+            "parent": np_.node.parent,
+            "modes": list(np_.node.modes),
+            "contracted": list(np_.node.contracted),
+            "reduce_axes": list(np_.node.reduce_axes),
+            "algorithm": np_.algorithm,
+            "predicted_s": np_.cost.predicted_s,
+            "measured_s": None,
+        }
+        for np_ in plan.nodes
+    ]
+    measured = n_dev > 1 and SCHEDULE_SHAPE[0] % n_dev == 0
+    if measured:
+        from repro.dist.dist_mttkrp import shard_problem
+
+        mesh = jax.make_mesh((n_dev,), ("shard",))
+        x = random_tensor(jax.random.PRNGKey(4), SCHEDULE_SHAPE)
+        factors = random_factors(jax.random.PRNGKey(5), SCHEDULE_SHAPE, SCHEDULE_RANK)
+        xs, fs = shard_problem(x, factors, mode_axes, mesh)
+        executor = make_executor(plan.executor, mesh, mode_axes)
+        # carry-bearing executors (compressed) must be measured through their
+        # carry path -- plain contract() would silently time the exact psum
+        carry = (
+            executor.init_carry(plan, xs, fs)
+            if hasattr(executor, "init_carry")
+            else None
+        )
+        cache = {sched.root.id: xs}
+        for r, node in zip(rows, sched.walk()):
+            src = cache[node.parent]
+            alg = r["algorithm"]
+            if carry is not None:
+                fn = jax.jit(
+                    lambda s, f, c, node=node, alg=alg: executor.contract_carry(
+                        node, s, f, alg, c
+                    )
+                )
+                r["measured_s"] = time_fn(fn, src, fs, carry, reps=reps)["median_s"]
+                out, carry = fn(src, fs, carry)
+            else:
+                fn = jax.jit(
+                    lambda s, f, node=node, alg=alg: executor.contract(node, s, f, alg)
+                )
+                r["measured_s"] = time_fn(fn, src, fs, reps=reps)["median_s"]
+                out = fn(src, fs)
+            if not node.is_leaf:
+                cache[node.id] = out
+    return {
+        "shape": list(SCHEDULE_SHAPE),
+        "rank": SCHEDULE_RANK,
+        "shards": shards,
+        "measured": measured,
+        "schedule": sched.name,
+        "executor": plan.executor,
+        "n_candidates": len(enumerate_schedules(problem)),
+        "nodes": rows,
+    }
+
+
+def calibrate_serial_fractions(overlap: dict) -> dict:
+    """Fit per-executor ``serial_fraction`` from measured overlap rows.
+
+    The bounded-overlap model says ``t_sharded - t_overlapped =
+    (1 - f) * min(compute_s, collective_s)``: each measured mode pair gives
+    one estimate of the overlapping executor's unhidable fraction ``f``
+    (clamped to [0, 1]; on CPU test fleets the collective is a memcpy and
+    the fit mostly documents noise -- on real ICI it is the constant the
+    model needs).  Returns ``{executor: fitted}`` with the plain sharded
+    executor pinned at its defining 1.0; empty when nothing was measured.
+    """
+    fits = []
+    for r in overlap["modes"]:
+        t_sh, t_ov = r.get("measured_s_sharded"), r.get("measured_s_overlapping")
+        if t_sh is None or t_ov is None:
+            continue
+        # recover the model's hidable term min(compute, collective) from the
+        # two predictions: pred_sh = max + min and pred_ov = max + f*min, so
+        # pred_sh - pred_ov = (1 - f) * min -- and (1 - f) is exactly the
+        # row's predicted_overlap_efficiency
+        efficiency = r["predicted_overlap_efficiency"]
+        if efficiency <= 0.0:
+            continue
+        min_term = (r["predicted_s_sharded"] - r["predicted_s_overlapping"]) / efficiency
+        if min_term <= 0.0:
+            continue
+        f = 1.0 - (t_sh - t_ov) / min_term
+        fits.append(min(1.0, max(0.0, f)))
+    if not fits:
+        return {}
+    fits.sort()
+    fitted = fits[len(fits) // 2]  # median: robust to one noisy mode
+    return {"sharded": 1.0, "overlapping": fitted}
+
+
 def _dims(n: int, total: float) -> tuple[int, ...]:
     d = round(total ** (1.0 / n))
     return (d,) * n
 
 
-def collect(full: bool = False, smoke: bool = False) -> dict:
+def collect(full: bool = False, smoke: bool = False, calibrate: bool = False) -> dict:
     """Measure all shapes; returns {"plans": [...], "results": [...]}."""
     if full and smoke:
         raise ValueError("--full and --smoke are mutually exclusive")
@@ -147,7 +278,9 @@ def collect(full: bool = False, smoke: bool = False) -> dict:
 
     for n_modes in (3, 4, 5, 6):
         shape = _dims(n_modes, total)
-        plan = plan_sweep(Problem(shape=shape, rank=C, dtype="float32"))
+        # flat schedule: the rows below time per-mode MTTKRP algorithms
+        # head-to-head (tree schedules get the dedicated section)
+        plan = plan_sweep(Problem(shape=shape, rank=C, dtype="float32"), schedule="flat")
         plans.append(plan.describe())
         x = random_tensor(jax.random.PRNGKey(0), shape)
         factors = random_factors(jax.random.PRNGKey(1), shape, C)
@@ -199,10 +332,42 @@ def collect(full: bool = False, smoke: bool = False) -> dict:
                 f"measured_saving={r['measured_saving_vs_sharded']:.2f};"
                 f"predicted_saving={r['predicted_saving_vs_sharded']:.2f}",
             )
-    return {
+    schedule = schedule_section(reps)
+    for r in schedule["nodes"]:
+        if r["measured_s"] is not None:
+            rec(
+                f"schedule_{schedule['schedule']}_node{r['node']}",
+                r["measured_s"],
+                f"alg={r['algorithm']};predicted_s={r['predicted_s']:.3e}",
+            )
+    data = {
         "smoke": smoke, "full": full, "rank": C,
         "plans": plans, "results": results, "overlap": overlap,
+        "schedule": schedule,
     }
+    if calibrate:
+        fitted = calibrate_serial_fractions(overlap)
+        calibration = {"serial_fractions": fitted, "source": "overlap.modes measured rows"}
+        if fitted:
+            # the acceptance loop: fitted constants feed straight back into
+            # the planner and the calibrated predictions land in the artifact
+            problem = Problem(
+                shape=tuple(overlap["shape"]), rank=overlap["rank"],
+                mode_axes={0: "shard"}, axis_sizes={"shard": overlap["shards"]},
+            )
+            replanned = plan_sweep(
+                problem, schedule="flat", executor="overlapping",
+                serial_fractions=fitted,
+            )
+            calibration["replanned"] = {
+                "executor": replanned.executor,
+                "serial_fractions": dict(replanned.serial_fractions),
+                "predicted_s_overlapping_fitted": [
+                    m.cost.predicted_s for m in replanned.modes
+                ],
+            }
+        data["calibration"] = calibration
+    return data
 
 
 def run(full: bool = False, smoke: bool = False) -> list[str]:
@@ -215,12 +380,19 @@ def main() -> None:
     scale = ap.add_mutually_exclusive_group()
     scale.add_argument("--full", action="store_true", help="paper-scale shapes")
     scale.add_argument("--smoke", action="store_true", help="tiny shapes, 1 rep")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit per-executor serial_fraction from the measured "
+                         "overlap rows and record it (with calibrated "
+                         "re-predictions) in the JSON")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write measurements + SweepPlan.describe() as JSON")
     args = ap.parse_args()
-    data = collect(full=args.full, smoke=args.smoke)
+    data = collect(full=args.full, smoke=args.smoke, calibrate=args.calibrate)
     for r in data["results"]:
         print(row(r["name"], r["median_s"], r["derived"]))
+    if args.calibrate:
+        fitted = data["calibration"]["serial_fractions"]
+        print(f"# calibrated serial_fractions: {fitted or 'n/a (no measurements)'}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(data, f, indent=1)

@@ -1,11 +1,12 @@
 """Quickstart: CP decomposition of a dense tensor with the paper's MTTKRP.
 
 Builds a rank-4 planted tensor + noise, plans the sweep through the
-``Problem -> SweepPlan -> Executor`` front door (the planner reproduces the
-paper's Sec. 5.3.3 method mix: 1-step external modes, 2-step internal
-modes), runs CP-ALS, prints fit trajectory and per-iteration timing, and
-cross-checks the fused Pallas kernel against the einsum oracle on one
-MTTKRP.
+``Problem -> SweepPlan -> Executor`` front door (the planner argmins over
+contraction schedules -- on an order-4 tensor it picks a dimension tree,
+reading X twice per sweep instead of four times; full MTTKRPs inside any
+schedule follow the paper's Sec. 5.3.3 method mix), runs CP-ALS, prints
+fit trajectory and per-iteration timing, and cross-checks the fused Pallas
+kernel against the einsum oracle on one MTTKRP.
 
     PYTHONPATH=src python examples/quickstart.py
 """

@@ -1,4 +1,4 @@
-"""Dimension-tree CP-ALS sweep -- the paper's Sec. 6 "natural next step".
+"""Dimension-tree contraction primitives -- the paper's Sec. 6 "next step".
 
 Phan et al. [19, Sec. III.C] avoid recomputing partial MTTKRPs across modes:
 split the modes into halves L = {0..m-1}, R = {m..N-1} and compute two
@@ -12,14 +12,28 @@ multi-TTV over the sibling modes).  Updating the left modes first (from T_L,
 which depends only on the *right* factors) and then recomputing T_R from the
 fresh left factors reproduces the EXACT standard-ALS iterates -- verified in
 tests against cpals.als_sweep -- while reading X twice per sweep instead of
-N times.  The paper predicts ~2x per-iteration gain for 4-way tensors; the
-dry-run byte counts in EXPERIMENTS.md SPerf confirm it at pod scale.
+N times.  The paper predicts ~2x per-iteration gain for 4-way tensors.
+
+This module holds the *numeric primitives* of that idea, generalized so the
+binary two-partial split is just one point in a family: any tree over
+contiguous mode ranges (Ma & Solomonik's multi-level dimension trees) is
+expressible with two operations --
+
+* :func:`partial_mttkrp_range` -- contract every mode outside ``[lo, hi)``
+  of the raw tensor away (the root-level GEMM of a tree node);
+* :func:`contract_from_partial` -- contract a subset of a partial tensor's
+  surviving modes with their factors (an inner tree edge, or a leaf's
+  multi-TTV when a single mode survives).
+
+The tree *shapes* themselves live in :mod:`repro.plan.schedule` (the
+contraction-schedule IR); :func:`dimtree_sweep` stays as the frozen
+back-compat wrapper for the original binary-split sweep.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Sequence
+from typing import Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +69,58 @@ def partial_mttkrp_left(x: Array, left_factors: Sequence[Array]) -> Array:
     k_l = krp_or_ones(list(left_factors), c, x.dtype)  # (L, C)
     t = k_l.T @ x.reshape(-1, right_size)  # (C, R)
     return jnp.moveaxis(t.reshape((c,) + x.shape[m:]), 0, -1)
+
+
+def partial_mttkrp_range(x: Array, factors: Sequence[Array], lo: int, hi: int) -> Array:
+    """Contract every mode of ``x`` outside ``[lo, hi)`` with its factor.
+
+    Returns the partial tensor of shape ``x.shape[lo:hi] + (C,)`` -- the
+    root-level contraction of a general dimension-tree node.  The trailing
+    modes ``[hi, N)`` go first through the same GEMM as
+    :func:`partial_mttkrp_right` (so ``lo == 0`` reproduces it exactly, and
+    ``hi == N`` reproduces :func:`partial_mttkrp_left`); a leading range is
+    then contracted against its KRP along the shared rank axis.  ``factors``
+    is the full mode-ordered list; entries inside ``[lo, hi)`` are ignored.
+    """
+    n = x.ndim
+    if not 0 <= lo < hi <= n:
+        raise ValueError(f"range [{lo}, {hi}) invalid for order-{n} tensor")
+    if lo == 0 and hi == n:
+        raise ValueError("range [0, N) contracts nothing")
+    if lo == 0:
+        return partial_mttkrp_right(x, list(factors[hi:]))
+    if hi == n:
+        return partial_mttkrp_left(x, list(factors[:lo]))
+    t = partial_mttkrp_right(x, list(factors[hi:]))  # x.shape[:hi] + (C,)
+    c = factors[0].shape[1]
+    left_size = math.prod(x.shape[:lo])
+    k_l = krp_or_ones(list(factors[:lo]), c, x.dtype)  # (L, C)
+    t3 = t.reshape(left_size, -1, c)
+    out = jnp.einsum("lmc,lc->mc", t3, k_l)
+    return out.reshape(x.shape[lo:hi] + (c,))
+
+
+def contract_from_partial(
+    t: Array, factors: Mapping[int, Array], lo: int, hi: int, parent_lo: int
+) -> Array:
+    """Contract modes of a partial tensor ``t`` down to the range ``[lo, hi)``.
+
+    ``t`` carries the parent node's surviving modes (starting at tensor mode
+    ``parent_lo``) plus the trailing rank axis; ``factors`` maps each
+    *tensor* mode being contracted here to its ``(I_m, C)`` factor.  The
+    rank axis is shared by every term (Hadamard semantics, exactly as in the
+    binary tree's multi-TTV).  With a single surviving mode this is the
+    leaf-level MTTKRP of :func:`mttkrp_from_partial`.
+    """
+    order = t.ndim - 1
+    letters = mode_letters(order)
+    terms = [letters + "c"]
+    args: list[Array] = [t]
+    for m in sorted(factors):
+        terms.append(letters[m - parent_lo] + "c")
+        args.append(factors[m])
+    out = "".join(letters[k - parent_lo] for k in range(lo, hi)) + "c"
+    return jnp.einsum(",".join(terms) + f"->{out}", *args)
 
 
 def mttkrp_from_partial(t: Array, siblings: Sequence[Array], pos: int) -> Array:

@@ -9,7 +9,12 @@ hiding variants attack latency instead: ``dist_mttkrp_overlapped`` chunks
 the local kernel so each slab's psum runs under the next slab's GEMM
 (exact), and ``dist_mttkrp_compressed`` + ``init_mttkrp_error_state``
 swap the fp32 psum for the int8 error-feedback collective (approximate,
-convergent).
+convergent).  The per-node contractions of a general dimension-tree
+schedule (``repro.plan.schedule``) get the same treatment:
+``dist_contract_range`` / ``dist_contract_partial`` place one minimal psum
+per schedule node (chunked for overlap via ``n_chunks``), and the
+``*_compressed`` variants run that node psum through the error-feedback
+collective.
 
 ``collectives``: bandwidth-reducing collectives (int8 quantized
 all-reduce with error feedback) and the data-parallel train step built
@@ -19,6 +24,10 @@ on them.
 from .collectives import compressed_psum, init_error_state, make_compressed_dp_step
 from .dist_mttkrp import (
     dist_als_sweep,
+    dist_contract_partial,
+    dist_contract_partial_compressed,
+    dist_contract_range,
+    dist_contract_range_compressed,
     dist_cp_als,
     dist_dimtree_sweep,
     dist_mttkrp,
@@ -33,6 +42,10 @@ __all__ = [
     "init_error_state",
     "make_compressed_dp_step",
     "dist_als_sweep",
+    "dist_contract_partial",
+    "dist_contract_partial_compressed",
+    "dist_contract_range",
+    "dist_contract_range_compressed",
     "dist_cp_als",
     "dist_dimtree_sweep",
     "dist_mttkrp",

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core.dimtree import partial_mttkrp_left, partial_mttkrp_right
+from repro.core.dimtree import contract_from_partial, partial_mttkrp_range
 from repro.core.mttkrp import Method, mttkrp
 
 from .collectives import compressed_psum
@@ -275,6 +275,222 @@ def dist_mttkrp_compressed(
 
 
 # --------------------------------------------------------------------------
+# Per-node contractions of a general dimension-tree schedule.  Every node of
+# repro.plan.schedule is one of two shapes -- a range contraction of the raw
+# tensor, or a further contraction of an already-complete partial tensor --
+# and each gets the same treatment as the full MTTKRP: local kernel inside
+# shard_map + the minimal psum over the axes mapped to the modes contracted
+# AT THAT NODE (parents were already reduced when they were built).  The
+# overlapped variants chunk along the node's leading kept mode so each
+# slab's psum hides behind the next slab's contraction; the compressed
+# variants run the node psum through the int8 error-feedback collective.
+# --------------------------------------------------------------------------
+def _node_reduce_axes(mode_axes: ModeAxes, contracted: Sequence[int]) -> tuple[str, ...]:
+    """Mesh axes of the mapped modes contracted at one node, in mode order."""
+    want = set(contracted)
+    return tuple(mode_axes[m] for m in sorted(mode_axes) if m in want)
+
+
+def _dist_contract(
+    src: Array,
+    factors: Sequence[Array],
+    lo: int,
+    hi: int,
+    parent_lo: int,
+    parent_hi: int,
+    mode_axes: ModeAxes,
+    mesh: Mesh,
+    *,
+    from_root: bool,
+    n_chunks: int = 1,
+    err: Array | None = None,
+):
+    """Shared core of the four per-node contraction entry points.
+
+    Derives the node's (contracted modes, reduce axes, specs) once, runs
+    the matching local contraction -- :func:`partial_mttkrp_range` off the
+    raw tensor, :func:`contract_from_partial` off a partial -- and
+    completes it with this node's collective: per-slab psums along mode
+    ``lo`` when exact (``err is None``), the int8 error-feedback
+    ``compressed_psum`` otherwise.
+    """
+    contracted = [m for m in range(parent_lo, parent_hi) if not lo <= m < hi]
+    reduce_axes = _node_reduce_axes(mode_axes, contracted)
+    keep_axes = [mode_axes.get(k) for k in range(lo, hi)]
+    f_specs = [P(mode_axes.get(m), None) for m in contracted]
+    src_spec = (
+        _x_spec(src.ndim, mode_axes)
+        if from_root
+        else P(*[mode_axes.get(k) for k in range(parent_lo, parent_hi)], None)
+    )
+    lo_local = src.shape[lo - parent_lo] // (
+        mesh.shape[mode_axes[lo]] if lo in mode_axes else 1
+    )
+    chunks = max(1, min(int(n_chunks), lo_local)) if reduce_axes else 1
+    bounds = _chunk_bounds(lo_local, chunks)
+    err_spec = P(*reduce_axes, *keep_axes, None)
+
+    def contract_local(src_blk, cf):
+        if from_root:
+            fl = list(cf[:lo]) + [None] * (hi - lo) + list(cf[lo:])
+            return partial_mttkrp_range(src_blk, fl, lo, hi)
+        return contract_from_partial(src_blk, dict(zip(contracted, cf)), lo, hi, parent_lo)
+
+    def local_exact(src_blk, *cf):
+        out = contract_local(src_blk, cf)
+        if not reduce_axes:
+            return out
+        slabs = [
+            jax.lax.psum(jax.lax.slice_in_dim(out, i0, i1, axis=0), reduce_axes)
+            for i0, i1 in zip(bounds[:-1], bounds[1:])
+        ]
+        return slabs[0] if len(slabs) == 1 else jnp.concatenate(slabs, axis=0)
+
+    def local_compressed(src_blk, err_blk, *cf):
+        out = contract_local(src_blk, cf)
+        total, new_e = compressed_psum(out, reduce_axes, err_blk.reshape(out.shape))
+        return total, new_e.reshape(err_blk.shape)
+
+    contracted_factors = [factors[m] for m in contracted]
+    if err is None:
+        fn = compat.shard_map(
+            local_exact,
+            mesh=mesh,
+            in_specs=(src_spec, *f_specs),
+            out_specs=P(*keep_axes, None),
+            check_vma=False,
+        )
+        return fn(src, *contracted_factors)
+    fn = compat.shard_map(
+        local_compressed,
+        mesh=mesh,
+        in_specs=(src_spec, err_spec, *f_specs),
+        out_specs=(P(*keep_axes, None), err_spec),
+        check_vma=False,
+    )
+    return fn(src, err, *contracted_factors)
+
+
+def dist_contract_range(
+    x: Array,
+    factors: Sequence[Array],
+    lo: int,
+    hi: int,
+    mode_axes: ModeAxes,
+    mesh: Mesh,
+    *,
+    n_chunks: int = 1,
+) -> Array:
+    """Distributed range contraction: every mode outside ``[lo, hi)`` of the
+    block-distributed tensor is contracted with its (row-sharded) factor.
+
+    Local :func:`repro.core.dimtree.partial_mttkrp_range` per block + one
+    psum over the axes mapped to the contracted modes; the partial tensor
+    stays distributed over the axes of its surviving modes.  ``n_chunks > 1``
+    splits the node's collective into per-slab psums along mode ``lo`` (the
+    leading kept mode): slab ``k``'s wire time has no data dependency on
+    anything but its own rows, so XLA's latency-hiding scheduler runs the
+    later slabs under whatever compute follows.  Slab psums are elementwise
+    reductions over disjoint rows of the same local result, so the output is
+    *bitwise identical* to the unchunked path by construction.
+    """
+    _validate(x.shape, mode_axes, mesh)
+    return _dist_contract(
+        x, factors, lo, hi, 0, x.ndim, mode_axes, mesh,
+        from_root=True, n_chunks=n_chunks,
+    )
+
+
+def dist_contract_partial(
+    t: Array,
+    factors: Sequence[Array],
+    lo: int,
+    hi: int,
+    parent_lo: int,
+    parent_hi: int,
+    mode_axes: ModeAxes,
+    mesh: Mesh,
+    *,
+    n_chunks: int = 1,
+) -> Array:
+    """Distributed partial-to-partial contraction of one schedule node.
+
+    ``t`` is an already-complete partial tensor carrying modes
+    ``[parent_lo, parent_hi)`` plus the rank axis, distributed over those
+    modes' axes; the modes outside ``[lo, hi)`` are contracted with their
+    row-sharded factors (a multi-TTV, the rank axis shared Hadamard-style).
+    The local contraction sums only each device's index block of the
+    contracted modes, so one psum over those modes' axes completes it --
+    the per-node analogue of the full MTTKRP's minimal collective.  With a
+    single kept mode this IS the leaf update off a partial.  ``n_chunks``
+    splits the psum into per-slab collectives along mode ``lo`` exactly as
+    in :func:`dist_contract_range` -- bitwise identical by construction.
+    """
+    return _dist_contract(
+        t, factors, lo, hi, parent_lo, parent_hi, mode_axes, mesh,
+        from_root=False, n_chunks=n_chunks,
+    )
+
+
+def dist_contract_range_compressed(
+    x: Array,
+    factors: Sequence[Array],
+    lo: int,
+    hi: int,
+    mode_axes: ModeAxes,
+    mesh: Mesh,
+    err: Array,
+) -> tuple[Array, Array]:
+    """:func:`dist_contract_range` with the node psum compressed.
+
+    The completing fp32 psum of the partial tensor runs through
+    :func:`repro.dist.collectives.compressed_psum` over the same axes, with
+    ``err`` the node's persistent error-feedback residual (see
+    :func:`init_mttkrp_error_state` for the layout convention); returns
+    ``(partial, new_err)``.  Falls back to the exact path when the node
+    needs no collective.
+    """
+    _validate(x.shape, mode_axes, mesh)
+    contracted = [m for m in range(x.ndim) if not lo <= m < hi]
+    if not _node_reduce_axes(mode_axes, contracted):
+        return dist_contract_range(x, factors, lo, hi, mode_axes, mesh), err
+    return _dist_contract(
+        x, factors, lo, hi, 0, x.ndim, mode_axes, mesh, from_root=True, err=err
+    )
+
+
+def dist_contract_partial_compressed(
+    t: Array,
+    factors: Sequence[Array],
+    lo: int,
+    hi: int,
+    parent_lo: int,
+    parent_hi: int,
+    mode_axes: ModeAxes,
+    mesh: Mesh,
+    err: Array,
+) -> tuple[Array, Array]:
+    """:func:`dist_contract_partial` with the node psum compressed.
+
+    Same placement, but the node's completing collective is the int8
+    error-feedback gather with ``err`` as this node's persistent residual;
+    returns ``(result, new_err)``.  Exact path when no collective is needed.
+    """
+    contracted = [m for m in range(parent_lo, parent_hi) if not lo <= m < hi]
+    if not _node_reduce_axes(mode_axes, contracted):
+        return (
+            dist_contract_partial(
+                t, factors, lo, hi, parent_lo, parent_hi, mode_axes, mesh
+            ),
+            err,
+        )
+    return _dist_contract(
+        t, factors, lo, hi, parent_lo, parent_hi, mode_axes, mesh,
+        from_root=False, err=err,
+    )
+
+
+# --------------------------------------------------------------------------
 # Sharded ALS sweeps.  Only the X-sized contractions run inside shard_map;
 # the C x C Gram/Hadamard/pinv algebra and the (I_k, C) factor updates run
 # at the global-array level (GSPMD inserts the small factor collectives),
@@ -300,57 +516,6 @@ def dist_als_sweep(
         x, factors, weights, norm_x, it,
         strategy=method, normalize=normalize, mode_axes=mode_axes, mesh=mesh,
     )
-
-
-def _dist_partial_right(
-    x: Array, right_factors: Sequence[Array], mode_axes: ModeAxes, mesh: Mesh
-) -> Array:
-    """Distributed ``T_L``: contract the trailing ``len(right)`` modes away.
-
-    Local partial GEMM on each block + psum over the axes mapped to the
-    contracted (right) modes; the result stays distributed over the axes of
-    the surviving left modes.
-    """
-    m = x.ndim - len(right_factors)
-    reduce_axes = _reduce_axes(mode_axes, keep_modes=range(m))
-    f_specs = _factor_specs(x.ndim, mode_axes)[m:]
-
-    def local_fn(x_blk, *rf):
-        t = partial_mttkrp_right(x_blk, list(rf))
-        if reduce_axes:
-            t = jax.lax.psum(t, reduce_axes)
-        return t
-
-    return compat.shard_map(
-        local_fn,
-        mesh=mesh,
-        in_specs=(_x_spec(x.ndim, mode_axes), *f_specs),
-        out_specs=P(*[mode_axes.get(k) for k in range(m)], None),
-        check_vma=False,
-    )(x, *right_factors)
-
-
-def _dist_partial_left(
-    x: Array, left_factors: Sequence[Array], mode_axes: ModeAxes, mesh: Mesh
-) -> Array:
-    """Distributed ``T_R``: contract the leading ``len(left)`` modes away."""
-    m = len(left_factors)
-    reduce_axes = _reduce_axes(mode_axes, keep_modes=range(m, x.ndim))
-    f_specs = _factor_specs(x.ndim, mode_axes)[:m]
-
-    def local_fn(x_blk, *lf):
-        t = partial_mttkrp_left(x_blk, list(lf))
-        if reduce_axes:
-            t = jax.lax.psum(t, reduce_axes)
-        return t
-
-    return compat.shard_map(
-        local_fn,
-        mesh=mesh,
-        in_specs=(_x_spec(x.ndim, mode_axes), *f_specs),
-        out_specs=P(*[mode_axes.get(k) for k in range(m, x.ndim)], None),
-        check_vma=False,
-    )(x, *left_factors)
 
 
 def dist_dimtree_sweep(
@@ -416,15 +581,16 @@ def dist_cp_als(
     from repro import plan as planlib
 
     problem = planlib.Problem.from_tensor(x, rank, mode_axes=mode_axes, mesh=mesh)
-    # the executor kind propagates verbatim: plan_sweep resolves "auto"
-    # (dimtree auto-selects the exact sharded executor) and raises on an
-    # explicit overlapping/compressed request for a dimtree plan rather
-    # than silently running the exact path
+    # the executor kind propagates verbatim (any executor now pairs with any
+    # schedule: overlapping chunks and compressed compresses the dimtree
+    # partials per node); the tree shape stays pinned to the wrapper's
+    # historical behavior -- flat per-mode, or the binary split for dimtree
     sweep_plan = planlib.plan_sweep(
         problem,
         strategy="dimtree" if dimtree else method,
         normalize=normalize,
         executor=executor,
+        schedule=None if dimtree else "flat",
     )
     st = planlib.cp_als(
         x,

@@ -1,28 +1,37 @@
 """``repro.plan`` -- one front door: Problem -> SweepPlan -> Executor.
 
-The solver API redesigned around three pieces:
+The solver API redesigned around four pieces:
 
 * :class:`Problem` -- immutable descriptor (shape, rank, dtype, optional
   mode->mesh-axis mapping) every planner call keys on.
-* :func:`plan_sweep` -- picks each mode's MTTKRP algorithm (1-step /
-  2-step-left / 2-step-right / dimension-tree / fused) from the analytic
-  flop/byte/collective cost model, and -- via :func:`select_executor` --
-  the executor kind (local / sharded / overlapping / compressed) under the
-  bounded-overlap model; :meth:`SweepPlan.describe` exposes the predictions
-  so benchmarks report predicted-vs-measured.
+* :class:`Schedule` -- the contraction-schedule IR: a tree of
+  :class:`ContractionNode` GEMMs whose leaves are the N mode updates.  The
+  flat per-mode sweep and the binary dimension tree are two degenerate
+  shapes (:func:`flat_schedule` / :func:`binary_schedule`); multi-level
+  trees (:func:`chain_schedule`, :func:`build_schedule`) reuse partial
+  contractions across levels.
+* :func:`plan_sweep` -- the cost-model planner: jointly argmins the tree
+  shape (:func:`enumerate_schedules`), each root leaf's MTTKRP algorithm
+  (1-step / 2-step-left / 2-step-right / fused), and -- via
+  :func:`select_executor` -- the executor kind (local / sharded /
+  overlapping / compressed) under the bounded-overlap model, per-node
+  (:func:`node_cost`); :meth:`SweepPlan.describe` exposes the predictions
+  so benchmarks report predicted-vs-measured, and calibrated
+  ``serial_fractions`` from ``bench_mttkrp --calibrate`` feed back in.
 * :class:`Executor` -- where contractions run: :class:`LocalExecutor`
-  (single device), :class:`ShardedExecutor` (``shard_map`` + minimal psum
-  over a device mesh), :class:`OverlappingExecutor` (chunked psums hidden
-  behind the local GEMMs; exact), or :class:`CompressedShardedExecutor`
-  (int8 error-feedback factor all-reduce; approximate).
+  (single device), :class:`ShardedExecutor` (``shard_map`` + minimal
+  per-node psum over a device mesh), :class:`OverlappingExecutor` (chunked
+  psums hidden behind the local GEMMs -- full MTTKRPs and tree partials
+  alike; exact), or :class:`CompressedShardedExecutor` (int8 error-feedback
+  collectives with per-node residuals; approximate).
   :func:`make_executor` builds the instance a ``SweepPlan.executor`` kind
   names.
 
-Exactly one :func:`als_sweep` engine and one :func:`cp_als` driver consume
-them; the pre-redesign entry points (``core.cpals.cp_als``,
-``core.dimtree.dimtree_sweep``, ``dist.dist_mttkrp.dist_cp_als`` /
-``dist_dimtree_sweep``) remain as frozen thin wrappers that build the
-corresponding plan.
+Exactly one :func:`als_sweep` engine (a schedule walker) and one
+:func:`cp_als` driver consume them; the pre-redesign entry points
+(``core.cpals.cp_als``, ``core.dimtree.dimtree_sweep``,
+``dist.dist_mttkrp.dist_cp_als`` / ``dist_dimtree_sweep``) remain as frozen
+thin wrappers that build the corresponding plan.
 """
 
 from .cost import (
@@ -34,7 +43,9 @@ from .cost import (
     dimtree_mode_cost,
     executor_mode_cost,
     mode_cost,
+    node_cost,
     ring_allreduce_bytes,
+    validate_executor,
 )
 from .executor import (
     CompressedShardedExecutor,
@@ -44,34 +55,62 @@ from .executor import (
     ShardedExecutor,
     make_executor,
 )
-from .planner import STRATEGIES, ModePlan, SweepPlan, plan_sweep, select_executor
+from .planner import (
+    SCHEDULE_NAMES,
+    STRATEGIES,
+    ModePlan,
+    NodePlan,
+    SweepPlan,
+    plan_sweep,
+    select_executor,
+)
 from .problem import Problem
+from .schedule import (
+    ContractionNode,
+    Schedule,
+    binary_schedule,
+    build_schedule,
+    chain_schedule,
+    enumerate_schedules,
+    flat_schedule,
+)
 from .sweep import SweepState, als_sweep, cp_als, legacy_sweep
 
 __all__ = [
     "ALGORITHMS",
     "DEFAULT_OVERLAP_CHUNKS",
     "EXECUTORS",
+    "SCHEDULE_NAMES",
     "STRATEGIES",
     "CompressedShardedExecutor",
+    "ContractionNode",
     "Executor",
     "LocalExecutor",
     "ModeCost",
     "ModePlan",
+    "NodePlan",
     "OverlappingExecutor",
     "Problem",
+    "Schedule",
     "ShardedExecutor",
     "SweepPlan",
     "SweepState",
     "als_sweep",
+    "binary_schedule",
+    "build_schedule",
+    "chain_schedule",
     "compressed_allgather_bytes",
     "cp_als",
     "dimtree_mode_cost",
+    "enumerate_schedules",
     "executor_mode_cost",
+    "flat_schedule",
     "legacy_sweep",
     "make_executor",
     "mode_cost",
+    "node_cost",
     "plan_sweep",
     "ring_allreduce_bytes",
     "select_executor",
+    "validate_executor",
 ]

@@ -1,9 +1,9 @@
-"""Analytic per-mode cost model behind ``plan_sweep``.
+"""Analytic per-mode / per-node cost model behind ``plan_sweep``.
 
 Extends the flop/byte model of :func:`repro.core.mttkrp.mttkrp_flops` with
 the algorithm-specific intermediate traffic (the full-KRP materialization of
-1-step, the partial tensor of 2-step, the half-tensors of the dimension
-tree) and -- for sharded problems -- the per-mode psum volume the
+1-step, the partial tensor of 2-step, the partial tensors of a contraction
+schedule) and -- for sharded problems -- the per-node psum volume the
 ``mode_axes`` placement requires (ring all-reduce over the axes mapped to
 contracted modes, per Ballard/Knight/Rouse's collective-volume accounting).
 
@@ -19,26 +19,33 @@ of the smaller term that cannot be hidden behind the larger one: 1.0 for
 the plain sharded executor (psum strictly after the local GEMM -- the model
 degenerates to the old additive sum), ``1/n_chunks`` for the overlapping
 executor (chunk ``k``'s psum runs under chunk ``k+1``'s GEMM; only the
-first GEMM and the last psum stay exposed).  :func:`executor_mode_cost`
-applies these per-executor adjustments -- including the compressed
-executor's int8 wire volume -- on top of the per-algorithm terms of
-:func:`mode_cost`.
+first GEMM and the last psum stay exposed).  Measured constants fitted by
+``bench_mttkrp --calibrate`` enter through the ``serial_fractions`` mapping
+every costing entry point accepts (and ``plan_sweep`` threads through).
+
+:func:`node_cost` is the single coster for schedule nodes -- leaf-off-root
+MTTKRPs, root-level partial GEMMs, and partial-to-partial multi-TTVs alike
+-- and :func:`validate_executor` is the one validity predicate every
+(schedule, executor) pair passes through: a pair is either costed or
+rejected here, never special-cased downstream.
 
 Absolute numbers are hardware-nominal; the planner only ever compares
-costs of the same mode across algorithms/executors, where shared terms
-cancel.
+costs of the same contraction across algorithms/executors/schedules, where
+shared terms cancel.
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, replace
+from typing import Mapping
 
 from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 from repro.core.mttkrp import mttkrp_flops
 from repro.core.tensor_ops import dims_split
 
 from .problem import Problem
+from .schedule import ContractionNode, binary_schedule, ring_allreduce_bytes
 
 ALGORITHMS = (
     "1step",
@@ -67,9 +74,30 @@ _INT8_ITEMSIZE = 1.0
 _SCALE_BYTES = 4.0
 
 
+def validate_executor(problem: Problem, executor: str) -> None:
+    """THE validity predicate for (problem, executor) pairings.
+
+    Every (schedule, executor) pair is either costed or rejected here --
+    schedules themselves never restrict the executor (any node's psum can
+    be overlapped or compressed), so validity depends only on the problem's
+    placement: ``local`` cannot run sharded problems, and the
+    communication-hiding kinds need a sharded problem to have anything to
+    hide.  Raises a single-format ``ValueError`` on rejection.
+    """
+    if executor not in EXECUTORS:
+        raise ValueError(f"unknown executor {executor!r} (choose from {EXECUTORS})")
+    reason = None
+    if executor == "local" and problem.sharded:
+        reason = "it runs on one device but the problem maps modes to mesh axes"
+    elif executor in ("overlapping", "compressed") and not problem.sharded:
+        reason = "it reschedules/compresses psums but the problem has none"
+    if reason is not None:
+        raise ValueError(f"executor {executor!r} cannot run this problem: {reason}")
+
+
 @dataclass(frozen=True)
 class ModeCost:
-    """Cost terms for one mode-n MTTKRP under one algorithm.
+    """Cost terms for one contraction (a mode's MTTKRP or a schedule node).
 
     ``gemm_flops`` / ``krp_flops`` / ``second_step_flops`` are the terms of
     ``mttkrp_flops`` (local block dims for sharded problems); ``bytes`` is
@@ -134,13 +162,6 @@ class ModeCost:
         }
 
 
-def ring_allreduce_bytes(block_bytes: float, participants: int) -> float:
-    """Per-device wire bytes of a ring all-reduce of a ``block_bytes`` blob."""
-    if participants <= 1:
-        return 0.0
-    return 2.0 * block_bytes * (participants - 1) / participants
-
-
 def compressed_allgather_bytes(
     block_bytes: float, participants: int, itemsize: float = 4.0
 ) -> float:
@@ -184,10 +205,16 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
     Computed on the per-device block dims; the psum volume for sharded
     problems is the ring all-reduce of the local partial result over the
     axes mapped to contracted modes (no collective when mode ``n`` itself is
-    the only mapped mode -- its axis carries the output rows).
+    the only mapped mode -- its axis carries the output rows).  The
+    ``"dimtree"`` algorithm prices the mode's share of the balanced binary
+    schedule via :func:`dimtree_mode_cost` (which folds over
+    :func:`node_cost`); general tree shapes are costed per node by
+    :func:`node_cost` directly.
     """
     if algorithm not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algorithm!r} (choose from {ALGORITHMS})")
+    if algorithm == "dimtree":
+        return dimtree_mode_cost(problem, n, (problem.ndim + 1) // 2)
     shape = problem.local_shape
     c = problem.rank
     s = problem.itemsize
@@ -243,17 +270,58 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
             bytes=base["tensor_bytes"] + (L + In + R) * c * s + out_bytes,
             collective_bytes=coll,
         )
-    if algorithm == "baseline":
-        # reorder (transpose copy: read + write) then one GEMM over the copy
-        return ModeCost(
-            gemm_flops=base["gemm_flops"],
-            krp_flops=base["krp_flops"],
-            second_step_flops=0.0,
-            bytes=3.0 * base["tensor_bytes"] + 2.0 * base["krp_bytes"] + out_bytes,
-            collective_bytes=coll,
-        )
-    # "dimtree" needs the half split, which only the planner knows.
-    raise ValueError("dimtree mode costs are built by plan_sweep via dimtree_mode_cost")
+    assert algorithm == "baseline"
+    # reorder (transpose copy: read + write) then one GEMM over the copy
+    return ModeCost(
+        gemm_flops=base["gemm_flops"],
+        krp_flops=base["krp_flops"],
+        second_step_flops=0.0,
+        bytes=3.0 * base["tensor_bytes"] + 2.0 * base["krp_bytes"] + out_bytes,
+        collective_bytes=coll,
+    )
+
+
+def _compress_terms(
+    problem: Problem, base: ModeCost, block_bytes: float, participants: int
+) -> ModeCost:
+    """Replace a node's ring all-reduce with the int8 error-feedback gather:
+    wire bytes become :func:`compressed_allgather_bytes` of the local output
+    block, and HBM traffic grows by the quantize (write + read the int8
+    block) and dequantize (read the ``p-1`` gathered payloads) passes."""
+    s = problem.itemsize
+    int8_block = block_bytes * _INT8_ITEMSIZE / s
+    quant_bytes = (participants + 1) * int8_block
+    return replace(
+        base,
+        collective_bytes=compressed_allgather_bytes(block_bytes, participants, s),
+        bytes=base.bytes + quant_bytes,
+    )
+
+
+def _adjust(
+    problem: Problem,
+    base: ModeCost,
+    executor: str,
+    *,
+    chunk_extent: int,
+    n_chunks: int,
+    block_bytes: float,
+    participants: int,
+    serial_fractions: Mapping[str, float] | None,
+) -> ModeCost:
+    """Full executor adjustment: compression terms, then schedule fraction."""
+    if executor == "compressed" and base.collective_bytes > 0.0:
+        base = _compress_terms(problem, base, block_bytes, participants)
+    fitted = (serial_fractions or {}).get(executor)
+    if base.collective_bytes <= 0.0:
+        return base
+    if executor == "overlapping":
+        chunks = max(1, min(int(n_chunks), int(chunk_extent)))
+        f = float(fitted) if fitted is not None else 1.0 / chunks
+        return replace(base, serial_fraction=f)
+    if fitted is not None:
+        return replace(base, serial_fraction=float(fitted))
+    return base
 
 
 def executor_mode_cost(
@@ -263,6 +331,7 @@ def executor_mode_cost(
     executor: str = "sharded",
     *,
     n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
+    serial_fractions: Mapping[str, float] | None = None,
 ) -> ModeCost:
     """Cost of one mode-``n`` MTTKRP under ``algorithm`` on ``executor``.
 
@@ -280,74 +349,136 @@ def executor_mode_cost(
       :func:`compressed_allgather_bytes`, and HBM traffic grows by the
       quantize/dequantize passes (write + read the int8 block, read the
       gathered payloads).
+
+    ``serial_fractions`` (executor kind -> fitted unhidable fraction, from
+    ``bench_mttkrp --calibrate``) overrides the analytic defaults.
     """
-    if executor not in EXECUTORS:
-        raise ValueError(f"unknown executor {executor!r} (choose from {EXECUTORS})")
-    if executor == "local" and problem.sharded:
-        raise ValueError("executor 'local' cannot run a sharded problem")
-    if executor in ("overlapping", "compressed") and not problem.sharded:
-        raise ValueError(f"executor {executor!r} needs a sharded problem")
+    validate_executor(problem, executor)
     base = mode_cost(problem, n, algorithm)
-    if executor in ("local", "sharded") or base.collective_bytes <= 0.0:
-        return base
-    if executor == "overlapping":
-        in_local = problem.local_shape[n]
-        chunks = max(1, min(int(n_chunks), in_local))
-        return replace(base, serial_fraction=1.0 / chunks)
-    # compressed: recompute the wire term from the output block size, over
-    # exactly the axes the executor's collective reduces
     _, in_local, _ = dims_split(problem.local_shape, n)
-    s = problem.itemsize
-    block = in_local * problem.rank * s
+    block = in_local * problem.rank * problem.itemsize
     p = math.prod(problem.axis_sizes[a] for a in problem.reduce_axes_for(n))
-    # quantize (read+write the int8 block) and dequantize (read the p-1
-    # gathered payloads), at one byte per element
-    int8_block = block * _INT8_ITEMSIZE / s
-    quant_bytes = (p + 1) * int8_block
-    return replace(
+    return _adjust(
+        problem,
         base,
-        collective_bytes=compressed_allgather_bytes(block, p, s),
-        bytes=base.bytes + quant_bytes,
+        executor,
+        chunk_extent=problem.local_shape[n],
+        n_chunks=n_chunks,
+        block_bytes=block,
+        participants=p,
+        serial_fractions=serial_fractions,
+    )
+
+
+def node_cost(
+    problem: Problem,
+    node: ContractionNode,
+    executor: str | None = None,
+    *,
+    algorithm: str = "1step",
+    n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
+    serial_fractions: Mapping[str, float] | None = None,
+) -> ModeCost:
+    """Cost of one schedule node's contraction on ``executor``.
+
+    ``executor=None`` resolves to the plain kind matching the problem's
+    placement (``"sharded"`` when modes are mapped, ``"local"`` otherwise).
+
+    The single coster behind every tree shape (the old per-mode and
+    ``dimtree_mode_cost`` special cases fold into it):
+
+    * **leaf off the root** -- a full mode MTTKRP: delegates to
+      :func:`executor_mode_cost` with ``algorithm`` (the planner's per-mode
+      pick applies only here).
+    * **internal node off the root** -- one X-sized GEMM against the KRP of
+      the contracted modes, writing the partial tensor, plus its psum over
+      the contracted modes' axes.
+    * **any node off a partial** -- a multi-TTV: one pass over the parent's
+      (much smaller) partial per contracted mode, shrinking as it goes,
+      plus this node's own psum.
+
+    ``serial_fractions`` threads calibrated per-executor constants through,
+    exactly as in :func:`executor_mode_cost`.
+    """
+    if executor is None:
+        executor = "sharded" if problem.sharded else "local"
+    validate_executor(problem, executor)
+    if node.is_root:
+        raise ValueError("the schedule root is the raw tensor, not a contraction")
+    c = problem.rank
+    s = problem.itemsize
+    if node.from_root and node.is_leaf:
+        return executor_mode_cost(
+            problem, node.lo, algorithm, executor,
+            n_chunks=n_chunks, serial_fractions=serial_fractions,
+        )
+    t_elems = math.prod(node.local_shape)  # kept local dims * rank
+    t_bytes = t_elems * s
+    coll = node.psum_bytes
+    if node.from_root:
+        total = math.prod(problem.local_shape)
+        krp_elems = (
+            math.prod(problem.local_shape[m] for m in node.contracted) * c
+            if node.contracted
+            else 0
+        )
+        base = ModeCost(
+            gemm_flops=2.0 * total * c,
+            krp_flops=float(krp_elems),
+            second_step_flops=0.0,
+            bytes=total * s + 2.0 * krp_elems * s + t_bytes,
+            collective_bytes=coll,
+        )
+    else:
+        parent_elems = (
+            math.prod(problem.local_shape[node.parent_lo : node.parent_hi]) * c
+        )
+        ttv = 0.0
+        elems = float(parent_elems)
+        for m in node.contracted:
+            ttv += 2.0 * elems
+            elems /= problem.local_shape[m]
+        base = ModeCost(
+            gemm_flops=0.0,
+            krp_flops=0.0,
+            second_step_flops=ttv,
+            bytes=parent_elems * s + t_bytes,
+            collective_bytes=coll,
+        )
+    block = t_elems * s
+    return _adjust(
+        problem,
+        base,
+        executor,
+        chunk_extent=problem.local_shape[node.lo],
+        n_chunks=n_chunks,
+        block_bytes=block,
+        participants=node.psum_participants,
+        serial_fractions=serial_fractions,
     )
 
 
 def dimtree_mode_cost(problem: Problem, n: int, split: int) -> ModeCost:
     """Dimension-tree cost of mode ``n`` given the half split at ``split``.
 
-    The first mode of each half carries the half's partial contraction (one
-    X-sized GEMM + its psum); every mode then pays the multi-TTV over its
-    half's partial tensor.
+    Back-compat per-mode view of the binary schedule, folded over
+    :func:`node_cost`: the first mode of each multi-mode half additionally
+    carries its half's partial contraction (the X-sized GEMM + psum), every
+    mode pays its leaf (a multi-TTV off the half's partial, or the full
+    MTTKRP when the half has a single mode).  Summing over modes equals
+    summing :func:`node_cost` over the binary schedule's nodes.
     """
-    shape = problem.local_shape
-    c = problem.rank
-    s = problem.itemsize
-    in_left = n < split
-    half_modes = range(split) if in_left else range(split, problem.ndim)
-    half_elems = math.prod(shape[m] for m in half_modes)
-    t_bytes = half_elems * c * s
-    out_bytes = shape[n] * c * s
-
-    # multi-TTV: contract every sibling mode of the half away from T
-    ttv_flops = 2.0 * half_elems * c if len(list(half_modes)) > 1 else 0.0
-    gemm = krp = 0.0
-    coll = 0.0
-    if n == (0 if in_left else split):  # first mode of the half: build T
-        total = math.prod(shape)
-        gemm = 2.0 * total * c
-        other = [m for m in range(problem.ndim) if (m >= split) == in_left]
-        # KRP of the other half: prod(other dims) x C elements (~1 hadamard
-        # multiply per element with the reuse fold -- same convention as
-        # mttkrp_flops' krp_flops)
-        krp_elems = math.prod(shape[m] for m in other) * c if other else 0
-        krp = float(krp_elems)
-        coll = ring_allreduce_bytes(t_bytes, problem.reduce_participants(half_modes))
-        bytes_ = total * s + 2.0 * krp_elems * s + 2.0 * t_bytes + out_bytes
-    else:
-        bytes_ = t_bytes + out_bytes
-    return ModeCost(
-        gemm_flops=gemm,
-        krp_flops=krp,
-        second_step_flops=ttv_flops,
-        bytes=bytes_,
-        collective_bytes=coll,
-    )
+    sched = binary_schedule(problem, split)
+    leaf = sched.leaf_for_mode(n)
+    total = node_cost(problem, leaf, algorithm="1step")
+    if not leaf.from_root and n == leaf.parent_lo:
+        parent = sched.nodes[leaf.parent]
+        head = node_cost(problem, parent)
+        total = ModeCost(
+            gemm_flops=total.gemm_flops + head.gemm_flops,
+            krp_flops=total.krp_flops + head.krp_flops,
+            second_step_flops=total.second_step_flops + head.second_step_flops,
+            bytes=total.bytes + head.bytes,
+            collective_bytes=total.collective_bytes + head.collective_bytes,
+        )
+    return total

@@ -1,20 +1,21 @@
 """Executors: where a planned contraction actually runs.
 
-The sweep engine (:mod:`repro.plan.sweep`) is executor-agnostic: it asks for
-"the mode-n MTTKRP of this ModePlan" or "the half-partial of these factors"
-and never touches placement.  Four executors implement the protocol:
+The sweep engine (:mod:`repro.plan.sweep`) is executor-agnostic: it walks
+the plan's contraction schedule asking for "this node's contraction" and
+never touches placement.  Four executors implement the protocol:
 
 * :class:`LocalExecutor` -- the paper's shared-memory kernels, one device.
 * :class:`ShardedExecutor` -- the ``shard_map`` + minimal-``psum`` placement
   of :mod:`repro.dist.dist_mttkrp` (local kernel per device block, one psum
-  over the axes mapped to contracted modes).
-* :class:`OverlappingExecutor` -- same numerics, but each mode's local
-  MTTKRP is chunked so chunk ``k``'s psum overlaps chunk ``k+1``'s GEMM
-  (communication hiding; exact).
-* :class:`CompressedShardedExecutor` -- the completing psum runs through
-  the int8 error-feedback collective, with per-mode residuals threaded
-  through the sweep as carry state (communication compression;
-  approximate but convergent).
+  per node over the axes mapped to the modes contracted there).
+* :class:`OverlappingExecutor` -- same numerics, but every node's local
+  contraction -- full MTTKRPs *and* the partial contractions of a
+  dimension-tree schedule -- is chunked so chunk ``k``'s psum overlaps
+  chunk ``k+1``'s GEMM (communication hiding; exact).
+* :class:`CompressedShardedExecutor` -- every node psum runs through the
+  int8 error-feedback collective, with per-node residuals threaded through
+  the sweep as carry state (communication compression; approximate but
+  convergent).
 
 ``plan_sweep(executor="auto")`` picks among them by predicted cost; use
 :func:`make_executor` to turn the chosen ``SweepPlan.executor`` kind into
@@ -26,172 +27,224 @@ from __future__ import annotations
 from typing import Any, Protocol, Sequence, runtime_checkable
 
 import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.dimtree import partial_mttkrp_left, partial_mttkrp_right
+from repro.core.dimtree import contract_from_partial, partial_mttkrp_range
 from repro.core.mttkrp import mttkrp
 from repro.dist.dist_mttkrp import (
-    _dist_partial_left,
-    _dist_partial_right,
+    dist_contract_partial,
+    dist_contract_partial_compressed,
+    dist_contract_range,
+    dist_contract_range_compressed,
     dist_mttkrp,
     dist_mttkrp_compressed,
     dist_mttkrp_overlapped,
-    init_mttkrp_error_state,
     shard_problem,
 )
 
 from .cost import DEFAULT_OVERLAP_CHUNKS, EXECUTORS
-from .planner import ModePlan
-from .problem import Problem
+from .schedule import ContractionNode
 
 Array = jax.Array
 
 
 @runtime_checkable
 class Executor(Protocol):
-    """The four contractions an ALS sweep needs, placement included.
+    """The contractions an ALS sweep needs, placement included.
 
-    Executors that carry state across MTTKRP calls (e.g. error-feedback
-    residuals) additionally implement the optional carry extension --
-    ``init_carry(problem, x, factors)`` and ``mttkrp_carry(x, factors, mp,
-    carry) -> (m, carry)`` -- which the sweep engine threads through
+    The schedule walker drives everything through :meth:`contract` -- one
+    entry point per :class:`repro.plan.schedule.ContractionNode`, whether
+    the node is a full mode MTTKRP, a root-level partial GEMM, or a
+    partial-to-partial multi-TTV.  Executors that carry state across
+    contractions (e.g. per-node error-feedback residuals) additionally
+    implement the optional carry extension -- ``init_carry(plan, x,
+    factors)`` and ``contract_carry(node, src, factors, algorithm, carry)
+    -> (out, carry)`` -- which the engine threads through
     ``SweepState.carry`` when present (``hasattr`` duck typing; stateless
     executors skip both).
     """
 
-    def prepare(self, problem: Problem, x: Array, factors: Sequence[Array]):
+    def prepare(self, problem, x: Array, factors: Sequence[Array]):
         """Place tensor + factors for this executor (identity when local)."""
         ...
 
-    def mttkrp(self, x: Array, factors: Sequence[Array], mp: ModePlan) -> Array:
-        """Full mode-``mp.mode`` MTTKRP with ``mp.algorithm``."""
-        ...
-
-    def partial_right(self, x: Array, right_factors: Sequence[Array]) -> Array:
-        """Dimension-tree ``T_L``: contract the trailing modes away."""
-        ...
-
-    def partial_left(self, x: Array, left_factors: Sequence[Array]) -> Array:
-        """Dimension-tree ``T_R``: contract the leading modes away."""
+    def contract(
+        self, node: ContractionNode, src: Array, factors: Sequence[Array],
+        algorithm: str = "auto",
+    ) -> Array:
+        """Run one schedule node's contraction of ``src`` (the parent's
+        output; the raw tensor for children of the root)."""
         ...
 
 
 class LocalExecutor:
     """Single-device execution of the paper's shared-memory kernels."""
 
-    def prepare(self, problem: Problem, x: Array, factors: Sequence[Array]):
+    def prepare(self, problem, x: Array, factors: Sequence[Array]):
         """No placement needed on one device: returns inputs unchanged."""
         return x, list(factors)
 
-    def mttkrp(self, x: Array, factors: Sequence[Array], mp: ModePlan) -> Array:
-        """Mode-``mp.mode`` MTTKRP via the planned local algorithm."""
-        return mttkrp(x, list(factors), mp.mode, method=mp.algorithm)
-
-    def partial_right(self, x: Array, right_factors: Sequence[Array]) -> Array:
-        """Local dimension-tree ``T_L`` (contract trailing modes)."""
-        return partial_mttkrp_right(x, list(right_factors))
-
-    def partial_left(self, x: Array, left_factors: Sequence[Array]) -> Array:
-        """Local dimension-tree ``T_R`` (contract leading modes)."""
-        return partial_mttkrp_left(x, list(left_factors))
+    def contract(
+        self, node: ContractionNode, src: Array, factors: Sequence[Array],
+        algorithm: str = "auto",
+    ) -> Array:
+        """One schedule node locally: planned MTTKRP for leaves off the
+        root, range GEMM for internal nodes off the root, multi-TTV einsum
+        for anything contracted from a partial."""
+        if node.from_root:
+            if node.is_leaf:
+                return mttkrp(src, list(factors), node.mode, method=algorithm)
+            return partial_mttkrp_range(src, list(factors), node.lo, node.hi)
+        sibs = {m: factors[m] for m in node.contracted}
+        return contract_from_partial(src, sibs, node.lo, node.hi, node.parent_lo)
 
 
 class ShardedExecutor:
     """Block-distributed execution over a device mesh.
 
     Holds the concrete ``Mesh`` + ``mode_axes`` mapping (the Problem only
-    carries their sizes).  Every contraction is the local shared-memory
-    kernel inside ``shard_map`` plus the minimal psum the mapping requires;
-    the small Gram/pinv algebra stays at the global-array level in the
-    engine, exactly as the previous hand-written distributed sweeps did.
+    carries their sizes).  Every node contraction is the local
+    shared-memory kernel inside ``shard_map`` plus the minimal psum the
+    node requires (over the axes mapped to the modes contracted *at that
+    node*); the small Gram/pinv algebra stays at the global-array level in
+    the engine, exactly as the previous hand-written distributed sweeps did.
     """
 
     def __init__(self, mesh, mode_axes):
         self.mesh = mesh
         self.mode_axes = dict(mode_axes)
 
-    def prepare(self, problem: Problem, x: Array, factors: Sequence[Array]):
+    # chunk count for the node pipeline: 1 = no chunking (plain psum)
+    _n_chunks = 1
+
+    def prepare(self, problem, x: Array, factors: Sequence[Array]):
         """Block-distribute tensor + factors per ``mode_axes`` (no reorder)."""
         return shard_problem(x, factors, self.mode_axes, self.mesh)
 
-    def mttkrp(self, x: Array, factors: Sequence[Array], mp: ModePlan) -> Array:
-        """Local planned kernel per block + one psum over contracted axes."""
-        return dist_mttkrp(
-            x, list(factors), mp.mode, self.mode_axes, self.mesh, method=mp.algorithm
+    def contract(
+        self, node: ContractionNode, src: Array, factors: Sequence[Array],
+        algorithm: str = "auto",
+    ) -> Array:
+        """One schedule node on the mesh: local kernel per block + this
+        node's psum over the axes mapped to its contracted modes."""
+        if node.from_root and node.is_leaf:
+            return dist_mttkrp(
+                src, list(factors), node.mode, self.mode_axes, self.mesh,
+                method=algorithm,
+            )
+        if node.from_root:
+            return dist_contract_range(
+                src, list(factors), node.lo, node.hi, self.mode_axes, self.mesh,
+                n_chunks=self._n_chunks,
+            )
+        return dist_contract_partial(
+            src, list(factors), node.lo, node.hi, node.parent_lo, node.parent_hi,
+            self.mode_axes, self.mesh, n_chunks=self._n_chunks,
         )
-
-    def partial_right(self, x: Array, right_factors: Sequence[Array]) -> Array:
-        """Distributed dimension-tree ``T_L`` (psum over trailing-mode axes)."""
-        return _dist_partial_right(x, list(right_factors), self.mode_axes, self.mesh)
-
-    def partial_left(self, x: Array, left_factors: Sequence[Array]) -> Array:
-        """Distributed dimension-tree ``T_R`` (psum over leading-mode axes)."""
-        return _dist_partial_left(x, list(left_factors), self.mode_axes, self.mesh)
 
 
 class OverlappingExecutor(ShardedExecutor):
     """Communication-hiding sharded executor (exact).
 
-    Identical placement and results to :class:`ShardedExecutor`, but each
-    mode's local MTTKRP is split into ``n_chunks`` row slabs so the psum of
-    chunk ``k`` is issued while the GEMM of chunk ``k+1`` runs
-    (:func:`repro.dist.dist_mttkrp.dist_mttkrp_overlapped`).  Chunk psums
-    cover disjoint output rows, so the iterates match the plain sharded
-    executor exactly; only the schedule changes.  The dimension-tree
-    partials are inherited unchunked (ROADMAP).
+    Identical placement and results to :class:`ShardedExecutor`, but every
+    node's communication is pipelined in ``n_chunks`` slabs along its
+    leading kept mode: full MTTKRPs run through
+    :func:`repro.dist.dist_mttkrp.dist_mttkrp_overlapped` (slab GEMMs with
+    per-slab psums -- exact: disjoint output rows of the same reduction),
+    and the partial contractions of dimension-tree schedules through the
+    chunked ``dist_contract_range`` / ``dist_contract_partial`` pipelines
+    (one local contraction, per-slab psums -- *bitwise* identical to the
+    plain executor by construction).  Only the schedule changes.
     """
 
     def __init__(self, mesh, mode_axes, n_chunks: int = DEFAULT_OVERLAP_CHUNKS):
         super().__init__(mesh, mode_axes)
         self.n_chunks = int(n_chunks)
 
-    def mttkrp(self, x: Array, factors: Sequence[Array], mp: ModePlan) -> Array:
-        """Chunked local kernel with per-chunk psums (double-buffered)."""
-        return dist_mttkrp_overlapped(
-            x,
-            list(factors),
-            mp.mode,
-            self.mode_axes,
-            self.mesh,
-            method=mp.algorithm,
-            n_chunks=self.n_chunks,
-        )
+    @property
+    def _n_chunks(self) -> int:
+        """Pipeline depth used by the inherited node ``contract``."""
+        return self.n_chunks
+
+    def contract(
+        self, node: ContractionNode, src: Array, factors: Sequence[Array],
+        algorithm: str = "auto",
+    ) -> Array:
+        """One schedule node with its psum hidden behind chunked GEMMs."""
+        if node.from_root and node.is_leaf:
+            return dist_mttkrp_overlapped(
+                src, list(factors), node.mode, self.mode_axes, self.mesh,
+                method=algorithm, n_chunks=self.n_chunks,
+            )
+        return super().contract(node, src, factors, algorithm)
 
 
 class CompressedShardedExecutor(ShardedExecutor):
     """Communication-compressing sharded executor (approximate, convergent).
 
-    Runs the factor all-reduce of every mode through the int8
-    error-feedback collective
-    (:func:`repro.dist.dist_mttkrp.dist_mttkrp_compressed`): each device
-    quantizes its partial MTTKRP plus its carried residual, all-gathers the
-    int8 payloads, and dequant-sums locally.  The per-mode residuals are
-    persistent sweep state -- created by :meth:`init_carry`, threaded
-    through :meth:`mttkrp_carry` by the engine -- so the accumulated
-    quantization error stays bounded by one int8 step and compressed CP-ALS
-    converges to the exact fit.  Modes whose mapping needs no psum run the
-    exact path.
+    Runs every node psum -- the per-mode factor all-reduces *and* the
+    partial contractions of dimension-tree schedules -- through the int8
+    error-feedback collective: each device quantizes its partial result
+    plus its carried residual, all-gathers the int8 payloads, and
+    dequant-sums locally.  The per-node residuals are persistent sweep
+    state -- created by :meth:`init_carry`, threaded through
+    :meth:`contract_carry` by the engine -- so the accumulated quantization
+    error at every node stays bounded by one int8 step and compressed
+    CP-ALS converges to the exact fit.  Nodes whose mapping needs no psum
+    run the exact path.
     """
 
-    def init_carry(
-        self, problem: Problem, x: Array, factors: Sequence[Array]
-    ) -> dict[int, Array]:
-        """Zero per-mode error-feedback residuals, placed on the mesh."""
-        return init_mttkrp_error_state(
-            problem.shape, problem.rank, self.mode_axes, self.mesh
-        )
+    def init_carry(self, plan, x: Array, factors: Sequence[Array]) -> dict[int, Array]:
+        """Zero per-node error-feedback residuals for every schedule node
+        whose contraction completes with a psum, placed on the mesh (one
+        leading axis per reduced mesh axis, then the node's global output
+        dims sharded like the output itself)."""
+        errs: dict[int, Array] = {}
+        for node in plan.resolved_schedule.walk():
+            if not node.reduce_axes:
+                continue
+            lead = tuple(self.mesh.shape[a] for a in node.reduce_axes)
+            e = jnp.zeros(lead + node.shape, jnp.float32)
+            spec = P(
+                *node.reduce_axes,
+                *[self.mode_axes.get(m) for m in node.modes],
+                None,
+            )
+            errs[node.id] = jax.device_put(e, NamedSharding(self.mesh, spec))
+        return errs
 
-    def mttkrp_carry(
-        self, x: Array, factors: Sequence[Array], mp: ModePlan, carry: Any
+    def contract_carry(
+        self,
+        node: ContractionNode,
+        src: Array,
+        factors: Sequence[Array],
+        algorithm: str,
+        carry: Any,
     ) -> tuple[Array, Any]:
-        """Compressed mode-``mp.mode`` MTTKRP; returns result + new carry."""
-        n = mp.mode
-        if carry is None or n not in carry:
-            return self.mttkrp(x, factors, mp), carry
-        m, new_err = dist_mttkrp_compressed(
-            x, list(factors), n, self.mode_axes, self.mesh, carry[n],
-            method=mp.algorithm,
-        )
-        return m, {**carry, n: new_err}
+        """Compressed node contraction; returns ``(result, new_carry)``.
+
+        Dispatches to the compressed variant matching the node's topology
+        when a residual exists for it, the exact path otherwise.
+        """
+        if carry is None or node.id not in carry:
+            return self.contract(node, src, factors, algorithm), carry
+        err = carry[node.id]
+        if node.from_root and node.is_leaf:
+            out, new_err = dist_mttkrp_compressed(
+                src, list(factors), node.mode, self.mode_axes, self.mesh, err,
+                method=algorithm,
+            )
+        elif node.from_root:
+            out, new_err = dist_contract_range_compressed(
+                src, list(factors), node.lo, node.hi, self.mode_axes, self.mesh, err
+            )
+        else:
+            out, new_err = dist_contract_partial_compressed(
+                src, list(factors), node.lo, node.hi, node.parent_lo,
+                node.parent_hi, self.mode_axes, self.mesh, err,
+            )
+        return out, {**carry, node.id: new_err}
 
 
 def make_executor(

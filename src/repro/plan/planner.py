@@ -4,34 +4,50 @@ The paper's Sec. 5.3.3 finding -- 1-step on external modes, 2-step on
 internal modes -- used to be hard-coded inside ``mttkrp(method="auto")`` and
 re-derived independently by four sweep implementations.  It now lives here,
 driven by the analytic cost model of :mod:`repro.plan.cost`: ``auto`` picks
-each mode's algorithm by predicted seconds, breaking near-ties (within 10%)
-toward the paper's empirical recommendation, which exactly reproduces the
-Sec. 5.3.3 dispatch on the benchmark shapes while letting genuinely lopsided
-shapes (e.g. one huge mode flanked by tiny ones) escape the heuristic.
+each root-level mode's algorithm by predicted seconds, breaking near-ties
+(within 10%) toward the paper's empirical recommendation, which exactly
+reproduces the Sec. 5.3.3 dispatch on the benchmark shapes while letting
+genuinely lopsided shapes (e.g. one huge mode flanked by tiny ones) escape
+the heuristic.
 
-Beyond the per-mode algorithm, ``plan_sweep`` also picks WHERE the sweep
-runs: ``executor='auto'`` cost-argmins over the executor kinds of
-:data:`repro.plan.cost.EXECUTORS` (``local`` for unsharded problems;
-``sharded`` / ``overlapping`` / ``compressed`` for sharded ones) under the
-bounded-overlap model, so communication hiding and compression are planner
-decisions, not call-site flags.  The chosen kind lands on
-``SweepPlan.executor``; :func:`repro.plan.executor.make_executor` turns it
-into the matching executor instance given the concrete mesh.
+Beyond the per-mode algorithm, ``plan_sweep`` plans the *contraction
+schedule* and the *executor* jointly: ``strategy='auto'`` cost-argmins over
+the tree shapes of :func:`repro.plan.schedule.enumerate_schedules` (the
+flat per-mode sweep, the binary split at every boundary, and the
+multi-level chain for order >= 4) and, via ``executor='auto'``, over the
+executor kinds of :data:`repro.plan.cost.EXECUTORS` under the
+bounded-overlap model -- so dimension-tree reuse, communication hiding and
+compression are all planner decisions, not call-site flags.  Any (schedule,
+executor) pair is valid (:func:`repro.plan.cost.validate_executor` is the
+one predicate): the overlapping and compressed executors chunk/compress the
+partial contractions of tree schedules just like full MTTKRPs.  The chosen
+kind lands on ``SweepPlan.executor``;
+:func:`repro.plan.executor.make_executor` turns it into the matching
+executor instance given the concrete mesh.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Mapping
 
 from .cost import (
-    ALGORITHMS,
     DEFAULT_OVERLAP_CHUNKS,
     EXECUTORS,
     ModeCost,
-    dimtree_mode_cost,
     executor_mode_cost,
+    node_cost,
+    validate_executor,
 )
 from .problem import Problem
+from .schedule import (
+    ContractionNode,
+    Schedule,
+    binary_schedule,
+    chain_schedule,
+    enumerate_schedules,
+    flat_schedule,
+)
 
 STRATEGIES = (
     "auto",
@@ -45,10 +61,14 @@ STRATEGIES = (
     "baseline",
 )
 
+# Named schedule shapes accepted by ``plan_sweep(schedule=...)``.
+SCHEDULE_NAMES = ("flat", "binary", "chain")
+
 # auto prefers 2-step on internal modes unless 1-step is predicted >10%
 # cheaper: the flop/byte terms of the two algorithms cross within model noise
 # on near-cubic shapes (where the paper measured 2-step ahead), so the model
-# alone decides only clear wins.
+# alone decides only clear wins.  The same margin breaks schedule near-ties
+# toward the flat per-mode sweep (the shape the paper measured).
 _NEAR_TIE = 0.9
 
 # the compressed executor changes numerics (int8 + error feedback), so it
@@ -59,7 +79,7 @@ _COMPRESS_MARGIN = 0.9
 
 @dataclass(frozen=True)
 class ModePlan:
-    """Algorithm choice + predicted cost for one mode's MTTKRP."""
+    """Algorithm choice + predicted cost for one mode's MTTKRP (leaf view)."""
 
     mode: int
     algorithm: str
@@ -71,13 +91,36 @@ class ModePlan:
 
 
 @dataclass(frozen=True)
-class SweepPlan:
-    """Per-mode algorithm schedule for one full ALS sweep.
+class NodePlan:
+    """One schedule node's planned contraction: algorithm + predicted cost.
 
-    ``split`` is set only for dimension-tree plans (the half boundary);
+    ``algorithm`` is a per-mode MTTKRP method for leaves off the root,
+    ``"partial-krp"`` for root-level partial GEMMs, and ``"partial-ttv"``
+    for contractions of an already-computed partial.
+    """
+
+    node: ContractionNode
+    algorithm: str
+    cost: ModeCost
+
+    def as_dict(self) -> dict:
+        """JSON-ready row: node topology/psum metadata + every cost term."""
+        return {**self.node.as_dict(), "algorithm": self.algorithm, **self.cost.as_dict()}
+
+
+@dataclass(frozen=True)
+class SweepPlan:
+    """Planned contraction schedule for one full ALS sweep.
+
+    ``schedule`` is the contraction tree the engine walks and ``nodes`` its
+    per-node plans in evaluation order; ``modes`` is the per-mode leaf view
+    (kept stable for benchmarks and the pre-schedule callers).  ``split`` is
+    the binary half boundary when the tree is the classic two-partial split;
     ``normalize`` is carried here because it is part of the sweep recipe the
-    executors share.  ``describe()`` is the JSON-ready prediction surface
-    benchmarks report against measurements.
+    executors share; ``serial_fractions`` records calibrated per-executor
+    overlap constants when the plan was built with them.  ``describe()`` is
+    the JSON-ready prediction surface benchmarks report against
+    measurements.
     """
 
     problem: Problem
@@ -86,23 +129,49 @@ class SweepPlan:
     split: int | None = None
     normalize: bool = True
     executor: str = "local"
+    schedule: Schedule | None = None
+    nodes: tuple[NodePlan, ...] = ()
+    serial_fractions: Mapping[str, float] | None = None
 
     @property
     def kind(self) -> str:
-        """``"dimtree"`` for two-partial plans, ``"permode"`` otherwise."""
+        """``"dimtree"`` for tree schedules, ``"permode"`` for the flat one."""
+        if self.schedule is not None:
+            return "permode" if self.schedule.is_flat else "dimtree"
         return "dimtree" if self.split is not None else "permode"
 
+    @property
+    def resolved_schedule(self) -> Schedule:
+        """The plan's schedule, deriving the degenerate tree for plans built
+        without one (flat, or the binary split when ``split`` is set)."""
+        if self.schedule is not None:
+            return self.schedule
+        if self.split is not None:
+            return binary_schedule(self.problem, self.split)
+        return flat_schedule(self.problem)
+
+    def node_plan(self, node_id: int) -> NodePlan:
+        """The :class:`NodePlan` of one schedule node."""
+        for np_ in self.nodes:
+            if np_.node.id == node_id:
+                return np_
+        raise ValueError(f"no plan for node {node_id}")
+
     def total_cost(self) -> dict:
-        """Sweep-level sums of the per-mode cost terms and predictions."""
+        """Sweep-level sums of the per-contraction cost terms/predictions
+        (over every schedule node; for flat plans this equals the per-mode
+        sum)."""
+        rows = self.nodes if self.nodes else self.modes
         return {
-            "flops": sum(m.cost.flops for m in self.modes),
-            "bytes": sum(m.cost.bytes for m in self.modes),
-            "collective_bytes": sum(m.cost.collective_bytes for m in self.modes),
-            "predicted_s": sum(m.cost.predicted_s for m in self.modes),
+            "flops": sum(r.cost.flops for r in rows),
+            "bytes": sum(r.cost.bytes for r in rows),
+            "collective_bytes": sum(r.cost.collective_bytes for r in rows),
+            "predicted_s": sum(r.cost.predicted_s for r in rows),
         }
 
     def describe(self) -> dict:
-        """Predicted flops / HBM bytes / collective bytes per mode + totals."""
+        """Predicted flops / HBM bytes / collective bytes per mode and per
+        schedule node, plus totals."""
         return {
             "shape": list(self.problem.shape),
             "rank": self.problem.rank,
@@ -114,18 +183,28 @@ class SweepPlan:
             "sharded": self.problem.sharded,
             "mode_axes": {str(k): v for k, v in self.problem.mode_axes.items()},
             "local_shape": list(self.problem.local_shape),
+            "schedule": self.resolved_schedule.name,
             "modes": [m.as_dict() for m in self.modes],
+            "nodes": [n.as_dict() for n in self.nodes],
+            "serial_fractions": dict(self.serial_fractions or {}),
             "totals": self.total_cost(),
         }
 
 
 def _auto_mode(
-    problem: Problem, n: int, executor: str, n_chunks: int
+    problem: Problem,
+    n: int,
+    executor: str,
+    n_chunks: int,
+    serial_fractions: Mapping[str, float] | None = None,
 ) -> ModePlan:
     """Cost-model dispatch for one mode (reproduces paper Sec. 5.3.3)."""
 
     def cost(alg: str) -> ModeCost:
-        return executor_mode_cost(problem, n, alg, executor, n_chunks=n_chunks)
+        return executor_mode_cost(
+            problem, n, alg, executor, n_chunks=n_chunks,
+            serial_fractions=serial_fractions,
+        )
 
     if problem.external_mode(n):
         # 2-step degenerates to 1-step here; only 1-step is a real candidate.
@@ -140,21 +219,104 @@ def _auto_mode(
     return ModePlan(n, two_alg, two)
 
 
-def _plan_modes(
-    problem: Problem, strategy: str, executor: str, n_chunks: int
-) -> tuple[ModePlan, ...]:
-    """Per-mode ModePlans for a non-dimtree strategy on one executor kind."""
+def _plan_nodes(
+    problem: Problem,
+    sched: Schedule,
+    strategy: str,
+    executor: str,
+    n_chunks: int,
+    serial_fractions: Mapping[str, float] | None,
+) -> tuple[NodePlan, ...]:
+    """NodePlans in evaluation order for one (schedule, executor) pair."""
+    plans = []
+    for node in sched.walk():
+        if node.from_root and node.is_leaf:
+            if strategy == "auto":
+                mp = _auto_mode(problem, node.mode, executor, n_chunks, serial_fractions)
+                alg, cost = mp.algorithm, mp.cost
+            else:
+                # forced strategies pin the leaf algorithm verbatim; tree
+                # strategies route root leaves through the 1-step GEMM (the
+                # arithmetic the binary tree's size-1 halves always used)
+                alg = "1step" if strategy == "dimtree" else strategy
+                cost = executor_mode_cost(
+                    problem, node.mode, alg, executor, n_chunks=n_chunks,
+                    serial_fractions=serial_fractions,
+                )
+            plans.append(NodePlan(node, alg, cost))
+        else:
+            alg = "partial-krp" if node.from_root else "partial-ttv"
+            plans.append(
+                NodePlan(
+                    node,
+                    alg,
+                    node_cost(
+                        problem, node, executor, n_chunks=n_chunks,
+                        serial_fractions=serial_fractions,
+                    ),
+                )
+            )
+    return tuple(plans)
+
+
+def _best_executor(
+    problem: Problem,
+    sched: Schedule,
+    strategy: str,
+    candidates: tuple[str, ...],
+    n_chunks: int,
+    serial_fractions: Mapping[str, float] | None,
+) -> tuple[str, tuple[NodePlan, ...], float]:
+    """Cost-argmin executor for one schedule among ``candidates``.
+
+    Exact kinds compete head-to-head (ties resolve to the earlier, plainer
+    kind); ``compressed`` changes numerics, so it must beat the best exact
+    kind by >10% (``_COMPRESS_MARGIN``).
+    """
+    plans = {
+        ex: _plan_nodes(problem, sched, strategy, ex, n_chunks, serial_fractions)
+        for ex in candidates
+    }
+    totals = {
+        ex: sum(np_.cost.predicted_s for np_ in plans[ex]) for ex in candidates
+    }
+    exacts = [ex for ex in candidates if ex != "compressed"]
+    if not exacts:  # compressed was forced explicitly
+        ex = candidates[0]
+        return ex, plans[ex], totals[ex]
+    best = exacts[0]
+    for ex in exacts[1:]:
+        if totals[ex] < totals[best]:
+            best = ex
+    if "compressed" in candidates and totals["compressed"] < _COMPRESS_MARGIN * totals[best]:
+        best = "compressed"
+    return best, plans[best], totals[best]
+
+
+def _resolve_schedules(
+    problem: Problem, strategy: str, split: int | None, schedule
+) -> list[Schedule]:
+    """Candidate schedules for one plan_sweep call."""
+    if isinstance(schedule, Schedule):
+        if schedule.problem != problem:
+            raise ValueError("schedule was built for a different Problem")
+        return [schedule]
+    if isinstance(schedule, str):
+        if schedule not in SCHEDULE_NAMES:
+            raise ValueError(
+                f"unknown schedule {schedule!r} (choose from {SCHEDULE_NAMES})"
+            )
+        if schedule == "flat":
+            return [flat_schedule(problem)]
+        if schedule == "binary":
+            return [binary_schedule(problem, split)]
+        return [chain_schedule(problem)]
+    assert schedule is None
+    if strategy == "dimtree":
+        return [binary_schedule(problem, split)]
     if strategy == "auto":
-        return tuple(
-            _auto_mode(problem, n, executor, n_chunks) for n in range(problem.ndim)
-        )
-    assert strategy in ALGORITHMS
-    return tuple(
-        ModePlan(
-            n, strategy, executor_mode_cost(problem, n, strategy, executor, n_chunks=n_chunks)
-        )
-        for n in range(problem.ndim)
-    )
+        return enumerate_schedules(problem)
+    return [flat_schedule(problem)]
 
 
 def select_executor(
@@ -162,32 +324,25 @@ def select_executor(
     strategy: str = "auto",
     *,
     n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
+    schedule=None,
+    serial_fractions: Mapping[str, float] | None = None,
 ) -> str:
     """Cost-argmin executor kind for ``problem`` under ``strategy``.
 
-    Unsharded problems run locally.  Sharded per-mode plans compare the
-    plain ``sharded`` executor against ``overlapping`` (communication
-    hidden behind chunked GEMMs) and ``compressed`` (int8 error-feedback
-    all-gather) on total predicted sweep seconds; ``compressed`` changes
-    numerics, so it must beat the best exact executor by >10%
-    (``_COMPRESS_MARGIN``) -- ties resolve to the exact executor.  Dimtree
-    plans stay on ``sharded``: overlap/compression of the two half-partial
-    contractions is not implemented (ROADMAP).
+    Unsharded problems run locally.  Sharded plans compare the plain
+    ``sharded`` executor against ``overlapping`` (communication hidden
+    behind chunked contractions) and ``compressed`` (int8 error-feedback
+    all-gather) on total predicted sweep seconds -- jointly with the
+    schedule shapes the strategy admits, exactly as
+    :func:`plan_sweep` does; ``compressed`` changes numerics, so it must
+    beat the best exact executor by >10% (``_COMPRESS_MARGIN``) -- ties
+    resolve to the exact executor.  Dimension-tree schedules compete on the
+    same footing: their partial contractions overlap and compress per node.
     """
-    if not problem.sharded:
-        return "local"
-    if strategy == "dimtree":
-        return "sharded"
-
-    def total(executor: str) -> float:
-        modes = _plan_modes(problem, strategy, executor, n_chunks)
-        return sum(m.cost.predicted_s for m in modes)
-
-    t_sharded, t_overlap = total("sharded"), total("overlapping")
-    best_exact = "overlapping" if t_overlap < t_sharded else "sharded"
-    if total("compressed") < _COMPRESS_MARGIN * min(t_sharded, t_overlap):
-        return "compressed"
-    return best_exact
+    return plan_sweep(
+        problem, strategy, executor="auto", n_chunks=n_chunks,
+        schedule=schedule, serial_fractions=serial_fractions,
+    ).executor
 
 
 def plan_sweep(
@@ -198,54 +353,100 @@ def plan_sweep(
     normalize: bool = True,
     executor: str = "auto",
     n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
+    schedule: Schedule | str | None = None,
+    serial_fractions: Mapping[str, float] | None = None,
 ) -> SweepPlan:
     """Plan one full ALS sweep for ``problem``.
 
-    ``strategy='auto'`` selects per-mode among 1-step / 2-step-left /
-    2-step-right by predicted cost; ``'dimtree'`` plans the two-partial
-    dimension-tree schedule (``split`` defaults to the balanced half);
-    any other value forces that algorithm on every mode (the old
-    ``method=`` passthrough, kept for the back-compat wrappers).
+    ``strategy='auto'`` cost-argmins jointly over contraction-tree shapes
+    (flat, the binary split at every boundary, the multi-level chain for
+    order >= 4) and -- within each tree -- the per-mode algorithm of every
+    leaf off the root (1-step / 2-step-left / 2-step-right by predicted
+    cost).  Near-ties (within 10%) break toward the flat per-mode sweep,
+    the shape the paper measured.  ``'dimtree'`` forces the classic binary
+    tree (``split`` defaults to the balanced half); any other value forces
+    that algorithm on every mode of the flat schedule (the old ``method=``
+    passthrough, kept for the back-compat wrappers).
 
-    ``executor='auto'`` additionally picks the executor kind via
-    :func:`select_executor` (cost-argmin under the bounded-overlap model);
-    pass an explicit kind from :data:`repro.plan.cost.EXECUTORS` to force
-    one.  ``n_chunks`` sizes the overlapping executor's psum pipeline.
-    The choice lands on ``SweepPlan.executor``;
-    :func:`repro.plan.executor.make_executor` builds the matching instance.
+    ``schedule`` pins the tree shape regardless of strategy: a
+    :class:`repro.plan.schedule.Schedule` built for this problem, or one of
+    ``"flat"`` / ``"binary"`` / ``"chain"``.
+
+    ``executor='auto'`` additionally picks the executor kind by the same
+    cost argmin (any (schedule, executor) pair is either costed or rejected
+    by :func:`repro.plan.cost.validate_executor` -- tree schedules overlap
+    and compress per node like everything else); pass an explicit kind from
+    :data:`repro.plan.cost.EXECUTORS` to force one.  ``n_chunks`` sizes the
+    overlapping executor's psum pipeline; ``serial_fractions`` threads
+    calibrated per-executor overlap constants (from ``bench_mttkrp
+    --calibrate``) through every cost.  The choice lands on
+    ``SweepPlan.executor``; :func:`repro.plan.executor.make_executor`
+    builds the matching instance.
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r} (choose from {STRATEGIES})")
-    if split is not None and strategy != "dimtree":
-        raise ValueError("split is only meaningful for strategy='dimtree'")
-    if executor != "auto" and executor not in EXECUTORS:
-        raise ValueError(
-            f"unknown executor {executor!r} (choose from {('auto',) + EXECUTORS})"
-        )
-    if strategy == "dimtree" and executor in ("overlapping", "compressed"):
-        raise ValueError(
-            f"executor {executor!r} does not support dimtree plans: the half-"
-            "partial contractions are neither chunked nor compressed (ROADMAP)"
-        )
-    if executor == "auto":
-        executor = select_executor(problem, strategy, n_chunks=n_chunks)
-    elif executor == "local" and problem.sharded:
-        raise ValueError("executor 'local' cannot run a sharded problem")
-    elif executor in ("overlapping", "compressed") and not problem.sharded:
-        raise ValueError(f"executor {executor!r} needs a sharded problem")
+    if split is not None:
+        if strategy != "dimtree" and schedule != "binary":
+            raise ValueError(
+                "split is only meaningful for strategy='dimtree' (or schedule='binary')"
+            )
+        if not 0 < split < problem.ndim:
+            raise ValueError(
+                f"split {split} out of range for order-{problem.ndim} tensor"
+            )
+    if serial_fractions is not None:
+        for kind, f in dict(serial_fractions).items():
+            if kind not in EXECUTORS:
+                raise ValueError(
+                    f"unknown executor {kind!r} in serial_fractions "
+                    f"(choose from {EXECUTORS})"
+                )
+            if not 0.0 <= float(f) <= 1.0:
+                raise ValueError(f"serial_fractions[{kind!r}] must be in [0, 1], got {f}")
+    if executor != "auto":
+        validate_executor(problem, executor)
+        candidates = (executor,)
+    elif problem.sharded:
+        candidates = ("sharded", "overlapping", "compressed")
+    else:
+        candidates = ("local",)
 
-    n_modes = problem.ndim
-    if strategy == "dimtree":
-        m = split if split is not None else (n_modes + 1) // 2
-        if not 0 < m < n_modes:
-            raise ValueError(f"split {m} out of range for order-{n_modes} tensor")
-        modes = tuple(
-            ModePlan(n, "dimtree", dimtree_mode_cost(problem, n, m))
-            for n in range(n_modes)
+    schedules = _resolve_schedules(problem, strategy, split, schedule)
+    best = None  # (total, sched, executor, node_plans)
+    flat_total = None
+    for sched in schedules:
+        ex, nodes, total = _best_executor(
+            problem, sched, strategy, candidates, n_chunks, serial_fractions
         )
-        return SweepPlan(
-            problem, strategy, modes, split=m, normalize=normalize, executor=executor
-        )
+        if sched.is_flat and flat_total is None:
+            flat_total = (total, sched, ex, nodes)
+        if best is None or total < best[0]:
+            best = (total, sched, ex, nodes)
+    assert best is not None
+    # near-tie preference: a tree must beat the flat sweep by >10% to win
+    if flat_total is not None and best[1] is not flat_total[1]:
+        if best[0] >= _NEAR_TIE * flat_total[0]:
+            best = flat_total
+    _, sched, chosen, node_plans = best
 
-    modes = _plan_modes(problem, strategy, executor, n_chunks)
-    return SweepPlan(problem, strategy, modes, normalize=normalize, executor=executor)
+    modes = tuple(
+        sorted(
+            (
+                ModePlan(np_.node.mode, np_.algorithm, np_.cost)
+                for np_ in node_plans
+                if np_.node.is_leaf
+            ),
+            key=lambda mp: mp.mode,
+        )
+    )
+    return SweepPlan(
+        problem,
+        strategy,
+        modes,
+        split=sched.split,
+        normalize=normalize,
+        executor=chosen,
+        schedule=sched,
+        nodes=node_plans,
+        serial_fractions=dict(serial_fractions) if serial_fractions else None,
+    )

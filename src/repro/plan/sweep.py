@@ -6,11 +6,13 @@ Per mode-n update (alternating least squares, paper Sec. 2.2):
     U_n = M @ pinv(H);  column-normalize -> lambda
 with the fit tracked through the factored identity reusing the last MTTKRP.
 
-This module replaces the four hand-written sweeps (``core.cpals.als_sweep``,
-``core.dimtree.dimtree_sweep``, ``dist.dist_mttkrp.dist_als_sweep`` and
-``dist_dimtree_sweep``), which survive as thin wrappers building the
-corresponding plan + executor.  The Gram/Hadamard/pinv/normalize/fit algebra
-exists ONLY here.
+The engine walks the plan's contraction schedule (:mod:`repro.plan.schedule`)
+node by node -- the flat per-mode sweep and every dimension-tree shape are
+the same walk over different trees.  This module replaces the four
+hand-written sweeps (``core.cpals.als_sweep``, ``core.dimtree.dimtree_sweep``,
+``dist.dist_mttkrp.dist_als_sweep`` and ``dist_dimtree_sweep``), which
+survive as thin wrappers building the corresponding plan + executor.  The
+Gram/Hadamard/pinv/normalize/fit algebra exists ONLY here.
 """
 
 from __future__ import annotations
@@ -30,12 +32,12 @@ from repro.core.cpals import (
     hadamard_except,
     normalize_columns,
 )
-from repro.core.dimtree import mttkrp_from_partial
 from repro.core.tensor_ops import random_factors, tensor_norm
 
 from .executor import Executor, LocalExecutor, ShardedExecutor
 from .planner import SweepPlan, plan_sweep
 from .problem import Problem
+from .schedule import ROOT
 
 Array = jax.Array
 
@@ -72,22 +74,28 @@ def als_sweep(
 ) -> SweepState:
     """One full ALS sweep over all modes, following ``plan`` on ``executor``.
 
-    Per-mode plans run one planned MTTKRP per mode; dimension-tree plans run
-    the two half-partials (left half from the *old* right factors, right half
-    from the *fresh* left factors -- the schedule that reproduces exact
-    standard-ALS iterates while reading X twice instead of N times).
+    The engine is a *schedule walker*: it visits the plan's contraction
+    tree in evaluation order (pre-order), materializing each internal
+    node's partial tensor through ``executor.contract`` and caching it for
+    its children (the reuse that makes dimension trees pay), and updating
+    one factor at each leaf.  The flat per-mode sweep and the classic
+    binary two-partial split are just two tree shapes; because children
+    partition their parent's range in order and nodes materialize right
+    before their first descendant leaf, every contracted factor is exactly
+    as fresh as standard ALS requires -- any valid schedule reproduces the
+    standard iterates (see :mod:`repro.plan.schedule`).
 
-    Executors implementing the carry extension (``mttkrp_carry``; see the
+    Executors implementing the carry extension (``contract_carry``; see the
     :class:`repro.plan.executor.Executor` protocol) have their private state
-    threaded through ``state.carry`` across the per-mode updates.
+    -- e.g. per-node error-feedback residuals -- threaded through
+    ``state.carry`` across every node contraction, partials included.
     """
     x = state.x
     factors = list(state.factors)
     weights = state.weights
     it = state.it
     carry = state.carry
-    use_carry = hasattr(executor, "mttkrp_carry")
-    n_modes = len(factors)
+    use_carry = hasattr(executor, "contract_carry")
     gs = grams(factors)
     m_last = None
 
@@ -102,27 +110,20 @@ def als_sweep(
         gs[n] = u.T @ u
         return weights
 
-    if plan.kind == "dimtree":
-        split = plan.split
-        # left half: T_L depends only on the (old) right factors
-        t_left = executor.partial_right(x, factors[split:])
-        for n in range(split):
-            sib = [factors[k] for k in range(split) if k != n]
-            m_last = mttkrp_from_partial(t_left, sib, n)
-            weights = update(n, m_last, weights)
-        # right half: T_R from the freshly updated left factors
-        t_right = executor.partial_left(x, factors[:split])
-        for n in range(split, n_modes):
-            sib = [factors[k] for k in range(split, n_modes) if k != n]
-            m_last = mttkrp_from_partial(t_right, sib, n - split)
-            weights = update(n, m_last, weights)
-    else:
-        for mp in plan.modes:
-            if use_carry:
-                m_last, carry = executor.mttkrp_carry(x, factors, mp, carry)
-            else:
-                m_last = executor.mttkrp(x, factors, mp)
-            weights = update(mp.mode, m_last, weights)
+    sched = plan.resolved_schedule
+    cache: dict[int, Array] = {ROOT: x}
+    for node in sched.walk():
+        src = cache[node.parent]
+        alg = plan.node_plan(node.id).algorithm if plan.nodes else "auto"
+        if use_carry:
+            out, carry = executor.contract_carry(node, src, factors, alg, carry)
+        else:
+            out = executor.contract(node, src, factors, alg)
+        if node.is_leaf:
+            m_last = out
+            weights = update(node.mode, m_last, weights)
+        else:
+            cache[node.id] = out
 
     # Fit from the last MTTKRP (standard trick; avoids forming the model).
     fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], state.norm_x)
@@ -156,11 +157,13 @@ def legacy_sweep(
     problem = Problem.from_tensor(
         x, factors[0].shape[1], mode_axes=mode_axes, mesh=mesh
     )
-    # legacy wrappers are frozen on the exact executors: plan costs and
-    # execution must keep matching the pre-redesign behavior bit for bit.
+    # legacy wrappers are frozen on the exact executors AND the pre-schedule
+    # tree shapes (flat per-mode, or the binary split for dimtree): plan and
+    # execution must keep matching the pre-redesign behavior.
     plan = plan_sweep(
         problem, strategy=strategy, split=split, normalize=normalize,
         executor="sharded" if mesh is not None else "local",
+        schedule=None if strategy == "dimtree" else "flat",
     )
     executor = ShardedExecutor(mesh, mode_axes) if mesh is not None else LocalExecutor()
     state = SweepState(
@@ -208,7 +211,7 @@ def cp_als(
     weights = jnp.ones((problem.rank,), x.dtype)
     norm_x = tensor_norm(x).astype(x.dtype)
     carry = (
-        executor.init_carry(problem, x, factors)
+        executor.init_carry(plan, x, factors)
         if hasattr(executor, "init_carry")
         else None
     )

@@ -171,6 +171,85 @@ def case_overlap_mttkrp():
     print("overlap_mttkrp OK")
 
 
+def case_schedule_overlap():
+    """Overlapped-dimtree == sharded-dimtree BITWISE: every node of the
+    binary schedule is a partial contraction whose chunked per-slab psums
+    cover disjoint rows of the same reduction, so overlap changes the
+    schedule, never a bit of the result.  Also exercises the chain schedule
+    and the compressed executor on tree partials (error-feedback carry)."""
+    from repro.core.tensor_ops import tensor_norm
+    from repro.plan import (
+        CompressedShardedExecutor,
+        OverlappingExecutor,
+        Problem,
+        ShardedExecutor,
+        SweepState,
+        als_sweep,
+        enumerate_schedules,
+        make_executor,
+        plan_sweep,
+        select_executor,
+    )
+
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    x = random_tensor(jax.random.PRNGKey(0), (8, 6, 4, 4))
+    factors = random_factors(jax.random.PRNGKey(1), x.shape, 5)
+    mode_axes = {0: "data", 2: "model"}
+    from repro.dist.dist_mttkrp import shard_problem as _shard
+
+    xs, fs = _shard(x, factors, mode_axes, mesh)
+    problem = Problem.from_tensor(x, 5, mode_axes=mode_axes, mesh=mesh)
+    w = jnp.ones((5,), x.dtype)
+    norm_x = tensor_norm(x)
+
+    # the planner enumerates trees and may pair a dimtree schedule with any
+    # executor; the restriction is gone
+    assert sum(not s.is_flat for s in enumerate_schedules(problem)) >= 3
+    assert select_executor(problem, "dimtree") in ("overlapping", "compressed")
+    plan = plan_sweep(problem, strategy="dimtree", executor="overlapping")
+    assert plan.executor == "overlapping" and plan.kind == "dimtree"
+
+    # dimtree sweeps: overlapped == sharded bitwise, across several sweeps
+    f_sh, f_ov = list(fs), list(fs)
+    w_sh = w_ov = w
+    for it in range(3):
+        st_sh = SweepState(x=xs, factors=f_sh, weights=w_sh, norm_x=norm_x, it=jnp.asarray(it))
+        st_ov = SweepState(x=xs, factors=f_ov, weights=w_ov, norm_x=norm_x, it=jnp.asarray(it))
+        out_sh = als_sweep(problem, plan, ShardedExecutor(mesh, mode_axes), st_sh)
+        out_ov = als_sweep(problem, plan, OverlappingExecutor(mesh, mode_axes, n_chunks=3), st_ov)
+        f_sh, w_sh = out_sh.factors, out_sh.weights
+        f_ov, w_ov = out_ov.factors, out_ov.weights
+        for a, b in zip(f_sh, f_ov):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(out_sh.fit), np.asarray(out_ov.fit))
+
+    # chain schedule on the overlapping executor matches sharded numerics
+    # (its root leaf is a chunked full MTTKRP: equal reductions, fp-tight)
+    chain_plan = plan_sweep(problem, schedule="chain", executor="overlapping")
+    st_a = SweepState(x=xs, factors=list(fs), weights=w, norm_x=norm_x, it=jnp.asarray(0))
+    st_b = SweepState(x=xs, factors=list(fs), weights=w, norm_x=norm_x, it=jnp.asarray(0))
+    out_a = als_sweep(problem, chain_plan, ShardedExecutor(mesh, mode_axes), st_a)
+    out_b = als_sweep(problem, chain_plan, OverlappingExecutor(mesh, mode_axes, n_chunks=3), st_b)
+    for a, b in zip(out_a.factors, out_b.factors):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+    # compressed executor on the dimtree schedule: per-node residual carry
+    # threads through the sweep and converges to the exact fit
+    plan_c = plan_sweep(problem, strategy="dimtree", executor="compressed")
+    ex_c = make_executor("compressed", mesh, mode_axes)
+    assert isinstance(ex_c, CompressedShardedExecutor)
+    carry = ex_c.init_carry(plan_c, xs, fs)
+    assert carry  # at least one node needs a psum on this mapping
+    st_c = SweepState(x=xs, factors=list(fs), weights=w, norm_x=norm_x, it=jnp.asarray(0), carry=carry)
+    out_c = als_sweep(problem, plan_c, ex_c, st_c)
+    assert out_c.carry is not carry  # residuals were updated
+    for a, b in zip(out_c.factors, f_sh):
+        assert np.all(np.isfinite(np.asarray(a)))
+        assert np.asarray(a).shape == np.asarray(b).shape
+    print("schedule_overlap OK")
+
+
 def case_compressed_cpals():
     """Error-feedback convergence: CP-ALS with the compressed factor
     all-reduce reaches the uncompressed fit within tolerance on a fixed
@@ -263,6 +342,7 @@ if __name__ == "__main__":
         "dist_dimtree": case_dist_dimtree,
         "elastic_restore": case_elastic_restore,
         "overlap_mttkrp": case_overlap_mttkrp,
+        "schedule_overlap": case_schedule_overlap,
         "compressed_cpals": case_compressed_cpals,
         "compressed_psum": case_compressed_psum,
         "compressed_dp": case_compressed_dp_trainer,

@@ -46,6 +46,11 @@ def test_overlapping_executor_matches_sharded():
     assert "overlap_mttkrp OK" in out
 
 
+def test_schedule_overlapped_dimtree_bitwise_matches_sharded():
+    out = _run("schedule_overlap")
+    assert "schedule_overlap OK" in out
+
+
 def test_compressed_cpals_reaches_exact_fit():
     out = _run("compressed_cpals")
     assert "compressed_cpals OK" in out

@@ -41,8 +41,12 @@ BENCH_SHAPES = [
     "shape", BENCH_SHAPES, ids=["x".join(map(str, s)) for s in BENCH_SHAPES]
 )
 def test_auto_reproduces_paper_dispatch_on_bench_shapes(shape):
-    """Sec. 5.3.3: 1-step on external modes, 2-step on internal modes."""
-    plan = plan_sweep(Problem(shape=shape, rank=25))
+    """Sec. 5.3.3: 1-step on external modes, 2-step on internal modes.
+
+    The per-mode dispatch property lives on the flat schedule (tree plans
+    replace most full MTTKRPs with partial contractions -- see
+    test_schedule.py for those invariants)."""
+    plan = plan_sweep(Problem(shape=shape, rank=25), schedule="flat")
     algs = [m.algorithm for m in plan.modes]
     assert algs[0] == "1step" and algs[-1] == "1step", algs
     assert all(a.startswith("2step") for a in algs[1:-1]), algs
@@ -51,7 +55,7 @@ def test_auto_reproduces_paper_dispatch_on_bench_shapes(shape):
 def test_auto_2step_order_matches_smaller_second_step_rule():
     """Alg. 4 line 4: contract the bigger side first (left-first iff L > R)."""
     shape = (4, 6, 8, 2)
-    plan = plan_sweep(Problem(shape=shape, rank=5))
+    plan = plan_sweep(Problem(shape=shape, rank=5), schedule="flat")
     for mp in plan.modes[1:-1]:
         L, _, R = dims_split(shape, mp.mode)
         expect = "2step-left" if L > R else "2step-right"
@@ -98,14 +102,21 @@ def test_describe_is_json_ready_and_totals_sum():
         mode_axes={0: "data", 2: "model"},
         axis_sizes={"data": 2, "model": 4},
     )
+    # totals sum over every schedule node, whatever tree auto picked
     plan = plan_sweep(problem)
     d = json.loads(json.dumps(plan.describe()))
     assert d["sharded"] and d["local_shape"] == [4, 6, 1, 4]
     assert len(d["modes"]) == 4
+    assert len(d["nodes"]) >= 4  # the 4 leaves, plus any partials
     for key in ("flops", "bytes", "collective_bytes", "predicted_s"):
-        assert d["totals"][key] == pytest.approx(sum(m[key] for m in d["modes"]))
-    # every mode psums over the *other* mapped mode's axis; none is free
-    assert all(m["collective_bytes"] > 0 for m in d["modes"])
+        assert d["totals"][key] == pytest.approx(sum(n[key] for n in d["nodes"]))
+    # on the flat schedule the node rows ARE the per-mode rows, and every
+    # mode psums over the *other* mapped mode's axis; none is free
+    flat = json.loads(json.dumps(plan_sweep(problem, schedule="flat").describe()))
+    assert flat["schedule"] == "flat" and len(flat["nodes"]) == 4
+    for key in ("flops", "bytes", "collective_bytes", "predicted_s"):
+        assert flat["totals"][key] == pytest.approx(sum(m[key] for m in flat["modes"]))
+    assert all(m["collective_bytes"] > 0 for m in flat["modes"])
     # unsharded problems predict zero collective traffic
     local = plan_sweep(Problem(shape=(8, 6, 4, 4), rank=3)).describe()
     assert local["totals"]["collective_bytes"] == 0.0
@@ -327,8 +338,12 @@ def test_select_executor_cost_argmin():
         shape=(2, 64, 2), rank=4096, mode_axes={0: "data"}, axis_sizes={"data": 2}
     )
     assert select_executor(bound) == "compressed"
-    # dimtree partials are not chunked/compressed -> plain sharded
-    assert select_executor(sharded, "dimtree") == "sharded"
+    # dimtree plans compete on the same footing: their per-node psums can be
+    # overlapped or compressed too, so selection is a cost argmin, not a
+    # forced "sharded" (this tiny collective-bound tree clears the >10%
+    # compression margin; the exact executors remain selectable by force)
+    assert select_executor(sharded, "dimtree") in ("overlapping", "compressed")
+    assert plan_sweep(sharded, strategy="dimtree", executor="overlapping").executor == "overlapping"
     # plan_sweep agrees and stamps the choice on the plan
     for problem in (sharded, bound):
         plan = plan_sweep(problem)
@@ -342,11 +357,20 @@ def test_plan_executor_validation():
     sharded = Problem(
         shape=(4, 4), rank=2, mode_axes={0: "data"}, axis_sizes={"data": 2}
     )
-    with pytest.raises(ValueError):  # local executor cannot run sharded problems
-        plan_sweep(sharded, executor="local")
-    with pytest.raises(ValueError):  # overlap needs a sharded problem
+    with pytest.raises(ValueError, match="cannot run this problem"):
+        plan_sweep(sharded, executor="local")  # local cannot run sharded problems
+    with pytest.raises(ValueError, match="cannot run this problem"):
         plan_sweep(Problem(shape=(4, 4), rank=2), executor="overlapping")
-    with pytest.raises(ValueError):  # dimtree halves are not chunked
+    # any (schedule, executor) pair is costed or rejected by the one shared
+    # predicate: dimtree + compressed/overlapping is now a valid pairing...
+    sharded3 = Problem(
+        shape=(4, 4, 4), rank=2, mode_axes={0: "data"}, axis_sizes={"data": 2}
+    )
+    plan = plan_sweep(sharded3, strategy="dimtree", executor="compressed")
+    assert plan.executor == "compressed" and plan.kind == "dimtree"
+    # ...and compressed on an unsharded problem is rejected with the same
+    # message the flat schedule gets
+    with pytest.raises(ValueError, match="cannot run this problem"):
         plan_sweep(
             Problem(shape=(4, 4, 4), rank=2), strategy="dimtree", executor="compressed"
         )
@@ -403,7 +427,9 @@ if HAVE_HYPOTHESIS:
         rank=st.integers(1, 32),
     )
     def test_auto_plan_invariants(shape, rank):
-        plan = plan_sweep(Problem(shape=tuple(shape), rank=rank))
+        # the per-mode invariants live on the flat schedule; tree-schedule
+        # invariants are property-tested in test_schedule.py
+        plan = plan_sweep(Problem(shape=tuple(shape), rank=rank), schedule="flat")
         assert [m.mode for m in plan.modes] == list(range(len(shape)))
         # external modes are always 1-step (2-step degenerates there)
         assert plan.modes[0].algorithm == "1step"
