@@ -29,7 +29,18 @@ them in the JSON, and re-plans through
 ``plan_sweep(..., serial_fractions=...)`` so the artifact also carries the
 calibrated predictions -- closing the model-calibration loop.
 
-    PYTHONPATH=src python -m benchmarks.bench_mttkrp --smoke --calibrate --json out.json
+``--autotune`` runs the measured-cost loop of ``repro.plan.autotune`` on
+the first benchmark shape: candidate Pallas tilings and every candidate
+plan node are timed on the attached device (wall-clock capped by
+``--budget-ms``), the winners persist in the tuning cache named by
+``--tuning-cache`` (in-memory when omitted; CI uploads the file as an
+artifact), and the JSON gains an ``autotune`` section with tuned-vs-default
+tile rows plus the measured-vs-predicted node rows of the resulting
+``plan_sweep(strategy="autotune")`` plan.  The first CPU-smoke baseline is
+committed in-tree as ``benchmarks/BENCH_autotune.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_mttkrp --smoke --calibrate \
+        --autotune --budget-ms 2000 --json out.json
 """
 
 from __future__ import annotations
@@ -264,7 +275,78 @@ def _dims(n: int, total: float) -> tuple[int, ...]:
     return (d,) * n
 
 
-def collect(full: bool = False, smoke: bool = False, calibrate: bool = False) -> dict:
+def autotune_section(
+    total: float, reps: int, budget_ms: float, cache_path: str | None
+) -> dict:
+    """Tuned-vs-default tile rows + measured-vs-predicted autotune-plan rows.
+
+    Runs :func:`repro.plan.autotune.tune` on the order-3 benchmark shape
+    (tile candidates for both Pallas kernels, then every node of every
+    candidate (schedule x executor) plan, budget-capped), persists the
+    winners in ``cache_path`` when given, and re-plans through
+    ``plan_sweep(strategy="autotune")`` so the section records exactly what
+    the measured argmin chose -- per node, with the analytic prediction
+    kept alongside the measurement.
+    """
+    from repro.plan.autotune import TuningCache, problem_key, tune
+
+    shape = _dims(3, total)
+    cache = TuningCache(cache_path)
+    x = random_tensor(jax.random.PRNGKey(6), shape)
+    factors = random_factors(jax.random.PRNGKey(7), shape, C)
+    entry = tune(x, C, factors=factors, cache=cache, budget_ms=budget_ms, reps=reps)
+    problem = Problem(shape=shape, rank=C, dtype="float32")
+    plan = plan_sweep(problem, strategy="autotune", tuning_cache=cache)
+    tile_rows = {
+        kernel: {
+            "tuned": {
+                k: v for k, v in info.items() if k in ("block_i", "block_b")
+            },
+            "default_s": info["default_s"],
+            "tuned_s": info["tuned_s"],
+            "speedup_vs_default": info["speedup_vs_default"],
+            "rows": info["rows"],
+        }
+        for kernel, info in entry["tiles"].items()
+    }
+    node_rows = [
+        {
+            "node": np_.node.id,
+            "modes": list(np_.node.modes),
+            "algorithm": np_.algorithm,
+            "tiles": dict(np_.tiles) if np_.tiles else None,
+            "predicted_s": np_.cost.predicted_s,
+            "measured_s": np_.cost.measured_s,
+        }
+        for np_ in plan.nodes
+    ]
+    return {
+        "shape": list(shape),
+        "rank": C,
+        "budget_ms": budget_ms,
+        "elapsed_ms": entry["elapsed_ms"],
+        "cache_key": problem_key(problem),
+        "cache_path": cache_path,
+        "n_measured_nodes": len(entry["nodes"]),
+        "serial_fractions": entry["serial_fractions"],
+        "tiles": tile_rows,
+        "plan": {
+            "strategy": "autotune",
+            "schedule": plan.resolved_schedule.name,
+            "executor": plan.executor,
+            "nodes": node_rows,
+        },
+    }
+
+
+def collect(
+    full: bool = False,
+    smoke: bool = False,
+    calibrate: bool = False,
+    autotune: bool = False,
+    budget_ms: float = 2000.0,
+    tuning_cache: str | None = None,
+) -> dict:
     """Measure all shapes; returns {"plans": [...], "results": [...]}."""
     if full and smoke:
         raise ValueError("--full and --smoke are mutually exclusive")
@@ -345,6 +427,23 @@ def collect(full: bool = False, smoke: bool = False, calibrate: bool = False) ->
         "plans": plans, "results": results, "overlap": overlap,
         "schedule": schedule,
     }
+    if autotune:
+        at = autotune_section(total, reps, budget_ms, tuning_cache)
+        for kernel, info in at["tiles"].items():
+            rec(
+                f"autotune_{kernel}_tuned",
+                info["tuned_s"],
+                f"tiles={info['tuned']};default_s={info['default_s']:.3e};"
+                f"speedup={info['speedup_vs_default']:.2f}x",
+            )
+        for r in at["plan"]["nodes"]:
+            if r["measured_s"] is not None:
+                rec(
+                    f"autotune_plan_node{r['node']}",
+                    r["measured_s"],
+                    f"alg={r['algorithm']};predicted_s={r['predicted_s']:.3e}",
+                )
+        data["autotune"] = at
     if calibrate:
         fitted = calibrate_serial_fractions(overlap)
         calibration = {"serial_fractions": fitted, "source": "overlap.modes measured rows"}
@@ -384,10 +483,24 @@ def main() -> None:
                     help="fit per-executor serial_fraction from the measured "
                          "overlap rows and record it (with calibrated "
                          "re-predictions) in the JSON")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the measured-cost loop (tile + plan-node "
+                         "timings via repro.plan.autotune.tune) and record "
+                         "tuned-vs-default / measured-vs-predicted rows")
+    ap.add_argument("--budget-ms", type=float, default=2000.0, metavar="MS",
+                    help="wall-clock cap for --autotune measurements "
+                         "(compile time included; default 2000)")
+    ap.add_argument("--tuning-cache", default=None, metavar="PATH",
+                    help="persist --autotune winners in this TuningCache "
+                         "file (in-memory when omitted)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write measurements + SweepPlan.describe() as JSON")
     args = ap.parse_args()
-    data = collect(full=args.full, smoke=args.smoke, calibrate=args.calibrate)
+    data = collect(
+        full=args.full, smoke=args.smoke, calibrate=args.calibrate,
+        autotune=args.autotune, budget_ms=args.budget_ms,
+        tuning_cache=args.tuning_cache,
+    )
     for r in data["results"]:
         print(row(r["name"], r["median_s"], r["derived"]))
     if args.calibrate:

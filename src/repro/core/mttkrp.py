@@ -18,7 +18,7 @@ approach since we still exclude KRP-formation time there).
 from __future__ import annotations
 
 import math
-from typing import Literal, Sequence
+from typing import Literal, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -136,13 +136,17 @@ def mttkrp(
     n: int,
     *,
     method: Method = "auto",
+    tiles: Mapping[str, int] | None = None,
 ) -> Array:
     """Dispatching MTTKRP.
 
     ``method='auto'`` reproduces the paper's recommended configuration
     (Sec. 5.3.3): 1-step for external modes (where 2-step degenerates anyway)
     and 2-step for internal modes.  ``'fused'`` routes to the Pallas kernel
-    (beyond-paper: KRP never materialized in HBM) via repro.kernels.ops.
+    (beyond-paper: KRP never materialized in HBM) via repro.kernels.ops;
+    ``tiles`` (``{"block_i": ..., "block_b": ...}``, from the autotuner's
+    ``NodePlan.tiles``) overrides that kernel's tile sizes and is ignored by
+    the non-kernel methods (their blocking is XLA's concern).
     """
     if method == "auto":
         method = "1step" if n in (0, len(factors) - 1) else "2step"
@@ -161,7 +165,12 @@ def mttkrp(
     if method == "fused":
         from repro.kernels import ops as kops  # lazy: kernels import pallas
 
-        return kops.fused_mttkrp(x, list(factors), n)
+        kw = {
+            k: int(v)
+            for k, v in (tiles or {}).items()
+            if k in ("block_i", "block_b")
+        }
+        return kops.fused_mttkrp(x, list(factors), n, **kw)
     raise ValueError(f"unknown method {method!r}")
 
 

@@ -112,11 +112,14 @@ def dist_mttkrp(
     mode_axes: ModeAxes,
     mesh: Mesh,
     method: Method = "auto",
+    tiles: Mapping[str, int] | None = None,
 ) -> Array:
     """Mode-``n`` MTTKRP of a block-distributed tensor.
 
     Local shared-memory kernel inside ``shard_map`` + the minimal ``psum``:
-    only over axes mapped to contracted modes.  The result is distributed
+    only over axes mapped to contracted modes (``tiles`` threads the tuned
+    Pallas tiling into the local kernel for kernel-backed methods).  The
+    result is distributed
     over ``mode_axes[n]`` (replicated if mode ``n`` is unmapped) -- the
     sharding of the factor it updates in ALS.
     """
@@ -124,7 +127,7 @@ def dist_mttkrp(
     reduce_axes = _reduce_axes(mode_axes, keep_modes=(n,))
 
     def local_fn(x_blk, *f_blks):
-        m = mttkrp(x_blk, list(f_blks), n, method=method)
+        m = mttkrp(x_blk, list(f_blks), n, method=method, tiles=tiles)
         if reduce_axes:
             m = jax.lax.psum(m, reduce_axes)
         return m
@@ -157,6 +160,7 @@ def dist_mttkrp_overlapped(
     mesh: Mesh,
     method: Method = "auto",
     n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
+    tiles: Mapping[str, int] | None = None,
 ) -> Array:
     """Mode-``n`` MTTKRP with the completing psum hidden behind the GEMMs.
 
@@ -177,7 +181,7 @@ def dist_mttkrp_overlapped(
     reduce_axes = _reduce_axes(mode_axes, keep_modes=(n,))
     local_in = x.shape[n] // (mesh.shape[mode_axes[n]] if n in mode_axes else 1)
     if not reduce_axes or n_chunks <= 1 or local_in <= 1:
-        return dist_mttkrp(x, factors, n, mode_axes, mesh, method=method)
+        return dist_mttkrp(x, factors, n, mode_axes, mesh, method=method, tiles=tiles)
     bounds = _chunk_bounds(local_in, n_chunks)
 
     def local_fn(x_blk, *f_blks):
@@ -189,6 +193,7 @@ def dist_mttkrp_overlapped(
                 list(f_blks),
                 n,
                 method=method,
+                tiles=tiles,
             )
             for i0, i1 in zip(bounds[:-1], bounds[1:])
         ]
@@ -240,6 +245,7 @@ def dist_mttkrp_compressed(
     mesh: Mesh,
     err: Array,
     method: Method = "auto",
+    tiles: Mapping[str, int] | None = None,
 ) -> tuple[Array, Array]:
     """Mode-``n`` MTTKRP completed by the int8 error-feedback collective.
 
@@ -256,11 +262,11 @@ def dist_mttkrp_compressed(
     _validate(x.shape, mode_axes, mesh)
     reduce_axes = _reduce_axes(mode_axes, keep_modes=(n,))
     if not reduce_axes:
-        return dist_mttkrp(x, factors, n, mode_axes, mesh, method=method), err
+        return dist_mttkrp(x, factors, n, mode_axes, mesh, method=method, tiles=tiles), err
     err_spec = P(*reduce_axes, mode_axes.get(n), None)
 
     def local_fn(x_blk, err_blk, *f_blks):
-        m = mttkrp(x_blk, list(f_blks), n, method=method)
+        m = mttkrp(x_blk, list(f_blks), n, method=method, tiles=tiles)
         total, new_e = compressed_psum(m, reduce_axes, err_blk.reshape(m.shape))
         return total, new_e.reshape(err_blk.shape)
 

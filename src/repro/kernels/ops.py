@@ -174,12 +174,21 @@ def multi_ttv(
     return out[:dim_i].astype(t.dtype)
 
 
+@partial(jax.jit, static_argnames=("n", "block_i", "interpret"))
 def mttkrp_2step_kernel(
-    x: Array, factors: Sequence[Array], n: int, *, interpret: bool | None = None
+    x: Array,
+    factors: Sequence[Array],
+    n: int,
+    *,
+    block_i: int = 256,
+    interpret: bool | None = None,
 ) -> Array:
     """Alg. 4 with the partial MTTKRP on the MXU (plain dot) and the 2nd-step
     multi-TTV in the Pallas kernel.  Right-first ordering shown; the left
-    variant transposes into the same kernel form."""
+    variant transposes into the same kernel form.  jit'd with the mode /
+    tile / interpret flags static so repeated calls on the same shapes reuse
+    the trace instead of re-running the reshape + padding logic; ``block_i``
+    is the multi-TTV kernel's (autotunable) row tile."""
     factors = list(factors)
     c = factors[0].shape[1]
     big_l, in_dim, big_r = dims_split(x.shape, n)
@@ -190,9 +199,9 @@ def mttkrp_2step_kernel(
         k_r = krp_or_ones(right, c, x.dtype)
         r_t = (x.reshape(big_l * in_dim, big_r) @ k_r).reshape(big_l, in_dim, c)
         k_l = krp_or_ones(left, c, x.dtype)
-        return multi_ttv(r_t, k_l, interpret=interpret)
+        return multi_ttv(r_t, k_l, block_i=block_i, interpret=interpret)
     k_l = krp_or_ones(left, c, x.dtype)
     l_t = (k_l.T @ x.reshape(big_l, in_dim * big_r)).reshape(c, in_dim, big_r)
     k_r = krp_or_ones(right, c, x.dtype)
     # transpose (C, I, R) -> (R, I, C): same multi-TTV form over r.
-    return multi_ttv(jnp.transpose(l_t, (2, 1, 0)), k_r, interpret=interpret)
+    return multi_ttv(jnp.transpose(l_t, (2, 1, 0)), k_r, block_i=block_i, interpret=interpret)

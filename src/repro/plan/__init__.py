@@ -27,13 +27,30 @@ The solver API redesigned around four pieces:
   :func:`make_executor` builds the instance a ``SweepPlan.executor`` kind
   names.
 
+* :mod:`repro.plan.autotune` -- the measured side of the loop:
+  :func:`tune` times candidate Pallas tilings and candidate
+  (schedule x executor) plans on the attached device, a persistent
+  :class:`TuningCache` (keyed by backend/shape/rank/dtype/device-count)
+  remembers the winners, and ``plan_sweep(strategy="autotune")`` argmins
+  over the measurements where available (stamping ``measured_s`` into
+  ``SweepPlan.describe()`` and tuned tiles onto ``NodePlan.tiles``),
+  falling back to the analytic model everywhere else.
+
 Exactly one :func:`als_sweep` engine (a schedule walker) and one
-:func:`cp_als` driver consume them; the pre-redesign entry points
+:func:`cp_als` driver (sync-free: ``sweeps_per_sync`` sweeps per device
+dispatch under ``lax.scan``, bitwise-identical iterates) consume them; the pre-redesign entry points
 (``core.cpals.cp_als``, ``core.dimtree.dimtree_sweep``,
 ``dist.dist_mttkrp.dist_cp_als`` / ``dist_dimtree_sweep``) remain as frozen
 thin wrappers that build the corresponding plan.
 """
 
+from .autotune import (
+    Measurements,
+    TuningCache,
+    default_tuning_cache,
+    lookup_measurements,
+    tune,
+)
 from .cost import (
     ALGORITHMS,
     DEFAULT_OVERLAP_CHUNKS,
@@ -86,6 +103,7 @@ __all__ = [
     "ContractionNode",
     "Executor",
     "LocalExecutor",
+    "Measurements",
     "ModeCost",
     "ModePlan",
     "NodePlan",
@@ -95,22 +113,26 @@ __all__ = [
     "ShardedExecutor",
     "SweepPlan",
     "SweepState",
+    "TuningCache",
     "als_sweep",
     "binary_schedule",
     "build_schedule",
     "chain_schedule",
     "compressed_allgather_bytes",
     "cp_als",
+    "default_tuning_cache",
     "dimtree_mode_cost",
     "enumerate_schedules",
     "executor_mode_cost",
     "flat_schedule",
     "legacy_sweep",
+    "lookup_measurements",
     "make_executor",
     "mode_cost",
     "node_cost",
     "plan_sweep",
     "ring_allreduce_bytes",
     "select_executor",
+    "tune",
     "validate_executor",
 ]

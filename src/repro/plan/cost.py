@@ -105,6 +105,14 @@ class ModeCost:
     per-device wire volume (0 on unsharded problems).  ``serial_fraction``
     is the executor's unhidable share of the smaller of compute/collective
     time (1.0 = no overlap, the additive model).
+
+    ``measured_s`` is a hardware-measured wall time for this exact
+    contraction (from :mod:`repro.plan.autotune`'s ``TuningCache``), ``None``
+    when never measured.  The analytic prediction is always kept alongside
+    it: ``predicted_s`` stays model-only, ``expected_s`` prefers the
+    measurement when one exists -- the planner's ``strategy='autotune'``
+    argmins over ``expected_s`` (per comparison set; see
+    :mod:`repro.plan.planner`).
     """
 
     gemm_flops: float
@@ -113,6 +121,7 @@ class ModeCost:
     bytes: float
     collective_bytes: float = 0.0
     serial_fraction: float = 1.0
+    measured_s: float | None = None
 
     @property
     def flops(self) -> float:
@@ -138,6 +147,12 @@ class ModeCost:
         return max(c, q) + self.serial_fraction * min(c, q)
 
     @property
+    def expected_s(self) -> float:
+        """Best available time estimate: the hardware measurement when one
+        exists (``measured_s``), the analytic ``predicted_s`` otherwise."""
+        return self.predicted_s if self.measured_s is None else self.measured_s
+
+    @property
     def predicted_overlap_efficiency(self) -> float:
         """Fraction of the hidable (smaller) term actually hidden:
         ``1 - serial_fraction`` when there is a collective to hide, else 0."""
@@ -159,6 +174,8 @@ class ModeCost:
             "collective_s": self.collective_s,
             "predicted_overlap_efficiency": self.predicted_overlap_efficiency,
             "predicted_s": self.predicted_s,
+            "measured_s": self.measured_s,
+            "expected_s": self.expected_s,
         }
 
 

@@ -24,7 +24,7 @@ an instance bound to a concrete mesh.
 
 from __future__ import annotations
 
-from typing import Any, Protocol, Sequence, runtime_checkable
+from typing import Any, Mapping, Protocol, Sequence, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -71,10 +71,12 @@ class Executor(Protocol):
 
     def contract(
         self, node: ContractionNode, src: Array, factors: Sequence[Array],
-        algorithm: str = "auto",
+        algorithm: str = "auto", tiles: Mapping[str, int] | None = None,
     ) -> Array:
         """Run one schedule node's contraction of ``src`` (the parent's
-        output; the raw tensor for children of the root)."""
+        output; the raw tensor for children of the root).  ``tiles`` is the
+        plan's tuned Pallas tile config for kernel-backed algorithms
+        (``NodePlan.tiles``); ``None`` keeps the kernel defaults."""
         ...
 
 
@@ -87,14 +89,15 @@ class LocalExecutor:
 
     def contract(
         self, node: ContractionNode, src: Array, factors: Sequence[Array],
-        algorithm: str = "auto",
+        algorithm: str = "auto", tiles: Mapping[str, int] | None = None,
     ) -> Array:
         """One schedule node locally: planned MTTKRP for leaves off the
-        root, range GEMM for internal nodes off the root, multi-TTV einsum
+        root (tuned Pallas tiles threaded through for the fused kernel),
+        range GEMM for internal nodes off the root, multi-TTV einsum
         for anything contracted from a partial."""
         if node.from_root:
             if node.is_leaf:
-                return mttkrp(src, list(factors), node.mode, method=algorithm)
+                return mttkrp(src, list(factors), node.mode, method=algorithm, tiles=tiles)
             return partial_mttkrp_range(src, list(factors), node.lo, node.hi)
         sibs = {m: factors[m] for m in node.contracted}
         return contract_from_partial(src, sibs, node.lo, node.hi, node.parent_lo)
@@ -124,14 +127,14 @@ class ShardedExecutor:
 
     def contract(
         self, node: ContractionNode, src: Array, factors: Sequence[Array],
-        algorithm: str = "auto",
+        algorithm: str = "auto", tiles: Mapping[str, int] | None = None,
     ) -> Array:
         """One schedule node on the mesh: local kernel per block + this
         node's psum over the axes mapped to its contracted modes."""
         if node.from_root and node.is_leaf:
             return dist_mttkrp(
                 src, list(factors), node.mode, self.mode_axes, self.mesh,
-                method=algorithm,
+                method=algorithm, tiles=tiles,
             )
         if node.from_root:
             return dist_contract_range(
@@ -169,15 +172,15 @@ class OverlappingExecutor(ShardedExecutor):
 
     def contract(
         self, node: ContractionNode, src: Array, factors: Sequence[Array],
-        algorithm: str = "auto",
+        algorithm: str = "auto", tiles: Mapping[str, int] | None = None,
     ) -> Array:
         """One schedule node with its psum hidden behind chunked GEMMs."""
         if node.from_root and node.is_leaf:
             return dist_mttkrp_overlapped(
                 src, list(factors), node.mode, self.mode_axes, self.mesh,
-                method=algorithm, n_chunks=self.n_chunks,
+                method=algorithm, n_chunks=self.n_chunks, tiles=tiles,
             )
-        return super().contract(node, src, factors, algorithm)
+        return super().contract(node, src, factors, algorithm, tiles=tiles)
 
 
 class CompressedShardedExecutor(ShardedExecutor):
@@ -221,19 +224,21 @@ class CompressedShardedExecutor(ShardedExecutor):
         factors: Sequence[Array],
         algorithm: str,
         carry: Any,
+        tiles: Mapping[str, int] | None = None,
     ) -> tuple[Array, Any]:
         """Compressed node contraction; returns ``(result, new_carry)``.
 
         Dispatches to the compressed variant matching the node's topology
-        when a residual exists for it, the exact path otherwise.
+        when a residual exists for it, the exact path otherwise; ``tiles``
+        threads the plan's tuned kernel tiling into the local contraction.
         """
         if carry is None or node.id not in carry:
-            return self.contract(node, src, factors, algorithm), carry
+            return self.contract(node, src, factors, algorithm, tiles=tiles), carry
         err = carry[node.id]
         if node.from_root and node.is_leaf:
             out, new_err = dist_mttkrp_compressed(
                 src, list(factors), node.mode, self.mode_axes, self.mesh, err,
-                method=algorithm,
+                method=algorithm, tiles=tiles,
             )
         elif node.from_root:
             out, new_err = dist_contract_range_compressed(

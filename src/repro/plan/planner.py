@@ -28,7 +28,7 @@ executor instance given the concrete mesh.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Mapping
 
 from .cost import (
@@ -51,6 +51,7 @@ from .schedule import (
 
 STRATEGIES = (
     "auto",
+    "autotune",
     "1step",
     "2step",
     "2step-left",
@@ -96,16 +97,25 @@ class NodePlan:
 
     ``algorithm`` is a per-mode MTTKRP method for leaves off the root,
     ``"partial-krp"`` for root-level partial GEMMs, and ``"partial-ttv"``
-    for contractions of an already-computed partial.
+    for contractions of an already-computed partial.  ``tiles`` carries the
+    hardware-tuned Pallas tile config (``{"block_i": ..., "block_b": ...}``)
+    when ``strategy='autotune'`` planned a kernel-backed algorithm; the
+    executors thread it into :mod:`repro.kernels.ops`.
     """
 
     node: ContractionNode
     algorithm: str
     cost: ModeCost
+    tiles: Mapping[str, int] | None = None
 
     def as_dict(self) -> dict:
         """JSON-ready row: node topology/psum metadata + every cost term."""
-        return {**self.node.as_dict(), "algorithm": self.algorithm, **self.cost.as_dict()}
+        return {
+            **self.node.as_dict(),
+            "algorithm": self.algorithm,
+            "tiles": dict(self.tiles) if self.tiles else None,
+            **self.cost.as_dict(),
+        }
 
 
 @dataclass(frozen=True)
@@ -197,23 +207,52 @@ def _auto_mode(
     executor: str,
     n_chunks: int,
     serial_fractions: Mapping[str, float] | None = None,
+    node: ContractionNode | None = None,
+    measured=None,
 ) -> ModePlan:
-    """Cost-model dispatch for one mode (reproduces paper Sec. 5.3.3)."""
+    """Cost-model dispatch for one mode (reproduces paper Sec. 5.3.3).
+
+    With ``measured`` (a :class:`repro.plan.autotune.Measurements`, under
+    ``strategy='autotune'``) every candidate's hardware measurement is
+    stamped on its cost; when the *whole* candidate set is measured the
+    choice is a strict argmin over measured seconds (the paper's own Sec. 5
+    methodology) and the Pallas ``fused`` kernel joins the candidates.
+    Measured and analytic seconds never compete inside one comparison --
+    a partially measured set falls back to the analytic near-tie rule.
+    """
 
     def cost(alg: str) -> ModeCost:
-        return executor_mode_cost(
+        c = executor_mode_cost(
             problem, n, alg, executor, n_chunks=n_chunks,
             serial_fractions=serial_fractions,
         )
+        if measured is not None and node is not None:
+            m = measured.node_time(node, alg, executor)
+            if m is not None:
+                c = replace(c, measured_s=m)
+        return c
+
+    cands: dict[str, ModeCost] = {"1step": cost("1step")}
+    if not problem.external_mode(n):
+        cands["2step-left"] = cost("2step-left")
+        cands["2step-right"] = cost("2step-right")
+    if (
+        measured is not None
+        and node is not None
+        and measured.node_time(node, "fused", executor) is not None
+    ):
+        cands["fused"] = cost("fused")
+    if len(cands) > 1 and all(c.measured_s is not None for c in cands.values()):
+        alg = min(cands, key=lambda a: cands[a].measured_s)
+        return ModePlan(n, alg, cands[alg])
 
     if problem.external_mode(n):
         # 2-step degenerates to 1-step here; only 1-step is a real candidate.
-        return ModePlan(n, "1step", cost("1step"))
-    right = cost("2step-right")
-    left = cost("2step-left")
+        return ModePlan(n, "1step", cands["1step"])
+    left, right = cands["2step-left"], cands["2step-right"]
     # strict < keeps the Alg. 4 tie convention (L == R resolves right-first)
     two_alg, two = ("2step-left", left) if left.predicted_s < right.predicted_s else ("2step-right", right)
-    one = cost("1step")
+    one = cands["1step"]
     if one.predicted_s < _NEAR_TIE * two.predicted_s:
         return ModePlan(n, "1step", one)
     return ModePlan(n, two_alg, two)
@@ -226,13 +265,23 @@ def _plan_nodes(
     executor: str,
     n_chunks: int,
     serial_fractions: Mapping[str, float] | None,
+    measured=None,
 ) -> tuple[NodePlan, ...]:
-    """NodePlans in evaluation order for one (schedule, executor) pair."""
+    """NodePlans in evaluation order for one (schedule, executor) pair.
+
+    Under ``strategy='autotune'`` (``measured`` set) every node's hardware
+    measurement -- leaves and partial contractions alike -- is stamped on
+    its cost, and leaves planned onto a kernel-backed algorithm carry the
+    tuned Pallas tile config on ``NodePlan.tiles``.
+    """
     plans = []
     for node in sched.walk():
         if node.from_root and node.is_leaf:
-            if strategy == "auto":
-                mp = _auto_mode(problem, node.mode, executor, n_chunks, serial_fractions)
+            if strategy in ("auto", "autotune"):
+                mp = _auto_mode(
+                    problem, node.mode, executor, n_chunks, serial_fractions,
+                    node=node, measured=measured,
+                )
                 alg, cost = mp.algorithm, mp.cost
             else:
                 # forced strategies pin the leaf algorithm verbatim; tree
@@ -243,19 +292,23 @@ def _plan_nodes(
                     problem, node.mode, alg, executor, n_chunks=n_chunks,
                     serial_fractions=serial_fractions,
                 )
-            plans.append(NodePlan(node, alg, cost))
+            tiles = (
+                measured.kernel_tiles("fused_mttkrp")
+                if measured is not None and alg == "fused"
+                else None
+            )
+            plans.append(NodePlan(node, alg, cost, tiles=tiles))
         else:
             alg = "partial-krp" if node.from_root else "partial-ttv"
-            plans.append(
-                NodePlan(
-                    node,
-                    alg,
-                    node_cost(
-                        problem, node, executor, n_chunks=n_chunks,
-                        serial_fractions=serial_fractions,
-                    ),
-                )
+            cost = node_cost(
+                problem, node, executor, n_chunks=n_chunks,
+                serial_fractions=serial_fractions,
             )
+            if measured is not None:
+                m = measured.node_time(node, alg, executor)
+                if m is not None:
+                    cost = replace(cost, measured_s=m)
+            plans.append(NodePlan(node, alg, cost))
     return tuple(plans)
 
 
@@ -266,31 +319,53 @@ def _best_executor(
     candidates: tuple[str, ...],
     n_chunks: int,
     serial_fractions: Mapping[str, float] | None,
-) -> tuple[str, tuple[NodePlan, ...], float]:
+    measured=None,
+) -> tuple[str, tuple[NodePlan, ...], float, float | None]:
     """Cost-argmin executor for one schedule among ``candidates``.
 
     Exact kinds compete head-to-head (ties resolve to the earlier, plainer
     kind); ``compressed`` changes numerics, so it must beat the best exact
-    kind by >10% (``_COMPRESS_MARGIN``).
+    kind by >10% (``_COMPRESS_MARGIN``).  When every candidate's node plan
+    is fully measured (autotune), the comparison runs over measured sweep
+    seconds instead of the analytic predictions -- mixed sets stay on the
+    analytic basis so measured CPU milliseconds never race nominal-constant
+    nanoseconds.  Returns ``(kind, node plans, analytic total, measured
+    total-or-None)``.
     """
     plans = {
-        ex: _plan_nodes(problem, sched, strategy, ex, n_chunks, serial_fractions)
+        ex: _plan_nodes(
+            problem, sched, strategy, ex, n_chunks, serial_fractions, measured
+        )
         for ex in candidates
     }
-    totals = {
+    pred = {
         ex: sum(np_.cost.predicted_s for np_ in plans[ex]) for ex in candidates
     }
+    fully_measured = all(
+        np_.cost.measured_s is not None for ex in candidates for np_ in plans[ex]
+    ) and measured is not None
+    totals = (
+        {ex: sum(np_.cost.measured_s for np_ in plans[ex]) for ex in candidates}
+        if fully_measured
+        else pred
+    )
+
+    def result(ex: str) -> tuple[str, tuple[NodePlan, ...], float, float | None]:
+        meas = (
+            sum(np_.cost.measured_s for np_ in plans[ex]) if fully_measured else None
+        )
+        return ex, plans[ex], pred[ex], meas
+
     exacts = [ex for ex in candidates if ex != "compressed"]
     if not exacts:  # compressed was forced explicitly
-        ex = candidates[0]
-        return ex, plans[ex], totals[ex]
+        return result(candidates[0])
     best = exacts[0]
     for ex in exacts[1:]:
         if totals[ex] < totals[best]:
             best = ex
     if "compressed" in candidates and totals["compressed"] < _COMPRESS_MARGIN * totals[best]:
         best = "compressed"
-    return best, plans[best], totals[best]
+    return result(best)
 
 
 def _resolve_schedules(
@@ -314,7 +389,7 @@ def _resolve_schedules(
     assert schedule is None
     if strategy == "dimtree":
         return [binary_schedule(problem, split)]
-    if strategy == "auto":
+    if strategy in ("auto", "autotune"):
         return enumerate_schedules(problem)
     return [flat_schedule(problem)]
 
@@ -326,6 +401,7 @@ def select_executor(
     n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
     schedule=None,
     serial_fractions: Mapping[str, float] | None = None,
+    tuning_cache=None,
 ) -> str:
     """Cost-argmin executor kind for ``problem`` under ``strategy``.
 
@@ -342,6 +418,7 @@ def select_executor(
     return plan_sweep(
         problem, strategy, executor="auto", n_chunks=n_chunks,
         schedule=schedule, serial_fractions=serial_fractions,
+        tuning_cache=tuning_cache,
     ).executor
 
 
@@ -355,6 +432,7 @@ def plan_sweep(
     n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
     schedule: Schedule | str | None = None,
     serial_fractions: Mapping[str, float] | None = None,
+    tuning_cache=None,
 ) -> SweepPlan:
     """Plan one full ALS sweep for ``problem``.
 
@@ -382,6 +460,16 @@ def plan_sweep(
     --calibrate``) through every cost.  The choice lands on
     ``SweepPlan.executor``; :func:`repro.plan.executor.make_executor`
     builds the matching instance.
+
+    ``'autotune'`` closes the predict -> measure loop: hardware timings
+    recorded by :func:`repro.plan.autotune.tune` (read from
+    ``tuning_cache``, defaulting to the process cache -- planning itself
+    never measures) are stamped on every node cost, fully measured
+    comparison sets are argmin'd on measured seconds (the Pallas ``fused``
+    kernel joins the leaf candidates, carrying its tuned tiles on
+    ``NodePlan.tiles``), cached ``serial_fractions`` recalibrate the
+    overlap constants, and anything unmeasured keeps the analytic
+    ``node_cost`` -- an empty cache degrades to exactly ``'auto'``.
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r} (choose from {STRATEGIES})")
@@ -403,6 +491,18 @@ def plan_sweep(
                 )
             if not 0.0 <= float(f) <= 1.0:
                 raise ValueError(f"serial_fractions[{kind!r}] must be in [0, 1], got {f}")
+    measured = None
+    if strategy == "autotune":
+        from .autotune import lookup_measurements  # lazy: autotune plans via us
+
+        measured = lookup_measurements(problem, cache=tuning_cache)
+        if (
+            measured is not None
+            and serial_fractions is None
+            and measured.serial_fractions
+        ):
+            serial_fractions = dict(measured.serial_fractions)
+
     if executor != "auto":
         validate_executor(problem, executor)
         candidates = (executor,)
@@ -412,22 +512,30 @@ def plan_sweep(
         candidates = ("local",)
 
     schedules = _resolve_schedules(problem, strategy, split, schedule)
-    best = None  # (total, sched, executor, node_plans)
-    flat_total = None
-    for sched in schedules:
-        ex, nodes, total = _best_executor(
-            problem, sched, strategy, candidates, n_chunks, serial_fractions
+    results = [
+        (sched,)
+        + _best_executor(
+            problem, sched, strategy, candidates, n_chunks, serial_fractions,
+            measured,
         )
-        if sched.is_flat and flat_total is None:
-            flat_total = (total, sched, ex, nodes)
-        if best is None or total < best[0]:
-            best = (total, sched, ex, nodes)
-    assert best is not None
-    # near-tie preference: a tree must beat the flat sweep by >10% to win
-    if flat_total is not None and best[1] is not flat_total[1]:
-        if best[0] >= _NEAR_TIE * flat_total[0]:
-            best = flat_total
-    _, sched, chosen, node_plans = best
+        for sched in schedules
+    ]  # rows: (sched, executor, node_plans, analytic_total, measured_total)
+    if measured is not None and all(r[4] is not None for r in results):
+        # every candidate schedule fully measured: strict argmin on hardware
+        # seconds -- the measurement IS the tie-breaker, so the analytic
+        # flat preference does not apply
+        best = min(results, key=lambda r: r[4])
+    else:
+        best = results[0]
+        flat_row = next((r for r in results if r[0].is_flat), None)
+        for r in results[1:]:
+            if r[3] < best[3]:
+                best = r
+        # near-tie preference: a tree must beat the flat sweep by >10% to win
+        if flat_row is not None and best[0] is not flat_row[0]:
+            if best[3] >= _NEAR_TIE * flat_row[3]:
+                best = flat_row
+    sched, chosen, node_plans = best[0], best[1], best[2]
 
     modes = tuple(
         sorted(

@@ -41,6 +41,10 @@ from .schedule import ROOT
 
 Array = jax.Array
 
+# THE host-synchronization point of the cp_als driver: exactly one call per
+# dispatched chunk of sweeps.  Module-level so tests can count syncs.
+_block_until_ready = jax.block_until_ready
+
 
 @dataclass
 class SweepState:
@@ -50,7 +54,10 @@ class SweepState:
     ``carry`` is executor-private state threaded through the sweep (e.g. the
     per-mode error-feedback residuals of
     :class:`repro.plan.executor.CompressedShardedExecutor`); ``None`` for
-    stateless executors.
+    stateless executors.  ``grams`` carries the per-factor Gram matrices
+    ``U_k^T U_k`` across sweeps: each mode's update refreshes its own Gram,
+    so the next sweep starts from exact values without recomputing all N --
+    ``None`` (the single-shot default) recomputes them from the factors.
     """
 
     x: Array
@@ -60,11 +67,15 @@ class SweepState:
     it: Array
     fit: Array | float = 0.0
     carry: Any = None
+    grams: list[Array] | None = None
 
 
 jax.tree_util.register_pytree_node(
     SweepState,
-    lambda s: ((s.x, s.factors, s.weights, s.norm_x, s.it, s.fit, s.carry), None),
+    lambda s: (
+        (s.x, s.factors, s.weights, s.norm_x, s.it, s.fit, s.carry, s.grams),
+        None,
+    ),
     lambda _, c: SweepState(*c),
 )
 
@@ -89,6 +100,11 @@ def als_sweep(
     :class:`repro.plan.executor.Executor` protocol) have their private state
     -- e.g. per-node error-feedback residuals -- threaded through
     ``state.carry`` across every node contraction, partials included.
+
+    Gram matrices ride ``state.grams`` when the caller threads them across
+    sweeps (``cp_als`` does): each update refreshes exactly the changed
+    factor's Gram, so carried Grams are identical to recomputing all N from
+    the factors -- which is what happens when ``state.grams is None``.
     """
     x = state.x
     factors = list(state.factors)
@@ -96,7 +112,7 @@ def als_sweep(
     it = state.it
     carry = state.carry
     use_carry = hasattr(executor, "contract_carry")
-    gs = grams(factors)
+    gs = list(state.grams) if state.grams is not None else grams(factors)
     m_last = None
 
     def update(n: int, m: Array, weights: Array) -> Array:
@@ -114,11 +130,17 @@ def als_sweep(
     cache: dict[int, Array] = {ROOT: x}
     for node in sched.walk():
         src = cache[node.parent]
-        alg = plan.node_plan(node.id).algorithm if plan.nodes else "auto"
-        if use_carry:
-            out, carry = executor.contract_carry(node, src, factors, alg, carry)
+        if plan.nodes:
+            np_ = plan.node_plan(node.id)
+            alg, tiles = np_.algorithm, np_.tiles
         else:
-            out = executor.contract(node, src, factors, alg)
+            alg, tiles = "auto", None
+        if use_carry:
+            out, carry = executor.contract_carry(
+                node, src, factors, alg, carry, tiles=tiles
+            )
+        else:
+            out = executor.contract(node, src, factors, alg, tiles=tiles)
         if node.is_leaf:
             m_last = out
             weights = update(node.mode, m_last, weights)
@@ -129,7 +151,7 @@ def als_sweep(
     fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], state.norm_x)
     return SweepState(
         x=x, factors=factors, weights=weights, norm_x=state.norm_x, it=it, fit=fit,
-        carry=carry,
+        carry=carry, grams=gs,
     )
 
 
@@ -184,8 +206,9 @@ def cp_als(
     track_fit: bool = True,
     init_factors: list[Array] | None = None,
     callback: Callable[[int, float, float], None] | None = None,
+    sweeps_per_sync: int = 1,
 ) -> CPState:
-    """THE CP-ALS driver: init, jitted sweep loop, convergence stop.
+    """THE CP-ALS driver: init, sync-free chunked sweep loop, convergence stop.
 
     Replaces both ``core.cpals.cp_als`` and ``dist.dist_mttkrp.dist_cp_als``
     (which wrap it).  ``executor`` defaults to :class:`LocalExecutor` for
@@ -195,6 +218,17 @@ def cp_als(
     with carry state (compressed collectives) have it initialized here and
     threaded across iterations.  Per-iteration wall times go through
     ``callback(it, fit, seconds)`` so benchmarks can record them.
+
+    ``sweeps_per_sync`` makes the hot loop sync-free: each device dispatch
+    runs that many sweeps inside one compiled ``lax.scan`` (factor, Gram,
+    weight and carry buffers donated off-CPU) and the host blocks exactly
+    once per chunk -- the per-sweep iterates are bitwise identical to
+    ``sweeps_per_sync=1``, only the host round-trips change (one per chunk
+    instead of one per sweep).  Convergence is checked against the chunk's
+    per-sweep fits at each sync point, so a run may execute up to
+    ``sweeps_per_sync - 1`` sweeps past the first converged one; the
+    callback still fires once per executed sweep (with the chunk's mean
+    per-sweep seconds).
     """
     problem = plan.problem
     if executor is None:
@@ -205,9 +239,19 @@ def cp_als(
                 "repro.plan.make_executor(plan.executor, mesh, mode_axes)"
             )
         executor = LocalExecutor()
+    k = int(sweeps_per_sync)
+    if k < 1:
+        raise ValueError(f"sweeps_per_sync must be >= 1, got {sweeps_per_sync}")
     key = jax.random.PRNGKey(seed)
     factors = init_factors or random_factors(key, x.shape, problem.rank, x.dtype)
     x, factors = executor.prepare(problem, x, factors)
+    # donated buffers are deleted after the first dispatch; prepare() may
+    # pass caller arrays through unchanged (LocalExecutor), so donation is
+    # keyed off the backend (a no-op-with-warning on CPU) and caller-owned
+    # init_factors are copied once rather than invalidated under the caller.
+    donate = (3, 4, 5, 6) if jax.default_backend() != "cpu" else ()
+    if donate and init_factors is not None:
+        factors = [jnp.array(u, copy=True) for u in factors]
     weights = jnp.ones((problem.rank,), x.dtype)
     norm_x = tensor_norm(x).astype(x.dtype)
     carry = (
@@ -215,31 +259,51 @@ def cp_als(
         if hasattr(executor, "init_carry")
         else None
     )
+    # Grams are computed once here and carried across sweeps (each update
+    # refreshes exactly the changed factor's Gram inside the sweep).
+    gs = grams(factors)
 
-    # jit only the (factors, weights, fit, carry) outputs: returning state.x
-    # from the compiled fn would make XLA emit a full-tensor copy every
-    # iteration.
-    def _sweep(state: SweepState):
-        out = als_sweep(problem, plan, executor, state)
-        return out.factors, out.weights, out.fit, out.carry
+    # One dispatch = `length` sweeps under lax.scan.  jit only the evolving
+    # buffers out (returning x from the compiled fn would make XLA emit a
+    # full-tensor copy every chunk); donate them in so off-CPU backends
+    # update factors/Grams/carry in place.
+    def _chunk(x, norm_x, it0, factors, weights, gs, carry, length):
+        def body(c, _):
+            factors, weights, gs, carry, it = c
+            state = SweepState(
+                x=x, factors=factors, weights=weights, norm_x=norm_x,
+                it=it, carry=carry, grams=gs,
+            )
+            out = als_sweep(problem, plan, executor, state)
+            return (out.factors, out.weights, out.grams, out.carry, it + 1), out.fit
 
-    sweep = jax.jit(_sweep)
+        init = (factors, weights, gs, carry, it0)
+        (factors, weights, gs, carry, _), fits = jax.lax.scan(
+            body, init, None, length=length
+        )
+        return factors, weights, gs, carry, fits
+
+    chunk = jax.jit(_chunk, static_argnames=("length",), donate_argnums=donate)
 
     fit_prev = -math.inf
     fit = jnp.asarray(0.0, x.dtype)
     it = 0
-    for it in range(n_iters):
+    done = False
+    while it < n_iters and not done:
+        length = min(k, n_iters - it)
         t0 = time.perf_counter()
-        state = SweepState(
-            x=x, factors=factors, weights=weights, norm_x=norm_x,
-            it=jnp.asarray(it), carry=carry,
+        factors, weights, gs, carry, fits = chunk(
+            x, norm_x, jnp.asarray(it), factors, weights, gs, carry, length=length
         )
-        factors, weights, fit, carry = sweep(state)
-        fit = jax.block_until_ready(fit)
+        fits = _block_until_ready(fits)  # the chunk's single host sync
         dt = time.perf_counter() - t0
-        if callback is not None:
-            callback(it, float(fit), dt)
-        if track_fit and abs(float(fit) - float(fit_prev)) < tol:
-            break
-        fit_prev = float(fit)
-    return CPState(factors=factors, weights=weights, fit=fit, it=it + 1)
+        for j in range(length):
+            f = float(fits[j])
+            if callback is not None:
+                callback(it + j, f, dt / length)
+            if track_fit and abs(f - fit_prev) < tol:
+                done = True
+            fit_prev = f
+        it += length
+        fit = fits[length - 1]
+    return CPState(factors=factors, weights=weights, fit=fit, it=it)
