@@ -78,6 +78,12 @@ OVERLAP_RANK = 8
 SCHEDULE_SHAPE = (8, 6, 4, 4)
 SCHEDULE_RANK = 8
 
+# per-problem tensor of the batched section: deliberately small -- a fleet
+# of these is the regime where batch-parallel beats mode-parallel sharding
+BATCHED_SHAPE = (16, 16, 16)
+BATCHED_RANK = 8
+BATCHED_ITERS = 3
+
 
 def overlap_section(reps: int) -> dict:
     """Predicted-vs-measured overlap efficiency of the sharded executors.
@@ -235,6 +241,83 @@ def schedule_section(reps: int) -> dict:
     }
 
 
+def batched_section(batch: int, reps: int) -> dict:
+    """Problems/sec of one fused batched ``cp_als`` dispatch over a fleet.
+
+    Plans a fleet of ``batch`` same-shaped small tensors *given* a
+    mode-parallel sharding and records the planner's placement argmin (for a
+    small-tensor fleet it should re-place batch-parallel: B independent
+    problems need zero reduce traffic, vs psum volume x B mode-parallel) --
+    the ``placements`` rows carry both candidates' predicted seconds and
+    collective bytes straight from ``SweepPlan.describe()``.  Then times the
+    batched driver end-to-end (one compiled dispatch per sweep chunk,
+    ``sweeps_per_sync`` = all sweeps) and reports amortized per-problem ms
+    and problems/sec; when the runtime has a matching device fleet the
+    batch-parallel ``shard_map`` run is timed alongside the local one.
+    """
+    import time as _time
+
+    from repro.core.tensor_ops import random_factors as _rf
+    from repro.plan import cp_als
+
+    n_dev = jax.device_count()
+    shards = n_dev if n_dev > 1 and batch % n_dev == 0 else 8
+    given = Problem(
+        shape=BATCHED_SHAPE, rank=BATCHED_RANK, batch=batch,
+        mode_axes={0: "shard"}, axis_sizes={"shard": shards},
+    )
+    plan = plan_sweep(given)
+    desc = plan.describe()
+
+    def _time_run(x, run_plan, executor=None):
+        init = _rf(jax.random.PRNGKey(9), BATCHED_SHAPE, BATCHED_RANK, batch=batch)
+        # warmup compiles; timed runs then measure steady-state dispatches
+        cp_als(x, run_plan, executor=executor, n_iters=BATCHED_ITERS, tol=0.0,
+               init_factors=init, sweeps_per_sync=BATCHED_ITERS)
+        best = None
+        for _ in range(max(1, reps)):
+            t0 = _time.perf_counter()
+            cp_als(x, run_plan, executor=executor, n_iters=BATCHED_ITERS, tol=0.0,
+                   init_factors=init, sweeps_per_sync=BATCHED_ITERS)
+            dt = _time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        return best
+
+    x = random_tensor(jax.random.PRNGKey(8), (batch,) + BATCHED_SHAPE)
+    local_plan = plan_sweep(Problem(shape=BATCHED_SHAPE, rank=BATCHED_RANK, batch=batch))
+    t_local = _time_run(x, local_plan)
+    out = {
+        "batch": batch,
+        "shape": list(BATCHED_SHAPE),
+        "rank": BATCHED_RANK,
+        "n_iters": BATCHED_ITERS,
+        "placement": desc["placement"],
+        "placements": desc["placements"],
+        "local": {
+            "total_s": t_local,
+            "problems_per_s": batch / t_local,
+            "amortized_ms_per_problem": 1e3 * t_local / batch,
+        },
+        "batch_parallel": None,
+    }
+    if n_dev > 1 and batch % n_dev == 0:
+        mesh = jax.make_mesh((n_dev,), ("shard",))
+        bp = Problem(
+            shape=BATCHED_SHAPE, rank=BATCHED_RANK, batch=batch,
+            batch_axes=("shard",), axis_sizes={"shard": n_dev},
+        )
+        bp_plan = plan_sweep(bp)
+        executor = make_executor(bp_plan.executor, mesh, {}, batch_axes=("shard",))
+        t_bp = _time_run(x, bp_plan, executor=executor)
+        out["batch_parallel"] = {
+            "devices": n_dev,
+            "total_s": t_bp,
+            "problems_per_s": batch / t_bp,
+            "amortized_ms_per_problem": 1e3 * t_bp / batch,
+        }
+    return out
+
+
 def calibrate_serial_fractions(overlap: dict) -> dict:
     """Fit per-executor ``serial_fraction`` from measured overlap rows.
 
@@ -346,6 +429,7 @@ def collect(
     autotune: bool = False,
     budget_ms: float = 2000.0,
     tuning_cache: str | None = None,
+    batch: int = 0,
 ) -> dict:
     """Measure all shapes; returns {"plans": [...], "results": [...]}."""
     if full and smoke:
@@ -427,6 +511,23 @@ def collect(
         "plans": plans, "results": results, "overlap": overlap,
         "schedule": schedule,
     }
+    if batch > 1:
+        bt = batched_section(batch, reps)
+        rec(
+            f"batched_cp_als_B{batch}_local",
+            bt["local"]["total_s"],
+            f"problems_per_s={bt['local']['problems_per_s']:.1f};"
+            f"amortized_ms={bt['local']['amortized_ms_per_problem']:.3f};"
+            f"placement={bt['placement']}",
+        )
+        if bt["batch_parallel"] is not None:
+            rec(
+                f"batched_cp_als_B{batch}_batch_parallel",
+                bt["batch_parallel"]["total_s"],
+                f"problems_per_s={bt['batch_parallel']['problems_per_s']:.1f};"
+                f"amortized_ms={bt['batch_parallel']['amortized_ms_per_problem']:.3f}",
+            )
+        data["batched"] = bt
     if autotune:
         at = autotune_section(total, reps, budget_ms, tuning_cache)
         for kernel, info in at["tiles"].items():
@@ -493,13 +594,18 @@ def main() -> None:
     ap.add_argument("--tuning-cache", default=None, metavar="PATH",
                     help="persist --autotune winners in this TuningCache "
                          "file (in-memory when omitted)")
+    ap.add_argument("--batch", type=int, default=0, metavar="B",
+                    help="time one fused batched cp_als dispatch over a fleet "
+                         "of B small tensors (problems/sec + amortized "
+                         "per-problem ms; records the planner's "
+                         "batch-vs-mode placement argmin in the JSON)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write measurements + SweepPlan.describe() as JSON")
     args = ap.parse_args()
     data = collect(
         full=args.full, smoke=args.smoke, calibrate=args.calibrate,
         autotune=args.autotune, budget_ms=args.budget_ms,
-        tuning_cache=args.tuning_cache,
+        tuning_cache=args.tuning_cache, batch=args.batch,
     )
     for r in data["results"]:
         print(row(r["name"], r["median_s"], r["derived"]))

@@ -35,8 +35,8 @@ Array = jax.Array
 @dataclass
 class CPState:
     factors: list[Array]
-    weights: Array  # lambda, shape (C,)
-    fit: Array  # scalar in [.., 1]
+    weights: Array  # lambda, shape (C,) -- or (B, C) for batched problems
+    fit: Array  # scalar in [.., 1] -- or shape (B,) for batched problems
     it: int = 0
 
 
@@ -52,7 +52,9 @@ class CPConfig:
 
 
 def grams(factors: Sequence[Array]) -> list[Array]:
-    return [u.T @ u for u in factors]
+    # rank-polymorphic: (I, C) -> (C, C), and (B, I, C) -> (B, C, C); for the
+    # unbatched 2-D case swapaxes @ is exactly u.T @ u
+    return [jnp.swapaxes(u, -1, -2) @ u for u in factors]
 
 
 def hadamard_except(gs: Sequence[Array], n: int) -> Array:
@@ -75,21 +77,29 @@ def fit_from_last_mttkrp(
     """Fit via the factored identity, reusing the final mode's MTTKRP:
     ||X - Y||^2 = ||X||^2 - 2 <X, Y> + ||Y||^2  with
     <X, Y> = sum(M_last * (U_last * lambda)) and
-    ||Y||^2 = lambda^T ( *_k U_k^T U_k ) lambda."""
+    ||Y|| ^2 = lambda^T ( *_k U_k^T U_k ) lambda.
+
+    Rank-polymorphic: with batched arguments (leading ``B`` axis on every
+    operand, ``norm_x`` of shape ``(B,)``) the return is the per-problem fit
+    vector ``(B,)``; unbatched it stays the classic scalar."""
     n_modes = len(gs)
     full_h = gs[-1] * hadamard_except(gs, n_modes - 1)
-    norm_y_sq = jnp.einsum("c,cd,d->", weights, full_h, weights)
-    inner = jnp.sum(m_last * (last_factor * weights[None, :]))
+    norm_y_sq = jnp.einsum("...c,...cd,...d->...", weights, full_h, weights)
+    inner = jnp.sum(
+        m_last * (last_factor * weights[..., None, :]), axis=(-2, -1)
+    )
     resid_sq = jnp.maximum(norm_x**2 - 2.0 * inner + norm_y_sq, 0.0)
     return 1.0 - jnp.sqrt(resid_sq) / norm_x
 
 
 def normalize_columns(u: Array, it: int) -> tuple[Array, Array]:
     """Column norms -> lambda.  First sweep uses 2-norm, later sweeps use
-    max(1, norm) (the Tensor Toolbox convention that keeps lambdas stable)."""
-    norms = jnp.linalg.norm(u, axis=0)
+    max(1, norm) (the Tensor Toolbox convention that keeps lambdas stable).
+    Rank-polymorphic: norms are taken over the row axis (``-2``), so a
+    batched ``(B, I, C)`` factor yields ``(B, C)`` lambdas."""
+    norms = jnp.linalg.norm(u, axis=-2)
     norms = jnp.where(it == 0, norms, jnp.maximum(norms, 1.0))
-    return u / norms[None, :], norms
+    return u / norms[..., None, :], norms
 
 
 # Historical private name; dimtree.py and dist_mttkrp.py used to import it.

@@ -89,6 +89,33 @@ def krp_or_ones(mats: Sequence[Array], cols: int, dtype=jnp.float32) -> Array:
     return krp(mats)
 
 
+def krp_batched(mats: Sequence[Array]) -> Array:
+    """Reuse-based KRP over a leading batch axis.
+
+    Each ``mats[z]`` is ``(S, J_z, C)``; the result is ``(S, prod J_z, C)``
+    with the same row-major linearization as :func:`krp`, per batch entry
+    (each entry has its own factors, so nothing is shared across the batch).
+    """
+    if len(mats) == 0:
+        raise ValueError("KRP of zero matrices is undefined here; see krp_or_ones_batched")
+    out = mats[0]
+    for u in mats[1:]:
+        # (S, J_partial, 1, C) * (S, 1, J_z, C) -> flatten per batch entry
+        out = (out[:, :, None, :] * u[:, None, :, :]).reshape(
+            out.shape[0], -1, u.shape[2]
+        )
+    return out
+
+
+def krp_or_ones_batched(
+    mats: Sequence[Array], batch: int, cols: int, dtype=jnp.float32
+) -> Array:
+    """Batched :func:`krp_or_ones`: ``(S, 1, C)`` ones for an empty set."""
+    if len(mats) == 0:
+        return jnp.ones((batch, 1, cols), dtype)
+    return krp_batched(mats)
+
+
 def krp_row_block(mats: Sequence[Array], start: int, length: int) -> Array:
     """Rows ``[start, start+length)`` of the KRP, computed independently.
 

@@ -174,6 +174,41 @@ def mttkrp(
     raise ValueError(f"unknown method {method!r}")
 
 
+def mttkrp_batched(
+    x: Array,
+    factors: Sequence[Array],
+    n: int,
+    *,
+    method: Method = "auto",
+    tiles: Mapping[str, int] | None = None,
+) -> Array:
+    """MTTKRP over a leading batch axis: one dispatch for B stacked problems.
+
+    ``x`` is ``(B, *shape)`` and each factor is ``(B, I_k, C)``; the result is
+    ``(B, I_n, C)``.  The non-kernel methods are ``vmap`` of the unbatched
+    algorithms (einsum/reshape/dot all batch cleanly under vmap); ``'fused'``
+    routes to the Pallas kernel's native batch grid axis, which keeps the KRP
+    in registers per batch slab instead of materializing B of them.  ``tiles``
+    may carry ``block_batch`` in addition to the unbatched tile names.
+    """
+    if method == "auto":
+        method = "1step" if n in (0, len(factors) - 1) else "2step"
+    if method == "fused":
+        from repro.kernels import ops as kops  # lazy: kernels import pallas
+
+        kw = {
+            k: int(v)
+            for k, v in (tiles or {}).items()
+            if k in ("block_i", "block_b", "block_batch")
+        }
+        return kops.fused_mttkrp_batched(x, list(factors), n, **kw)
+
+    def one(xb, *fb):
+        return mttkrp(xb, list(fb), n, method=method, tiles=tiles)
+
+    return jax.vmap(one)(x, *factors)
+
+
 def mttkrp_flops(
     shape: Sequence[int],
     rank: int,
@@ -181,6 +216,7 @@ def mttkrp_flops(
     *,
     dtype=None,
     itemsize: float | None = None,
+    batch: int = 1,
 ) -> dict[str, float]:
     """Analytic flop/byte model per algorithm (used by benchmarks/roofline
     and the ``repro.plan`` cost model).
@@ -189,24 +225,29 @@ def mttkrp_flops(
     tensor read -- mirrors the paper's O(IC) GEMM / O(I_{neq n} C) KRP split.
     Byte terms scale with the element size: pass ``dtype`` (anything
     ``jnp.dtype`` accepts) or ``itemsize`` directly so bf16/f64 rooflines are
-    correct; the default remains 4-byte (f32) elements.
+    correct; the default remains 4-byte (f32) elements.  ``batch`` scales
+    every flop/byte term: a batched problem has its own tensor, factors, and
+    KRP per batch entry (nothing is shared across the batch).
     """
     if itemsize is None:
         import numpy as np  # jax dtypes (incl. bfloat16 via ml_dtypes) resolve here
 
         itemsize = float(np.dtype(dtype).itemsize) if dtype is not None else 4.0
+    b = float(batch)
     L, In, R = dims_split(shape, n)
     total = math.prod(shape)
-    gemm = 2.0 * total * rank
-    krp_full = float((L * R) * rank)  # reuse: ~1 hadamard mult per row
-    krp_naive = float((L * R) * rank * max(1, len(shape) - 2))
-    second_step = 2.0 * In * rank * min(L, R) if 0 < n < len(shape) - 1 else 0.0
+    gemm = 2.0 * total * rank * b
+    krp_full = float((L * R) * rank) * b  # reuse: ~1 hadamard mult per row
+    krp_naive = float((L * R) * rank * max(1, len(shape) - 2)) * b
+    second_step = (
+        2.0 * In * rank * min(L, R) * b if 0 < n < len(shape) - 1 else 0.0
+    )
     return {
         "gemm_flops": gemm,
         "krp_flops": krp_full,
         "krp_naive_flops": krp_naive,
         "second_step_flops": second_step,
-        "tensor_bytes": itemsize * total,
-        "krp_bytes": itemsize * L * R * rank,
+        "tensor_bytes": itemsize * total * b,
+        "krp_bytes": itemsize * L * R * rank * b,
         "itemsize": float(itemsize),
     }

@@ -136,9 +136,16 @@ def multi_ttv(t: Array, factors: Sequence[Array], cols_last: bool = True) -> Arr
     return jnp.einsum(",".join([spec_t] + spec_fs) + "->zc", t, *factors)
 
 
-def tensor_norm(x: Array) -> Array:
-    """Frobenius norm of a dense tensor."""
-    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+def tensor_norm(x: Array, *, batched: bool = False) -> Array:
+    """Frobenius norm of a dense tensor.
+
+    With ``batched=True`` the leading axis is a batch of tensors and the
+    result is the per-tensor norm vector of shape ``(B,)``.
+    """
+    sq = jnp.square(x.astype(jnp.float32))
+    if batched:
+        return jnp.sqrt(jnp.sum(sq, axis=tuple(range(1, x.ndim))))
+    return jnp.sqrt(jnp.sum(sq))
 
 
 def random_tensor(key: jax.Array, shape: Sequence[int], dtype=jnp.float32) -> Array:
@@ -146,11 +153,14 @@ def random_tensor(key: jax.Array, shape: Sequence[int], dtype=jnp.float32) -> Ar
 
 
 def random_factors(
-    key: jax.Array, shape: Sequence[int], rank: int, dtype=jnp.float32
+    key: jax.Array, shape: Sequence[int], rank: int, dtype=jnp.float32, *, batch: int = 1
 ) -> list[Array]:
+    """Per-mode Gaussian factors ``(I_k, C)`` -- or ``(batch, I_k, C)`` when
+    ``batch > 1`` (each batch entry gets independent randomness)."""
     keys = jax.random.split(key, len(shape))
+    lead = (int(batch),) if batch > 1 else ()
     return [
-        jax.random.normal(k, (int(dim), rank), dtype=dtype)
+        jax.random.normal(k, lead + (int(dim), rank), dtype=dtype)
         for k, dim in zip(keys, shape)
     ]
 

@@ -39,7 +39,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core.dimtree import contract_from_partial, partial_mttkrp_range
-from repro.core.mttkrp import Method, mttkrp
+from repro.core.mttkrp import Method, mttkrp, mttkrp_batched
 
 from .collectives import compressed_psum
 
@@ -70,11 +70,58 @@ def _validate(shape: Sequence[int], mode_axes: ModeAxes, mesh: Mesh) -> None:
             )
 
 
-def _x_spec(ndim: int, mode_axes: ModeAxes) -> P:
-    return P(*[mode_axes.get(k) for k in range(ndim)])
+def _batch_entry(batch_axes: Sequence[str]):
+    """PartitionSpec entry of a leading batch axis (``None`` = replicated)."""
+    axes = tuple(batch_axes)
+    return axes if axes else None
 
 
-def _factor_specs(ndim: int, mode_axes: ModeAxes) -> list[P]:
+def _validate_batch(
+    batch: int, batch_axes: Sequence[str], mode_axes: ModeAxes, mesh: Mesh
+) -> None:
+    used = set(mode_axes.values())
+    seen: set[str] = set()
+    shards = 1
+    for axis in batch_axes:
+        if axis not in mesh.shape:
+            raise ValueError(f"mesh has no axis {axis!r} (axes: {mesh.axis_names})")
+        if axis in used:
+            raise ValueError(
+                f"mesh axis {axis!r} cannot shard both a mode and the batch"
+            )
+        if axis in seen:
+            raise ValueError(f"duplicate batch axis {axis!r}")
+        seen.add(axis)
+        shards *= mesh.shape[axis]
+    if batch % shards:
+        raise ValueError(
+            f"batch {batch} not divisible by batch-axis product {shards}"
+        )
+
+
+def _x_spec(
+    ndim: int,
+    mode_axes: ModeAxes,
+    *,
+    batched: bool = False,
+    batch_axes: Sequence[str] = (),
+) -> P:
+    dims = [mode_axes.get(k) for k in range(ndim)]
+    if batched:
+        return P(_batch_entry(batch_axes), *dims)
+    return P(*dims)
+
+
+def _factor_specs(
+    ndim: int,
+    mode_axes: ModeAxes,
+    *,
+    batched: bool = False,
+    batch_axes: Sequence[str] = (),
+) -> list[P]:
+    if batched:
+        entry = _batch_entry(batch_axes)
+        return [P(entry, mode_axes.get(k), None) for k in range(ndim)]
     return [P(mode_axes.get(k), None) for k in range(ndim)]
 
 
@@ -85,7 +132,12 @@ def _reduce_axes(mode_axes: ModeAxes, keep_modes: Sequence[int]) -> tuple[str, .
 
 
 def shard_problem(
-    x: Array, factors: Sequence[Array], mode_axes: ModeAxes, mesh: Mesh
+    x: Array,
+    factors: Sequence[Array],
+    mode_axes: ModeAxes,
+    mesh: Mesh,
+    *,
+    batch_axes: Sequence[str] = (),
 ) -> tuple[Array, list[Array]]:
     """Place tensor + factors on ``mesh`` per ``mode_axes``; no reordering.
 
@@ -95,12 +147,30 @@ def shard_problem(
     their natural layout, so the local kernels see exactly the layout the
     paper's algorithms assume).  Factor ``U_k`` is row-sharded over
     ``mode_axes[k]`` when mapped, replicated otherwise.
+
+    A *batched* problem (``x.ndim == len(factors) + 1``: one leading batch
+    axis on the tensor and on every factor) is block-distributed along the
+    batch over ``batch_axes`` -- each device holds whole problems, so no
+    contraction ever needs a collective across the batch.
     """
-    _validate(x.shape, mode_axes, mesh)
-    xs = jax.device_put(x, NamedSharding(mesh, _x_spec(x.ndim, mode_axes)))
+    batched = x.ndim == len(factors) + 1
+    shape = x.shape[1:] if batched else x.shape
+    _validate(shape, mode_axes, mesh)
+    if batched:
+        _validate_batch(x.shape[0], batch_axes, mode_axes, mesh)
+    order = len(shape)
+    xs = jax.device_put(
+        x,
+        NamedSharding(
+            mesh, _x_spec(order, mode_axes, batched=batched, batch_axes=batch_axes)
+        ),
+    )
     fs = [
         jax.device_put(u, NamedSharding(mesh, spec))
-        for u, spec in zip(factors, _factor_specs(x.ndim, mode_axes))
+        for u, spec in zip(
+            factors,
+            _factor_specs(order, mode_axes, batched=batched, batch_axes=batch_axes),
+        )
     ]
     return xs, fs
 
@@ -113,6 +183,8 @@ def dist_mttkrp(
     mesh: Mesh,
     method: Method = "auto",
     tiles: Mapping[str, int] | None = None,
+    *,
+    batch_axes: Sequence[str] = (),
 ) -> Array:
     """Mode-``n`` MTTKRP of a block-distributed tensor.
 
@@ -122,12 +194,27 @@ def dist_mttkrp(
     result is distributed
     over ``mode_axes[n]`` (replicated if mode ``n`` is unmapped) -- the
     sharding of the factor it updates in ALS.
+
+    When ``x`` carries a leading batch axis (``x.ndim == len(factors) + 1``),
+    the batch is sharded over ``batch_axes`` and each device runs the
+    batched local kernel on its slab of whole problems; the psum pattern is
+    untouched -- batch axes are never reduced (problems are independent),
+    which is exactly why batch-parallel placement costs zero reduce traffic.
     """
-    _validate(x.shape, mode_axes, mesh)
+    batched = x.ndim == len(factors) + 1
+    shape = x.shape[1:] if batched else x.shape
+    _validate(shape, mode_axes, mesh)
+    if batched:
+        _validate_batch(x.shape[0], batch_axes, mode_axes, mesh)
     reduce_axes = _reduce_axes(mode_axes, keep_modes=(n,))
+    order = len(shape)
+    entry = _batch_entry(batch_axes)
 
     def local_fn(x_blk, *f_blks):
-        m = mttkrp(x_blk, list(f_blks), n, method=method, tiles=tiles)
+        if batched:
+            m = mttkrp_batched(x_blk, list(f_blks), n, method=method, tiles=tiles)
+        else:
+            m = mttkrp(x_blk, list(f_blks), n, method=method, tiles=tiles)
         if reduce_axes:
             m = jax.lax.psum(m, reduce_axes)
         return m
@@ -135,8 +222,13 @@ def dist_mttkrp(
     fn = compat.shard_map(
         local_fn,
         mesh=mesh,
-        in_specs=(_x_spec(x.ndim, mode_axes), *_factor_specs(x.ndim, mode_axes)),
-        out_specs=P(mode_axes.get(n), None),
+        in_specs=(
+            _x_spec(order, mode_axes, batched=batched, batch_axes=batch_axes),
+            *_factor_specs(order, mode_axes, batched=batched, batch_axes=batch_axes),
+        ),
+        out_specs=(
+            P(entry, mode_axes.get(n), None) if batched else P(mode_axes.get(n), None)
+        ),
         check_vma=False,
     )
     return fn(x, *factors)
@@ -161,6 +253,8 @@ def dist_mttkrp_overlapped(
     method: Method = "auto",
     n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
     tiles: Mapping[str, int] | None = None,
+    *,
+    batch_axes: Sequence[str] = (),
 ) -> Array:
     """Mode-``n`` MTTKRP with the completing psum hidden behind the GEMMs.
 
@@ -175,36 +269,53 @@ def dist_mttkrp_overlapped(
     output rows, so concatenating them equals the unchunked psum exactly.
 
     Falls back to :func:`dist_mttkrp` when the mapping requires no
-    collective (nothing to hide) or ``n_chunks <= 1``.
+    collective (nothing to hide) or ``n_chunks <= 1``.  Batched tensors
+    (leading batch axis, sharded over ``batch_axes``) chunk along mode
+    ``n`` of every problem in the local slab -- the slab axis shifts by one
+    but the pipeline structure is identical.
     """
-    _validate(x.shape, mode_axes, mesh)
+    batched = x.ndim == len(factors) + 1
+    shape = x.shape[1:] if batched else x.shape
+    _validate(shape, mode_axes, mesh)
     reduce_axes = _reduce_axes(mode_axes, keep_modes=(n,))
-    local_in = x.shape[n] // (mesh.shape[mode_axes[n]] if n in mode_axes else 1)
+    local_in = shape[n] // (mesh.shape[mode_axes[n]] if n in mode_axes else 1)
     if not reduce_axes or n_chunks <= 1 or local_in <= 1:
-        return dist_mttkrp(x, factors, n, mode_axes, mesh, method=method, tiles=tiles)
+        return dist_mttkrp(
+            x, factors, n, mode_axes, mesh,
+            method=method, tiles=tiles, batch_axes=batch_axes,
+        )
+    if batched:
+        _validate_batch(x.shape[0], batch_axes, mode_axes, mesh)
     bounds = _chunk_bounds(local_in, n_chunks)
+    order = len(shape)
+    lead = 1 if batched else 0
+    entry = _batch_entry(batch_axes)
+
+    def local_one(x_slab, f_blks):
+        if batched:
+            return mttkrp_batched(x_slab, list(f_blks), n, method=method, tiles=tiles)
+        return mttkrp(x_slab, list(f_blks), n, method=method, tiles=tiles)
 
     def local_fn(x_blk, *f_blks):
         # issue order GEMM_0, (GEMM_1, psum_0), (GEMM_2, psum_1), ...: each
         # psum depends only on its own slab's GEMM, never on the next one.
         partials = [
-            mttkrp(
-                jax.lax.slice_in_dim(x_blk, i0, i1, axis=n),
-                list(f_blks),
-                n,
-                method=method,
-                tiles=tiles,
-            )
+            local_one(jax.lax.slice_in_dim(x_blk, i0, i1, axis=n + lead), f_blks)
             for i0, i1 in zip(bounds[:-1], bounds[1:])
         ]
         reduced = [jax.lax.psum(p, reduce_axes) for p in partials]
-        return jnp.concatenate(reduced, axis=0)
+        return jnp.concatenate(reduced, axis=lead)
 
     fn = compat.shard_map(
         local_fn,
         mesh=mesh,
-        in_specs=(_x_spec(x.ndim, mode_axes), *_factor_specs(x.ndim, mode_axes)),
-        out_specs=P(mode_axes.get(n), None),
+        in_specs=(
+            _x_spec(order, mode_axes, batched=batched, batch_axes=batch_axes),
+            *_factor_specs(order, mode_axes, batched=batched, batch_axes=batch_axes),
+        ),
+        out_specs=(
+            P(entry, mode_axes.get(n), None) if batched else P(mode_axes.get(n), None)
+        ),
         check_vma=False,
     )
     return fn(x, *factors)
@@ -246,6 +357,8 @@ def dist_mttkrp_compressed(
     err: Array,
     method: Method = "auto",
     tiles: Mapping[str, int] | None = None,
+    *,
+    batch_axes: Sequence[str] = (),
 ) -> tuple[Array, Array]:
     """Mode-``n`` MTTKRP completed by the int8 error-feedback collective.
 
@@ -258,23 +371,49 @@ def dist_mttkrp_compressed(
     new_err)``.  The carried residual keeps the accumulated quantization
     error bounded by one int8 step, which is what lets compressed CP-ALS
     track the exact fit across sweeps.
+
+    Batched tensors thread a batched residual (global layout: reduce-axis
+    leads, then the batch axis, then the output dims); the quantize /
+    all-gather / dequant path is shape-agnostic, so nothing else changes.
     """
-    _validate(x.shape, mode_axes, mesh)
+    batched = x.ndim == len(factors) + 1
+    shape = x.shape[1:] if batched else x.shape
+    _validate(shape, mode_axes, mesh)
     reduce_axes = _reduce_axes(mode_axes, keep_modes=(n,))
     if not reduce_axes:
-        return dist_mttkrp(x, factors, n, mode_axes, mesh, method=method, tiles=tiles), err
-    err_spec = P(*reduce_axes, mode_axes.get(n), None)
+        out = dist_mttkrp(
+            x, factors, n, mode_axes, mesh,
+            method=method, tiles=tiles, batch_axes=batch_axes,
+        )
+        return out, err
+    if batched:
+        _validate_batch(x.shape[0], batch_axes, mode_axes, mesh)
+    order = len(shape)
+    entry = _batch_entry(batch_axes)
+    if batched:
+        err_spec = P(*reduce_axes, entry, mode_axes.get(n), None)
+        out_spec = P(entry, mode_axes.get(n), None)
+    else:
+        err_spec = P(*reduce_axes, mode_axes.get(n), None)
+        out_spec = P(mode_axes.get(n), None)
 
     def local_fn(x_blk, err_blk, *f_blks):
-        m = mttkrp(x_blk, list(f_blks), n, method=method, tiles=tiles)
+        if batched:
+            m = mttkrp_batched(x_blk, list(f_blks), n, method=method, tiles=tiles)
+        else:
+            m = mttkrp(x_blk, list(f_blks), n, method=method, tiles=tiles)
         total, new_e = compressed_psum(m, reduce_axes, err_blk.reshape(m.shape))
         return total, new_e.reshape(err_blk.shape)
 
     fn = compat.shard_map(
         local_fn,
         mesh=mesh,
-        in_specs=(_x_spec(x.ndim, mode_axes), err_spec, *_factor_specs(x.ndim, mode_axes)),
-        out_specs=(P(mode_axes.get(n), None), err_spec),
+        in_specs=(
+            _x_spec(order, mode_axes, batched=batched, batch_axes=batch_axes),
+            err_spec,
+            *_factor_specs(order, mode_axes, batched=batched, batch_axes=batch_axes),
+        ),
+        out_specs=(out_spec, err_spec),
         check_vma=False,
     )
     return fn(x, err, *factors)
@@ -310,6 +449,7 @@ def _dist_contract(
     from_root: bool,
     n_chunks: int = 1,
     err: Array | None = None,
+    batch_axes: Sequence[str] = (),
 ):
     """Shared core of the four per-node contraction entry points.
 
@@ -319,38 +459,71 @@ def _dist_contract(
     completes it with this node's collective: per-slab psums along mode
     ``lo`` when exact (``err is None``), the int8 error-feedback
     ``compressed_psum`` otherwise.
+
+    Batchedness is inferred from ``src.ndim`` (one extra leading axis over
+    the unbatched shape for the node's topology); the local contraction is
+    then vmapped over the device's batch slab and every spec -- source,
+    factors, residual, output -- gains a leading ``batch_axes`` entry.
+    Batch axes never appear in ``reduce_axes``: problems are independent.
     """
+    order = parent_hi - parent_lo
+    expected = order if from_root else order + 1
+    batched = src.ndim == expected + 1
+    lead = 1 if batched else 0
+    if batched:
+        _validate_batch(src.shape[0], batch_axes, mode_axes, mesh)
+    entry = _batch_entry(batch_axes)
     contracted = [m for m in range(parent_lo, parent_hi) if not lo <= m < hi]
     reduce_axes = _node_reduce_axes(mode_axes, contracted)
     keep_axes = [mode_axes.get(k) for k in range(lo, hi)]
-    f_specs = [P(mode_axes.get(m), None) for m in contracted]
-    src_spec = (
-        _x_spec(src.ndim, mode_axes)
-        if from_root
-        else P(*[mode_axes.get(k) for k in range(parent_lo, parent_hi)], None)
-    )
-    lo_local = src.shape[lo - parent_lo] // (
+    if batched:
+        f_specs = [P(entry, mode_axes.get(m), None) for m in contracted]
+        src_spec = (
+            _x_spec(order, mode_axes, batched=True, batch_axes=batch_axes)
+            if from_root
+            else P(entry, *[mode_axes.get(k) for k in range(parent_lo, parent_hi)], None)
+        )
+        out_spec = P(entry, *keep_axes, None)
+        err_spec = P(*reduce_axes, entry, *keep_axes, None)
+    else:
+        f_specs = [P(mode_axes.get(m), None) for m in contracted]
+        src_spec = (
+            _x_spec(order, mode_axes)
+            if from_root
+            else P(*[mode_axes.get(k) for k in range(parent_lo, parent_hi)], None)
+        )
+        out_spec = P(*keep_axes, None)
+        err_spec = P(*reduce_axes, *keep_axes, None)
+    lo_local = src.shape[lead + lo - parent_lo] // (
         mesh.shape[mode_axes[lo]] if lo in mode_axes else 1
     )
     chunks = max(1, min(int(n_chunks), lo_local)) if reduce_axes else 1
     bounds = _chunk_bounds(lo_local, chunks)
-    err_spec = P(*reduce_axes, *keep_axes, None)
 
     def contract_local(src_blk, cf):
         if from_root:
-            fl = list(cf[:lo]) + [None] * (hi - lo) + list(cf[lo:])
-            return partial_mttkrp_range(src_blk, fl, lo, hi)
-        return contract_from_partial(src_blk, dict(zip(contracted, cf)), lo, hi, parent_lo)
+            def one(t, *fs):
+                fl = list(fs[:lo]) + [None] * (hi - lo) + list(fs[lo:])
+                return partial_mttkrp_range(t, fl, lo, hi)
+        else:
+            def one(t, *fs):
+                return contract_from_partial(
+                    t, dict(zip(contracted, fs)), lo, hi, parent_lo
+                )
+        if batched:
+            return jax.vmap(one)(src_blk, *cf)
+        return one(src_blk, *cf)
 
     def local_exact(src_blk, *cf):
         out = contract_local(src_blk, cf)
         if not reduce_axes:
             return out
+        # slab axis = mode lo of the node output (shifted past the batch)
         slabs = [
-            jax.lax.psum(jax.lax.slice_in_dim(out, i0, i1, axis=0), reduce_axes)
+            jax.lax.psum(jax.lax.slice_in_dim(out, i0, i1, axis=lead), reduce_axes)
             for i0, i1 in zip(bounds[:-1], bounds[1:])
         ]
-        return slabs[0] if len(slabs) == 1 else jnp.concatenate(slabs, axis=0)
+        return slabs[0] if len(slabs) == 1 else jnp.concatenate(slabs, axis=lead)
 
     def local_compressed(src_blk, err_blk, *cf):
         out = contract_local(src_blk, cf)
@@ -363,7 +536,7 @@ def _dist_contract(
             local_exact,
             mesh=mesh,
             in_specs=(src_spec, *f_specs),
-            out_specs=P(*keep_axes, None),
+            out_specs=out_spec,
             check_vma=False,
         )
         return fn(src, *contracted_factors)
@@ -371,7 +544,7 @@ def _dist_contract(
         local_compressed,
         mesh=mesh,
         in_specs=(src_spec, err_spec, *f_specs),
-        out_specs=(P(*keep_axes, None), err_spec),
+        out_specs=(out_spec, err_spec),
         check_vma=False,
     )
     return fn(src, err, *contracted_factors)
@@ -386,6 +559,7 @@ def dist_contract_range(
     mesh: Mesh,
     *,
     n_chunks: int = 1,
+    batch_axes: Sequence[str] = (),
 ) -> Array:
     """Distributed range contraction: every mode outside ``[lo, hi)`` of the
     block-distributed tensor is contracted with its (row-sharded) factor.
@@ -400,10 +574,11 @@ def dist_contract_range(
     reductions over disjoint rows of the same local result, so the output is
     *bitwise identical* to the unchunked path by construction.
     """
-    _validate(x.shape, mode_axes, mesh)
+    order = len(factors)
+    _validate(x.shape[1:] if x.ndim == order + 1 else x.shape, mode_axes, mesh)
     return _dist_contract(
-        x, factors, lo, hi, 0, x.ndim, mode_axes, mesh,
-        from_root=True, n_chunks=n_chunks,
+        x, factors, lo, hi, 0, order, mode_axes, mesh,
+        from_root=True, n_chunks=n_chunks, batch_axes=batch_axes,
     )
 
 
@@ -418,6 +593,7 @@ def dist_contract_partial(
     mesh: Mesh,
     *,
     n_chunks: int = 1,
+    batch_axes: Sequence[str] = (),
 ) -> Array:
     """Distributed partial-to-partial contraction of one schedule node.
 
@@ -434,7 +610,7 @@ def dist_contract_partial(
     """
     return _dist_contract(
         t, factors, lo, hi, parent_lo, parent_hi, mode_axes, mesh,
-        from_root=False, n_chunks=n_chunks,
+        from_root=False, n_chunks=n_chunks, batch_axes=batch_axes,
     )
 
 
@@ -446,6 +622,8 @@ def dist_contract_range_compressed(
     mode_axes: ModeAxes,
     mesh: Mesh,
     err: Array,
+    *,
+    batch_axes: Sequence[str] = (),
 ) -> tuple[Array, Array]:
     """:func:`dist_contract_range` with the node psum compressed.
 
@@ -456,12 +634,19 @@ def dist_contract_range_compressed(
     ``(partial, new_err)``.  Falls back to the exact path when the node
     needs no collective.
     """
-    _validate(x.shape, mode_axes, mesh)
-    contracted = [m for m in range(x.ndim) if not lo <= m < hi]
+    order = len(factors)
+    _validate(x.shape[1:] if x.ndim == order + 1 else x.shape, mode_axes, mesh)
+    contracted = [m for m in range(order) if not lo <= m < hi]
     if not _node_reduce_axes(mode_axes, contracted):
-        return dist_contract_range(x, factors, lo, hi, mode_axes, mesh), err
+        return (
+            dist_contract_range(
+                x, factors, lo, hi, mode_axes, mesh, batch_axes=batch_axes
+            ),
+            err,
+        )
     return _dist_contract(
-        x, factors, lo, hi, 0, x.ndim, mode_axes, mesh, from_root=True, err=err
+        x, factors, lo, hi, 0, order, mode_axes, mesh,
+        from_root=True, err=err, batch_axes=batch_axes,
     )
 
 
@@ -475,6 +660,8 @@ def dist_contract_partial_compressed(
     mode_axes: ModeAxes,
     mesh: Mesh,
     err: Array,
+    *,
+    batch_axes: Sequence[str] = (),
 ) -> tuple[Array, Array]:
     """:func:`dist_contract_partial` with the node psum compressed.
 
@@ -486,13 +673,14 @@ def dist_contract_partial_compressed(
     if not _node_reduce_axes(mode_axes, contracted):
         return (
             dist_contract_partial(
-                t, factors, lo, hi, parent_lo, parent_hi, mode_axes, mesh
+                t, factors, lo, hi, parent_lo, parent_hi, mode_axes, mesh,
+                batch_axes=batch_axes,
             ),
             err,
         )
     return _dist_contract(
         t, factors, lo, hi, parent_lo, parent_hi, mode_axes, mesh,
-        from_root=False, err=err,
+        from_root=False, err=err, batch_axes=batch_axes,
     )
 
 

@@ -9,14 +9,17 @@ pure-jnp oracles the tests compare against.
 """
 
 from . import ops, ref
-from .fused_mttkrp import fused_mttkrp_bilinear
+from .fused_mttkrp import fused_mttkrp_bilinear, fused_mttkrp_bilinear_batched
 from .krp_kernel import krp_pair
 from .multi_ttv import multi_ttv as multi_ttv_kernel
+from .multi_ttv import multi_ttv_batched as multi_ttv_batched_kernel
 
 __all__ = [
     "ops",
     "ref",
     "fused_mttkrp_bilinear",
+    "fused_mttkrp_bilinear_batched",
     "krp_pair",
     "multi_ttv_kernel",
+    "multi_ttv_batched_kernel",
 ]

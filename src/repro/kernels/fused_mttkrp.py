@@ -76,6 +76,109 @@ def _kernel(t_ref, a_ref, b_ref, o_ref, *, pos: int):
     ).astype(o_ref.dtype)
 
 
+def _kernel_batched(t_ref, a_ref, b_ref, o_ref, *, pos: int):
+    """One grid step of the batched kernel: per batch slab, o += T @ (A*B).
+
+    Identical algebra to :func:`_kernel` with a leading batch axis on every
+    ref; the MXU contraction becomes a batched ``dot_general`` (batch dim 0,
+    contracting the KRP-tile rows)."""
+    a_idx = pl.program_id(2)
+    b_idx = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(a_idx == 0, b_idx == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # per-batch KRP tiles: (bt, 1, C) * (bt, bb, C) -> (bt, bb, C) -- each
+    # batch entry has its own factors, so the Hadamard is per-slab
+    k_tile = a_ref[:, 0, :][:, None, :] * b_ref[...]
+
+    t = t_ref[...]
+    if pos == 0:  # T block (bt, bi, 1, bb)
+        x_tile = t[:, :, 0, :]
+    elif pos == 1:  # T block (bt, 1, bi, bb)
+        x_tile = t[:, 0, :, :]
+    else:  # pos == 2: T block (bt, 1, bb, bi) -> contract over bb
+        x_tile = jnp.swapaxes(t[:, 0, :, :], 1, 2)
+    o_ref[...] += jax.lax.dot_general(
+        x_tile.astype(k_tile.dtype),
+        k_tile,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        precision=jax.lax.Precision.HIGHEST,
+    ).astype(o_ref.dtype)
+
+
+def fused_mttkrp_bilinear_batched(
+    t: Array,
+    a: Array,
+    b: Array,
+    *,
+    pos: int,
+    block_i: int,
+    block_b: int,
+    block_batch: int,
+    interpret: bool = False,
+) -> Array:
+    """Batched bilinear MTTKRP: ``M[s,i,c] = sum_{a,b} T[s,...] A[s,a,c] B[s,b,c]``.
+
+    ``t`` is ``(S, *3-D view)`` with the i-axis of the per-slab view at
+    ``pos``; ``a``/``b`` are per-batch partial KRPs ``(S, dim, C)``.  The
+    grid gains a leading batch axis ``S // block_batch`` (outermost, so each
+    output block still stays VMEM-resident across its whole reduction).
+    Dims (including S) must be padded to block multiples by the wrapper.
+    """
+    if t.ndim != 4:
+        raise ValueError("t must be a batched (4-D) view")
+    n_batch = t.shape[0]
+    if a.shape[0] != n_batch or b.shape[0] != n_batch:
+        raise ValueError(
+            f"batch mismatch: t {t.shape}, a {a.shape}, b {b.shape}"
+        )
+    dim_a, dim_b = a.shape[1], b.shape[1]
+    c = a.shape[2]
+    shape = list(t.shape[1:])
+    dim_i = shape.pop(pos)
+    if shape != [dim_a, dim_b]:
+        raise ValueError(f"t shape {t.shape} inconsistent with A/B {a.shape}/{b.shape}")
+    if dim_i % block_i or dim_b % block_b or n_batch % block_batch:
+        raise ValueError("dims must be padded to block multiples")
+
+    grid = (n_batch // block_batch, dim_i // block_i, dim_a, dim_b // block_b)
+
+    if pos == 0:
+        t_spec = pl.BlockSpec(
+            (block_batch, block_i, 1, block_b),
+            lambda s, i, al, bl: (s, i, al, bl),
+        )
+    elif pos == 1:
+        t_spec = pl.BlockSpec(
+            (block_batch, 1, block_i, block_b),
+            lambda s, i, al, bl: (s, al, i, bl),
+        )
+    else:
+        t_spec = pl.BlockSpec(
+            (block_batch, 1, block_b, block_i),
+            lambda s, i, al, bl: (s, al, bl, i),
+        )
+
+    return pl.pallas_call(
+        functools.partial(_kernel_batched, pos=pos),
+        grid=grid,
+        in_specs=[
+            t_spec,
+            pl.BlockSpec((block_batch, 1, c), lambda s, i, al, bl: (s, al, 0)),
+            pl.BlockSpec(
+                (block_batch, block_b, c), lambda s, i, al, bl: (s, bl, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_batch, block_i, c), lambda s, i, al, bl: (s, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_batch, dim_i, c), jnp.float32),
+        interpret=interpret,
+    )(t, a, b)
+
+
 def fused_mttkrp_bilinear(
     t: Array,
     a: Array,

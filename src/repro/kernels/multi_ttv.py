@@ -53,3 +53,53 @@ def multi_ttv(
         out_shape=jax.ShapeDtypeStruct((dim_i, c), jnp.float32),
         interpret=interpret,
     )(t, w)
+
+
+def _kernel_batched(t_ref, w_ref, o_ref):
+    l_idx = pl.program_id(2)
+
+    @pl.when(l_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # per-batch broadcast MAC: (bt, bi, C) * (bt, 1, C)
+    o_ref[...] += (t_ref[:, 0, :, :] * w_ref[:, 0, :][:, None, :]).astype(
+        o_ref.dtype
+    )
+
+
+def multi_ttv_batched(
+    t: Array,
+    w: Array,
+    *,
+    block_i: int,
+    block_batch: int,
+    interpret: bool = False,
+) -> Array:
+    """Batched multi-TTV: ``M[s,i,c] = sum_l t[s,l,i,c] * w[s,l,c]``.
+
+    Same VPU accumulation as :func:`multi_ttv` with a leading batch grid
+    axis (outermost; the L reduction stays innermost so each output block
+    is revisited in place).  S and I must be padded to block multiples.
+    """
+    n_batch, big_l, dim_i, c = t.shape
+    if w.shape != (n_batch, big_l, c):
+        raise ValueError(f"w shape {w.shape} != ({n_batch}, {big_l}, {c})")
+    if dim_i % block_i or n_batch % block_batch:
+        raise ValueError("S and I must be padded to the block sizes")
+    grid = (n_batch // block_batch, dim_i // block_i, big_l)
+    return pl.pallas_call(
+        _kernel_batched,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (block_batch, 1, block_i, c), lambda s, i, l: (s, l, i, 0)
+            ),
+            pl.BlockSpec((block_batch, 1, c), lambda s, i, l: (s, l, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_batch, block_i, c), lambda s, i, l: (s, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_batch, dim_i, c), jnp.float32),
+        interpret=interpret,
+    )(t, w)

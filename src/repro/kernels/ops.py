@@ -4,8 +4,12 @@ Public entry points:
 
 * :func:`fused_mttkrp`   -- MTTKRP for any mode without materializing the full
                             KRP in HBM (beyond-paper; see fused_mttkrp.py).
+* :func:`fused_mttkrp_batched` -- same, with a leading batch axis mapped to
+                            the kernel's batch grid dimension (one launch
+                            for S stacked problems).
 * :func:`krp_materialize`-- explicit KRP via the tiled kernel (Alg. 1).
 * :func:`multi_ttv`      -- kernelized 2nd step of the 2-step algorithm.
+* :func:`multi_ttv_batched` -- batched variant over a leading batch axis.
 * :func:`mttkrp_2step_kernel` -- Alg. 4 with the multi-TTV step kernelized.
 
 On non-TPU backends the kernels run in ``interpret=True`` mode (the kernel
@@ -22,12 +26,13 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.krp import krp_or_ones
+from repro.core.krp import krp_or_ones, krp_or_ones_batched
 from repro.core.tensor_ops import dims_split
 
-from .fused_mttkrp import fused_mttkrp_bilinear
+from .fused_mttkrp import fused_mttkrp_bilinear, fused_mttkrp_bilinear_batched
 from .krp_kernel import krp_pair
 from .multi_ttv import multi_ttv as _multi_ttv_kernel
+from .multi_ttv import multi_ttv_batched as _multi_ttv_batched_kernel
 
 Array = jax.Array
 
@@ -41,6 +46,12 @@ def _interpret(flag: bool | None) -> bool:
 
 
 def _pad_axis(x: Array, axis: int, mult: int) -> Array:
+    """Zero-pad ``axis`` up to a multiple of ``mult``.
+
+    ``axis`` is a raw array axis, NOT a tensor mode: batched wrappers must
+    shift mode positions by one for the leading batch axis (the unbatched
+    wrappers pass modes through unchanged).
+    """
     size = x.shape[axis]
     pad = (-size) % mult
     if pad == 0:
@@ -60,6 +71,12 @@ def balanced_split(dims: Sequence[int]) -> int:
 
     Public because the ``repro.plan`` cost model mirrors the fused kernel's
     partial-KRP split when predicting its HBM traffic.
+
+    ``dims`` must be *mode* extents only -- never a raw ``x.shape`` that
+    still carries a leading batch axis, which would skew the split (and
+    hence the tile sizes) toward the batch extent.  The batched wrappers
+    split on ``x.shape[1:]`` / per-factor row counts for exactly this
+    reason.
     """
     best, best_val = 1, float("inf")
     total = math.prod(dims)
@@ -95,6 +112,13 @@ def fused_mttkrp(
     """
     factors = list(factors)
     big_n = len(factors)
+    if x.ndim != big_n:
+        # a batched tensor here would silently treat the batch axis as mode 0
+        # and derive tiles from it; route batched inputs explicitly instead
+        raise ValueError(
+            f"x.ndim {x.ndim} != {big_n} factors -- for a leading batch axis "
+            "use fused_mttkrp_batched"
+        )
     c = factors[0].shape[1]
     interp = _interpret(interpret)
     if pad_rank_to is None and _on_tpu():
@@ -141,6 +165,90 @@ def fused_mttkrp(
     return out[:in_dim, :c].astype(x.dtype)
 
 
+@partial(
+    jax.jit,
+    static_argnames=(
+        "n", "block_i", "block_b", "block_batch", "interpret", "pad_rank_to"
+    ),
+)
+def fused_mttkrp_batched(
+    x: Array,
+    factors: Sequence[Array],
+    n: int,
+    *,
+    block_i: int = 128,
+    block_b: int = 256,
+    block_batch: int = 8,
+    interpret: bool | None = None,
+    pad_rank_to: int | None = None,
+) -> Array:
+    """Batched fused MTTKRP: ``x`` is ``(S, *shape)``, factors ``(S, I_k, C)``.
+
+    One kernel launch covers all S stacked problems via the kernel's leading
+    batch grid axis (``block_batch`` slabs); each slab forms its own KRP
+    tiles in VMEM, so the per-problem KRP still never exists in HBM.  All
+    reshape/split/tile arithmetic runs on the *mode* dims ``x.shape[1:]`` --
+    the batch axis never participates in tile selection -- and every pad
+    axis is shifted by one for the leading batch axis.
+    """
+    factors = list(factors)
+    big_n = len(factors)
+    if x.ndim != big_n + 1:
+        raise ValueError(
+            f"x.ndim {x.ndim} != {big_n} factors + batch axis -- for an "
+            "unbatched tensor use fused_mttkrp"
+        )
+    s_batch = x.shape[0]
+    mode_shape = x.shape[1:]  # tile choice keys on mode dims, never the batch
+    c = factors[0].shape[2]
+    interp = _interpret(interpret)
+    if pad_rank_to is None and _on_tpu():
+        pad_rank_to = 128
+
+    left = factors[:n]
+    right = factors[n + 1 :]
+    in_dim = mode_shape[n]
+
+    if 0 < n < big_n - 1:
+        pos = 1
+        a_mats, b_mats = left, right
+        big_l, _, big_r = dims_split(mode_shape, n)
+        t = x.reshape(s_batch, big_l, in_dim, big_r)
+    elif n == 0:
+        pos = 0
+        split = balanced_split([f.shape[1] for f in right]) if len(right) > 1 else 0
+        a_mats, b_mats = right[:split], right[split:]
+        da = math.prod(f.shape[1] for f in a_mats) if a_mats else 1
+        db = math.prod(f.shape[1] for f in b_mats)
+        t = x.reshape(s_batch, in_dim, da, db)
+    else:  # n == N-1
+        pos = 2
+        split = balanced_split([f.shape[1] for f in left]) if len(left) > 1 else 1
+        a_mats, b_mats = left[:split], left[split:]
+        da = math.prod(f.shape[1] for f in a_mats)
+        db = math.prod(f.shape[1] for f in b_mats) if b_mats else 1
+        t = x.reshape(s_batch, da, db, in_dim)
+
+    a = krp_or_ones_batched(a_mats, s_batch, c, x.dtype)
+    b = krp_or_ones_batched(b_mats, s_batch, c, x.dtype)
+    if pad_rank_to:
+        a = _pad_axis(a, 2, pad_rank_to)
+        b = _pad_axis(b, 2, pad_rank_to)
+
+    bi = _block(in_dim, block_i)
+    bb = _block(b.shape[1], block_b)
+    bs = _block(s_batch, block_batch)
+    b_axis = 2 if pos == 2 else 3  # unbatched layout axes, shifted by one
+    t = _pad_axis(_pad_axis(_pad_axis(t, pos + 1, bi), b_axis, bb), 0, bs)
+    a = _pad_axis(a, 0, bs)
+    b = _pad_axis(_pad_axis(b, 1, bb), 0, bs)
+    out = fused_mttkrp_bilinear_batched(
+        t, a, b, pos=pos, block_i=bi, block_b=bb, block_batch=bs,
+        interpret=interp,
+    )
+    return out[:s_batch, :in_dim, :c].astype(x.dtype)
+
+
 @partial(jax.jit, static_argnames=("block_b", "interpret"))
 def krp_materialize(
     mats: Sequence[Array], *, block_b: int = 512, interpret: bool | None = None
@@ -172,6 +280,32 @@ def multi_ttv(
     t_pad = _pad_axis(t, 1, bi)
     out = _multi_ttv_kernel(t_pad, w, block_i=bi, interpret=interp)
     return out[:dim_i].astype(t.dtype)
+
+
+@partial(jax.jit, static_argnames=("block_i", "block_batch", "interpret"))
+def multi_ttv_batched(
+    t: Array,
+    w: Array,
+    *,
+    block_i: int = 256,
+    block_batch: int = 8,
+    interpret: bool | None = None,
+) -> Array:
+    """Batched multi-TTV: ``M[s,i,c] = sum_l t[s,l,i,c] * w[s,l,c]``.
+
+    One launch over the kernel's batch grid axis; the I tile is chosen from
+    the mode extent ``t.shape[2]`` (pad axes shifted for the batch axis).
+    """
+    interp = _interpret(interpret)
+    s_batch, dim_i = t.shape[0], t.shape[2]
+    bi = _block(dim_i, block_i)
+    bs = _block(s_batch, block_batch)
+    t_pad = _pad_axis(_pad_axis(t, 2, bi), 0, bs)
+    w_pad = _pad_axis(w, 0, bs)
+    out = _multi_ttv_batched_kernel(
+        t_pad, w_pad, block_i=bi, block_batch=bs, interpret=interp
+    )
+    return out[:s_batch, :dim_i].astype(t.dtype)
 
 
 @partial(jax.jit, static_argnames=("n", "block_i", "interpret"))

@@ -52,18 +52,22 @@ Array = jax.Array
 # cache (see default_tuning_cache); unset/empty means in-memory only.
 CACHE_ENV = "REPRO_TUNING_CACHE"
 
-# Candidate (block_i, block_b) tilings for the fused MTTKRP kernel.  The
-# default (128, 256) is always measured first; the rest bracket it along
-# both axes (MXU-aligned multiples of 128 plus the half-tile 64, the small
-# end for short modes).  Candidates are capped by the actual dims and
-# deduped on the effective tile, so tiny problems time only what differs.
+# Candidate (block_i, block_b, block_batch) tilings for the fused MTTKRP
+# kernel.  The default (128, 256, 8) is always measured first; the rest
+# bracket it along both matmul axes (MXU-aligned multiples of 128 plus the
+# half-tile 64, the small end for short modes).  block_batch sizes the
+# batched kernel's leading grid axis and is inert for unbatched problems
+# (effective batch tile 1), so dedup on the effective tile keeps unbatched
+# tuning timing exactly the same candidate set as before.  Candidates are
+# capped by the actual dims and deduped on the effective tile, so tiny
+# problems time only what differs.
 FUSED_TILE_CANDIDATES = (
-    (128, 256),  # the long-standing hard-coded default
-    (64, 128),
-    (128, 128),
-    (256, 256),
-    (128, 512),
-    (256, 512),
+    (128, 256, 8),  # the long-standing hard-coded default
+    (64, 128, 8),
+    (128, 128, 8),
+    (256, 256, 8),
+    (128, 512, 8),
+    (256, 512, 8),
 )
 
 # Candidate block_i tilings for the multi-TTV kernel (default 256 first).
@@ -92,12 +96,19 @@ def problem_key(
     ``n_devices`` defaults to the product of the problem's mesh axis sizes
     (1 when unsharded) -- NOT the runtime device count, so plans for
     detached hardware key consistently.
+
+    Batched problems append a ``|b{B}`` field; unbatched keys keep the
+    historical 5-field layout, so entries tuned before the batch dimension
+    existed keep resolving for B=1.
     """
     backend = backend_name() if backend is None else str(backend)
     if n_devices is None:
         n_devices = math.prod(problem.axis_sizes.values()) if problem.axis_sizes else 1
     shape = "x".join(str(d) for d in problem.shape)
-    return f"{backend}|{shape}|r{problem.rank}|{problem.dtype_str}|d{n_devices}"
+    key = f"{backend}|{shape}|r{problem.rank}|{problem.dtype_str}|d{n_devices}"
+    if problem.batch > 1:
+        key += f"|b{problem.batch}"
+    return key
 
 
 def node_key(node: ContractionNode, algorithm: str, executor: str) -> str:
@@ -217,7 +228,11 @@ def lookup_measurements(
         return None
     node_s = {r["key"]: float(r["measured_s"]) for r in entry.get("nodes", [])}
     tiles = {
-        k: {kk: int(vv) for kk, vv in v.items() if kk in ("block_i", "block_b")}
+        k: {
+            kk: int(vv)
+            for kk, vv in v.items()
+            if kk in ("block_i", "block_b", "block_batch")
+        }
         for k, v in entry.get("tiles", {}).items()
         if v
     }
@@ -316,16 +331,19 @@ def _tune_fused_tiles(
 
     n = x.ndim // 2  # internal mode: the kernel's primary bilinear layout
     _, in_dim, big_r = dims_split(x.shape, n)
+    # tuning runs unbatched (batch tile effectively 1), so block_batch never
+    # splits the candidate set here; the tuned value rides along for the
+    # batched kernel to consume
     rows = _tile_rows(
         FUSED_TILE_CANDIDATES,
-        lambda cand: (min(in_dim, cand[0]), min(big_r, cand[1])),
+        lambda cand: (min(in_dim, cand[0]), min(big_r, cand[1]), 1),
         lambda cand: kops.fused_mttkrp(
             x, list(factors), n, block_i=cand[0], block_b=cand[1]
         ),
         reps,
         budget,
     )
-    return _summarize_tiles(rows, ("block_i", "block_b"), n)
+    return _summarize_tiles(rows, ("block_i", "block_b", "block_batch"), n)
 
 
 def _tune_ttv_tiles(
@@ -575,7 +593,11 @@ def tune(
     rows = _tune_nodes(
         problem, x, factors, mesh=mesh, mode_axes=mode_axes, reps=reps,
         budget=budget,
-        fused_tiles={"block_i": fused["block_i"], "block_b": fused["block_b"]},
+        fused_tiles={
+            "block_i": fused["block_i"],
+            "block_b": fused["block_b"],
+            "block_batch": fused["block_batch"],
+        },
     )
     tiles = {
         "fused_mttkrp": fused,

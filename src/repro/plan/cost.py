@@ -88,8 +88,10 @@ def validate_executor(problem: Problem, executor: str) -> None:
         raise ValueError(f"unknown executor {executor!r} (choose from {EXECUTORS})")
     reason = None
     if executor == "local" and problem.sharded:
-        reason = "it runs on one device but the problem maps modes to mesh axes"
-    elif executor in ("overlapping", "compressed") and not problem.sharded:
+        reason = "it runs on one device but the problem maps modes/batch to mesh axes"
+    elif executor in ("overlapping", "compressed") and not problem.mode_axes:
+        # batch-parallel-only placements have zero reduce traffic: nothing
+        # to overlap or compress (mode_axes, not sharded, is the predicate)
         reason = "it reschedules/compresses psums but the problem has none"
     if reason is not None:
         raise ValueError(f"executor {executor!r} cannot run this problem: {reason}")
@@ -227,6 +229,11 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
     schedule via :func:`dimtree_mode_cost` (which folds over
     :func:`node_cost`); general tree shapes are costed per node by
     :func:`node_cost` directly.
+
+    Batched problems scale every flop/byte term by the per-device batch
+    extent ``local_batch`` -- including the psum volume, which is why a
+    mode-parallel placement of B small tensors pays B times the wire bytes
+    while a batch-parallel placement (no mapped modes) pays zero.
     """
     if algorithm not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algorithm!r} (choose from {ALGORITHMS})")
@@ -235,9 +242,10 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
     shape = problem.local_shape
     c = problem.rank
     s = problem.itemsize
-    base = mttkrp_flops(shape, c, n, itemsize=s)
+    lb = problem.local_batch
+    base = mttkrp_flops(shape, c, n, itemsize=s, batch=lb)
     L, In, R = dims_split(shape, n)
-    out_bytes = In * c * s
+    out_bytes = In * c * s * lb
     coll = ring_allreduce_bytes(out_bytes, problem.reduce_participants((n,)))
 
     if algorithm == "2step" and not problem.external_mode(n):
@@ -261,22 +269,22 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
         # left-first contracts K_L in the GEMM, multi-TTVs over R (and vice
         # versa); intermediate is In * contracted-side * C.
         second_side = R if algorithm == "2step-left" else L
-        intermediate = In * second_side * c * s
+        intermediate = In * second_side * c * s * lb
         return ModeCost(
             gemm_flops=base["gemm_flops"],
-            krp_flops=float((L + R) * c),  # two small KRPs instead of one huge
-            second_step_flops=2.0 * In * second_side * c,
-            bytes=base["tensor_bytes"] + 2.0 * intermediate + (L + R) * c * s + out_bytes,
+            krp_flops=float((L + R) * c * lb),  # two small KRPs instead of one huge
+            second_step_flops=2.0 * In * second_side * c * lb,
+            bytes=base["tensor_bytes"] + 2.0 * intermediate + (L + R) * c * s * lb + out_bytes,
             collective_bytes=coll,
         )
     if algorithm == "fused":
         da, db = _fused_krp_dims(shape, n)
         return ModeCost(
             gemm_flops=base["gemm_flops"],
-            krp_flops=float((da + db) * c),
+            krp_flops=float((da + db) * c * lb),
             second_step_flops=0.0,
             # the full KRP never hits HBM -- only the two partials stream in
-            bytes=base["tensor_bytes"] + (da + db) * c * s + out_bytes,
+            bytes=base["tensor_bytes"] + (da + db) * c * s * lb + out_bytes,
             collective_bytes=coll,
         )
     if algorithm == "einsum":
@@ -284,7 +292,7 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
             gemm_flops=base["gemm_flops"],
             krp_flops=0.0,
             second_step_flops=0.0,
-            bytes=base["tensor_bytes"] + (L + In + R) * c * s + out_bytes,
+            bytes=base["tensor_bytes"] + (L + In + R) * c * s * lb + out_bytes,
             collective_bytes=coll,
         )
     assert algorithm == "baseline"
@@ -373,7 +381,7 @@ def executor_mode_cost(
     validate_executor(problem, executor)
     base = mode_cost(problem, n, algorithm)
     _, in_local, _ = dims_split(problem.local_shape, n)
-    block = in_local * problem.rank * problem.itemsize
+    block = in_local * problem.rank * problem.itemsize * problem.local_batch
     p = math.prod(problem.axis_sizes[a] for a in problem.reduce_axes_for(n))
     return _adjust(
         problem,
@@ -424,18 +432,19 @@ def node_cost(
         raise ValueError("the schedule root is the raw tensor, not a contraction")
     c = problem.rank
     s = problem.itemsize
+    lb = problem.local_batch
     if node.from_root and node.is_leaf:
         return executor_mode_cost(
             problem, node.lo, algorithm, executor,
             n_chunks=n_chunks, serial_fractions=serial_fractions,
         )
-    t_elems = math.prod(node.local_shape)  # kept local dims * rank
+    t_elems = math.prod(node.local_shape) * lb  # kept local dims * rank (x batch)
     t_bytes = t_elems * s
     coll = node.psum_bytes
     if node.from_root:
-        total = math.prod(problem.local_shape)
+        total = math.prod(problem.local_shape) * lb
         krp_elems = (
-            math.prod(problem.local_shape[m] for m in node.contracted) * c
+            math.prod(problem.local_shape[m] for m in node.contracted) * c * lb
             if node.contracted
             else 0
         )
@@ -448,7 +457,7 @@ def node_cost(
         )
     else:
         parent_elems = (
-            math.prod(problem.local_shape[node.parent_lo : node.parent_hi]) * c
+            math.prod(problem.local_shape[node.parent_lo : node.parent_hi]) * c * lb
         )
         ttv = 0.0
         elems = float(parent_elems)

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.dimtree import contract_from_partial, partial_mttkrp_range
-from repro.core.mttkrp import mttkrp
+from repro.core.mttkrp import mttkrp, mttkrp_batched
 from repro.dist.dist_mttkrp import (
     dist_contract_partial,
     dist_contract_partial_compressed,
@@ -47,6 +47,17 @@ from .cost import DEFAULT_OVERLAP_CHUNKS, EXECUTORS
 from .schedule import ContractionNode
 
 Array = jax.Array
+
+
+def _node_is_batched(node: ContractionNode, src: Array) -> bool:
+    """True when ``src`` carries a leading batch axis over the node's shape.
+
+    The unbatched source of a node has a known rank from the topology alone:
+    the raw tensor's order for root contractions, the parent's kept modes
+    plus the rank axis for partial-to-partial ones.  One extra axis = batch.
+    """
+    expected = (node.parent_hi - node.parent_lo) + (0 if node.from_root else 1)
+    return src.ndim == expected + 1
 
 
 @runtime_checkable
@@ -94,11 +105,28 @@ class LocalExecutor:
         """One schedule node locally: planned MTTKRP for leaves off the
         root (tuned Pallas tiles threaded through for the fused kernel),
         range GEMM for internal nodes off the root, multi-TTV einsum
-        for anything contracted from a partial."""
+        for anything contracted from a partial.  A leading batch axis on
+        ``src`` (and every factor) dispatches the batched kernel for
+        leaves and a vmap of the same contraction otherwise."""
+        batched = _node_is_batched(node, src)
         if node.from_root:
             if node.is_leaf:
+                if batched:
+                    return mttkrp_batched(
+                        src, list(factors), node.mode, method=algorithm, tiles=tiles
+                    )
                 return mttkrp(src, list(factors), node.mode, method=algorithm, tiles=tiles)
+            if batched:
+                return jax.vmap(
+                    lambda t, *fs: partial_mttkrp_range(t, list(fs), node.lo, node.hi)
+                )(src, *factors)
             return partial_mttkrp_range(src, list(factors), node.lo, node.hi)
+        if batched:
+            return jax.vmap(
+                lambda t, *fs: contract_from_partial(
+                    t, dict(zip(node.contracted, fs)), node.lo, node.hi, node.parent_lo
+                )
+            )(src, *[factors[m] for m in node.contracted])
         sibs = {m: factors[m] for m in node.contracted}
         return contract_from_partial(src, sibs, node.lo, node.hi, node.parent_lo)
 
@@ -112,18 +140,28 @@ class ShardedExecutor:
     node requires (over the axes mapped to the modes contracted *at that
     node*); the small Gram/pinv algebra stays at the global-array level in
     the engine, exactly as the previous hand-written distributed sweeps did.
+
+    ``batch_axes`` names the mesh axes the leading batch dimension of a
+    batched problem is sharded over (empty = batch replicated, or no
+    batch).  Batch-parallel placements (``mode_axes`` empty, ``batch_axes``
+    set) run every contraction collective-free: each device owns whole
+    problems.
     """
 
-    def __init__(self, mesh, mode_axes):
+    def __init__(self, mesh, mode_axes, batch_axes=()):
         self.mesh = mesh
         self.mode_axes = dict(mode_axes)
+        self.batch_axes = tuple(batch_axes)
 
     # chunk count for the node pipeline: 1 = no chunking (plain psum)
     _n_chunks = 1
 
     def prepare(self, problem, x: Array, factors: Sequence[Array]):
-        """Block-distribute tensor + factors per ``mode_axes`` (no reorder)."""
-        return shard_problem(x, factors, self.mode_axes, self.mesh)
+        """Block-distribute tensor + factors per ``mode_axes`` (no reorder);
+        a leading batch axis is sharded over ``batch_axes``."""
+        return shard_problem(
+            x, factors, self.mode_axes, self.mesh, batch_axes=self.batch_axes
+        )
 
     def contract(
         self, node: ContractionNode, src: Array, factors: Sequence[Array],
@@ -134,16 +172,17 @@ class ShardedExecutor:
         if node.from_root and node.is_leaf:
             return dist_mttkrp(
                 src, list(factors), node.mode, self.mode_axes, self.mesh,
-                method=algorithm, tiles=tiles,
+                method=algorithm, tiles=tiles, batch_axes=self.batch_axes,
             )
         if node.from_root:
             return dist_contract_range(
                 src, list(factors), node.lo, node.hi, self.mode_axes, self.mesh,
-                n_chunks=self._n_chunks,
+                n_chunks=self._n_chunks, batch_axes=self.batch_axes,
             )
         return dist_contract_partial(
             src, list(factors), node.lo, node.hi, node.parent_lo, node.parent_hi,
             self.mode_axes, self.mesh, n_chunks=self._n_chunks,
+            batch_axes=self.batch_axes,
         )
 
 
@@ -161,8 +200,10 @@ class OverlappingExecutor(ShardedExecutor):
     plain executor by construction).  Only the schedule changes.
     """
 
-    def __init__(self, mesh, mode_axes, n_chunks: int = DEFAULT_OVERLAP_CHUNKS):
-        super().__init__(mesh, mode_axes)
+    def __init__(
+        self, mesh, mode_axes, n_chunks: int = DEFAULT_OVERLAP_CHUNKS, batch_axes=()
+    ):
+        super().__init__(mesh, mode_axes, batch_axes)
         self.n_chunks = int(n_chunks)
 
     @property
@@ -179,6 +220,7 @@ class OverlappingExecutor(ShardedExecutor):
             return dist_mttkrp_overlapped(
                 src, list(factors), node.mode, self.mode_axes, self.mesh,
                 method=algorithm, n_chunks=self.n_chunks, tiles=tiles,
+                batch_axes=self.batch_axes,
             )
         return super().contract(node, src, factors, algorithm, tiles=tiles)
 
@@ -201,16 +243,22 @@ class CompressedShardedExecutor(ShardedExecutor):
     def init_carry(self, plan, x: Array, factors: Sequence[Array]) -> dict[int, Array]:
         """Zero per-node error-feedback residuals for every schedule node
         whose contraction completes with a psum, placed on the mesh (one
-        leading axis per reduced mesh axis, then the node's global output
-        dims sharded like the output itself)."""
+        leading axis per reduced mesh axis, then -- for a batched problem --
+        the batch dim sharded over ``batch_axes``, then the node's global
+        output dims sharded like the output itself)."""
+        prob = plan.problem
+        batched = bool(getattr(prob, "batched", False))
+        batch_entry = tuple(self.batch_axes) or None
         errs: dict[int, Array] = {}
         for node in plan.resolved_schedule.walk():
             if not node.reduce_axes:
                 continue
             lead = tuple(self.mesh.shape[a] for a in node.reduce_axes)
-            e = jnp.zeros(lead + node.shape, jnp.float32)
+            mid = (prob.batch,) if batched else ()
+            e = jnp.zeros(lead + mid + node.shape, jnp.float32)
             spec = P(
                 *node.reduce_axes,
+                *((batch_entry,) if batched else ()),
                 *[self.mode_axes.get(m) for m in node.modes],
                 None,
             )
@@ -238,16 +286,18 @@ class CompressedShardedExecutor(ShardedExecutor):
         if node.from_root and node.is_leaf:
             out, new_err = dist_mttkrp_compressed(
                 src, list(factors), node.mode, self.mode_axes, self.mesh, err,
-                method=algorithm, tiles=tiles,
+                method=algorithm, tiles=tiles, batch_axes=self.batch_axes,
             )
         elif node.from_root:
             out, new_err = dist_contract_range_compressed(
-                src, list(factors), node.lo, node.hi, self.mode_axes, self.mesh, err
+                src, list(factors), node.lo, node.hi, self.mode_axes, self.mesh,
+                err, batch_axes=self.batch_axes,
             )
         else:
             out, new_err = dist_contract_partial_compressed(
                 src, list(factors), node.lo, node.hi, node.parent_lo,
                 node.parent_hi, self.mode_axes, self.mesh, err,
+                batch_axes=self.batch_axes,
             )
         return out, {**carry, node.id: new_err}
 
@@ -258,6 +308,7 @@ def make_executor(
     mode_axes=None,
     *,
     n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
+    batch_axes=(),
 ) -> Executor:
     """Instantiate the executor for a planner-chosen kind.
 
@@ -265,7 +316,9 @@ def make_executor(
     :data:`repro.plan.cost.EXECUTORS`); the sharded kinds need the concrete
     ``mesh`` + ``mode_axes``, which the Problem deliberately does not carry
     (plans are pure metadata).  ``n_chunks`` sizes the overlapping
-    executor's psum pipeline.
+    executor's psum pipeline; ``batch_axes`` names the mesh axes a batched
+    problem's leading batch dimension is sharded over (batch-parallel
+    placements pass ``mode_axes={}`` plus the batch axes).
     """
     if kind not in EXECUTORS:
         raise ValueError(f"unknown executor kind {kind!r} (choose from {EXECUTORS})")
@@ -274,7 +327,7 @@ def make_executor(
     if mesh is None or mode_axes is None:
         raise ValueError(f"executor {kind!r} needs mesh and mode_axes")
     if kind == "sharded":
-        return ShardedExecutor(mesh, mode_axes)
+        return ShardedExecutor(mesh, mode_axes, batch_axes)
     if kind == "overlapping":
-        return OverlappingExecutor(mesh, mode_axes, n_chunks=n_chunks)
-    return CompressedShardedExecutor(mesh, mode_axes)
+        return OverlappingExecutor(mesh, mode_axes, n_chunks=n_chunks, batch_axes=batch_axes)
+    return CompressedShardedExecutor(mesh, mode_axes, batch_axes)

@@ -28,6 +28,7 @@ executor instance given the concrete mesh.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, replace
 from typing import Mapping
 
@@ -131,6 +132,12 @@ class SweepPlan:
     overlap constants when the plan was built with them.  ``describe()`` is
     the JSON-ready prediction surface benchmarks report against
     measurements.
+
+    For batched sharded problems the planner also argmins over *placements*
+    (mode-parallel as given vs all-batch-parallel); ``placements`` records
+    each candidate's predicted cost and ``problem`` is the winning
+    placement -- build the executor from ``plan.problem``'s
+    ``mode_axes``/``batch_axes``, not from the pre-planning problem.
     """
 
     problem: Problem
@@ -142,6 +149,7 @@ class SweepPlan:
     schedule: Schedule | None = None
     nodes: tuple[NodePlan, ...] = ()
     serial_fractions: Mapping[str, float] | None = None
+    placements: tuple[Mapping, ...] = ()
 
     @property
     def kind(self) -> str:
@@ -181,7 +189,9 @@ class SweepPlan:
 
     def describe(self) -> dict:
         """Predicted flops / HBM bytes / collective bytes per mode and per
-        schedule node, plus totals."""
+        schedule node, plus totals -- and, for batched sharded problems, the
+        placement candidates compared (each with its predicted seconds and
+        wire bytes, the selected one flagged)."""
         return {
             "shape": list(self.problem.shape),
             "rank": self.problem.rank,
@@ -192,6 +202,11 @@ class SweepPlan:
             "split": self.split,
             "sharded": self.problem.sharded,
             "mode_axes": {str(k): v for k, v in self.problem.mode_axes.items()},
+            "batch": self.problem.batch,
+            "batch_axes": list(self.problem.batch_axes),
+            "local_batch": self.problem.local_batch,
+            "placement": _placement_label(self.problem),
+            "placements": [dict(p) for p in self.placements],
             "local_shape": list(self.problem.local_shape),
             "schedule": self.resolved_schedule.name,
             "modes": [m.as_dict() for m in self.modes],
@@ -199,6 +214,40 @@ class SweepPlan:
             "serial_fractions": dict(self.serial_fractions or {}),
             "totals": self.total_cost(),
         }
+
+
+def _placement_label(problem: Problem) -> str:
+    """Human name of a problem's mesh placement (for describe()/planning)."""
+    if problem.mode_axes:
+        return "mode-parallel"
+    if problem.batch_axes:
+        return "batch-parallel"
+    return "unsharded"
+
+
+def _placement_candidates(problem: Problem) -> list[Problem]:
+    """Placement candidates the planner argmins over, as-given first.
+
+    A batched mode-parallel problem additionally gets the all-batch-parallel
+    remap (no mapped modes, the batch sharded over every mesh axis) whenever
+    the batch divides the device count -- the placement with zero reduce
+    traffic, which the Ballard-Knight-Rouse accounting predicts to win for
+    fleets of small tensors.  Unbatched problems (and problems already
+    batch-parallel, whose mode mapping we cannot invent) plan exactly as
+    before: one candidate.
+    """
+    cands = [problem]
+    if problem.batched and problem.mode_axes and problem.axis_sizes:
+        devices = math.prod(problem.axis_sizes.values())
+        if devices > 1 and problem.batch % devices == 0:
+            cands.append(
+                replace(
+                    problem,
+                    mode_axes={},
+                    batch_axes=tuple(sorted(problem.axis_sizes)),
+                )
+            )
+    return cands
 
 
 def _auto_mode(
@@ -461,6 +510,15 @@ def plan_sweep(
     ``SweepPlan.executor``; :func:`repro.plan.executor.make_executor`
     builds the matching instance.
 
+    Batched sharded problems (``Problem(batch=B)`` with mapped modes) are
+    additionally argmin'd over *placements*: the mode-parallel mapping as
+    given vs the all-batch-parallel remap (batch sharded over every mesh
+    axis, zero reduce traffic).  The winning placement becomes
+    ``SweepPlan.problem`` and both candidates' costs are recorded on
+    ``SweepPlan.placements`` (surfaced by ``describe()``) -- the cost model
+    proves, rather than assumes, that batch-parallel wins for fleets of
+    small tensors.
+
     ``'autotune'`` closes the predict -> measure loop: hardware timings
     recorded by :func:`repro.plan.autotune.tune` (read from
     ``tuning_cache``, defaulting to the process cache -- planning itself
@@ -503,39 +561,78 @@ def plan_sweep(
         ):
             serial_fractions = dict(measured.serial_fractions)
 
-    if executor != "auto":
-        validate_executor(problem, executor)
-        candidates = (executor,)
-    elif problem.sharded:
-        candidates = ("sharded", "overlapping", "compressed")
-    else:
-        candidates = ("local",)
+    # a pinned Schedule instance is bound to one Problem, so placement
+    # exploration (which rebuilds schedules per placement) is off then
+    placements = (
+        [problem]
+        if isinstance(schedule, Schedule)
+        else _placement_candidates(problem)
+    )
 
-    schedules = _resolve_schedules(problem, strategy, split, schedule)
-    results = [
-        (sched,)
-        + _best_executor(
-            problem, sched, strategy, candidates, n_chunks, serial_fractions,
-            measured,
-        )
-        for sched in schedules
-    ]  # rows: (sched, executor, node_plans, analytic_total, measured_total)
-    if measured is not None and all(r[4] is not None for r in results):
-        # every candidate schedule fully measured: strict argmin on hardware
-        # seconds -- the measurement IS the tie-breaker, so the analytic
-        # flat preference does not apply
-        best = min(results, key=lambda r: r[4])
-    else:
-        best = results[0]
-        flat_row = next((r for r in results if r[0].is_flat), None)
-        for r in results[1:]:
-            if r[3] < best[3]:
-                best = r
-        # near-tie preference: a tree must beat the flat sweep by >10% to win
-        if flat_row is not None and best[0] is not flat_row[0]:
-            if best[3] >= _NEAR_TIE * flat_row[3]:
-                best = flat_row
-    sched, chosen, node_plans = best[0], best[1], best[2]
+    picked = []  # rows: (prob, sched, executor, node_plans, analytic, measured)
+    for prob in placements:
+        if executor != "auto":
+            try:
+                validate_executor(prob, executor)
+            except ValueError:
+                if prob is problem:
+                    raise
+                continue  # forced kind invalid on the alternate placement
+            candidates = (executor,)
+        elif prob.mode_axes:
+            candidates = ("sharded", "overlapping", "compressed")
+        elif prob.batch_axes:
+            # batch-parallel placements have no psums: only the plain
+            # sharded executor applies (see validate_executor)
+            candidates = ("sharded",)
+        else:
+            candidates = ("local",)
+
+        schedules = _resolve_schedules(prob, strategy, split, schedule)
+        results = [
+            (sched,)
+            + _best_executor(
+                prob, sched, strategy, candidates, n_chunks, serial_fractions,
+                measured,
+            )
+            for sched in schedules
+        ]  # rows: (sched, executor, node_plans, analytic_total, measured_total)
+        if measured is not None and all(r[4] is not None for r in results):
+            # every candidate schedule fully measured: strict argmin on
+            # hardware seconds -- the measurement IS the tie-breaker, so the
+            # analytic flat preference does not apply
+            best = min(results, key=lambda r: r[4])
+        else:
+            best = results[0]
+            flat_row = next((r for r in results if r[0].is_flat), None)
+            for r in results[1:]:
+                if r[3] < best[3]:
+                    best = r
+            # near-tie preference: a tree must beat the flat sweep by >10% to win
+            if flat_row is not None and best[0] is not flat_row[0]:
+                if best[3] >= _NEAR_TIE * flat_row[3]:
+                    best = flat_row
+        picked.append((prob,) + best)
+
+    # placement argmin: strict < keeps the as-given placement on ties
+    winner = picked[0]
+    for row in picked[1:]:
+        if row[4] < winner[4]:
+            winner = row
+    prob, sched, chosen, node_plans = winner[0], winner[1], winner[2], winner[3]
+    placement_rows = tuple(
+        {
+            "placement": _placement_label(r[0]),
+            "mode_axes": {str(k): v for k, v in r[0].mode_axes.items()},
+            "batch_axes": list(r[0].batch_axes),
+            "executor": r[2],
+            "schedule": r[1].name,
+            "predicted_s": r[4],
+            "collective_bytes": sum(np_.cost.collective_bytes for np_ in r[3]),
+            "selected": r is winner,
+        }
+        for r in picked
+    ) if len(picked) > 1 else ()
 
     modes = tuple(
         sorted(
@@ -548,7 +645,7 @@ def plan_sweep(
         )
     )
     return SweepPlan(
-        problem,
+        prob,
         strategy,
         modes,
         split=sched.split,
@@ -557,4 +654,5 @@ def plan_sweep(
         schedule=sched,
         nodes=node_plans,
         serial_fractions=dict(serial_fractions) if serial_fractions else None,
+        placements=placement_rows,
     )

@@ -25,6 +25,13 @@ class Problem:
     ``mode_axes`` maps tensor modes to mesh axis names (the block
     distribution of ``repro.dist``); ``axis_sizes`` maps each mesh axis name
     to its device count.  Both empty means a single-device problem.
+
+    ``batch`` stacks B same-shaped tensors along a leading axis (default 1:
+    a single tensor, and every array keeps its classic unbatched rank).
+    ``batch_axes`` names the mesh axes the batch is sharded over -- the
+    third mesh-axis role next to mode axes: batch entries never contract
+    against each other, so a pure batch-parallel placement moves zero
+    reduce traffic while a mode-parallel placement pays psum volume x B.
     """
 
     shape: tuple[int, ...]
@@ -32,6 +39,8 @@ class Problem:
     dtype: Any = "float32"
     mode_axes: Mapping[int, str] = field(default_factory=dict)
     axis_sizes: Mapping[str, int] = field(default_factory=dict)
+    batch: int = 1
+    batch_axes: tuple[str, ...] = ()
 
     def __post_init__(self):
         object.__setattr__(self, "shape", tuple(int(d) for d in self.shape))
@@ -41,6 +50,10 @@ class Problem:
         )
         object.__setattr__(
             self, "axis_sizes", {str(a): int(s) for a, s in dict(self.axis_sizes).items()}
+        )
+        object.__setattr__(self, "batch", int(self.batch))
+        object.__setattr__(
+            self, "batch_axes", tuple(str(a) for a in self.batch_axes)
         )
         self._validate()
 
@@ -55,13 +68,35 @@ class Problem:
                 self.dtype_str,
                 tuple(sorted(self.mode_axes.items())),
                 tuple(sorted(self.axis_sizes.items())),
+                self.batch,
+                self.batch_axes,
             )
         )
 
     def _validate(self) -> None:
         if self.rank < 1:
             raise ValueError(f"rank must be >= 1, got {self.rank}")
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
         self.itemsize  # fail at construction on an unresolvable dtype
+        mode_axis_names = set(self.mode_axes.values())
+        for axis in self.batch_axes:
+            if axis not in self.axis_sizes:
+                raise ValueError(
+                    f"no size known for batch mesh axis {axis!r} "
+                    f"(axes: {sorted(self.axis_sizes)})"
+                )
+            if axis in mode_axis_names:
+                raise ValueError(
+                    f"mesh axis {axis!r} cannot shard both a mode and the batch"
+                )
+        if len(set(self.batch_axes)) != len(self.batch_axes):
+            raise ValueError(f"duplicate batch axes in {self.batch_axes}")
+        if self.batch % self.batch_shards:
+            raise ValueError(
+                f"batch {self.batch} not divisible by the "
+                f"{self.batch_shards} devices of batch axes {self.batch_axes}"
+            )
         seen: dict[str, int] = {}
         for mode, axis in self.mode_axes.items():
             if not 0 <= mode < self.ndim:
@@ -85,19 +120,33 @@ class Problem:
                 )
 
     @classmethod
-    def from_tensor(cls, x, rank: int, mode_axes=None, mesh=None) -> "Problem":
+    def from_tensor(
+        cls, x, rank: int, mode_axes=None, mesh=None, *, batch=1, batch_axes=()
+    ) -> "Problem":
         """Build a Problem from an array (or tracer / ShapeDtypeStruct).
 
         Pass ``mode_axes`` + ``mesh`` for a block-distributed problem; the
         mesh contributes only its axis sizes (the object stays with the
-        executor).
+        executor).  With ``batch=B > 1`` the array's leading axis is the
+        batch (``x.shape[0] == B``) and the tensor shape is ``x.shape[1:]``;
+        ``batch_axes`` optionally shards that axis over mesh axes.
         """
+        batch = int(batch)
+        shape = tuple(x.shape)
+        if batch > 1:
+            if not shape or shape[0] != batch:
+                raise ValueError(
+                    f"leading axis {shape[:1]} does not match batch={batch}"
+                )
+            shape = shape[1:]
         return cls(
-            shape=tuple(x.shape),
+            shape=shape,
             rank=rank,
             dtype=x.dtype,
             mode_axes=mode_axes or {},
             axis_sizes=dict(mesh.shape) if mesh is not None else {},
+            batch=batch,
+            batch_axes=tuple(batch_axes),
         )
 
     # ------------------------------------------------------------- derived
@@ -125,8 +174,26 @@ class Problem:
 
     @property
     def sharded(self) -> bool:
-        """True when any mode is mapped to a mesh axis."""
-        return bool(self.mode_axes)
+        """True when any mode or the batch is mapped to a mesh axis."""
+        return bool(self.mode_axes) or bool(self.batch_axes)
+
+    @property
+    def batched(self) -> bool:
+        """True when the problem stacks more than one tensor (batch > 1)."""
+        return self.batch > 1
+
+    @property
+    def batch_shards(self) -> int:
+        """Device count the batch axis is split over (1 when unsharded)."""
+        p = 1
+        for axis in self.batch_axes:
+            p *= self.axis_sizes[axis]
+        return p
+
+    @property
+    def local_batch(self) -> int:
+        """Per-device batch extent under the ``batch_axes`` distribution."""
+        return self.batch // self.batch_shards
 
     def mode_shards(self, n: int) -> int:
         """Device count along the axis of mode ``n`` (1 when unmapped)."""

@@ -271,7 +271,13 @@ def build_schedule(problem: Problem, spec, name: str = "custom") -> Schedule:
         axes = tuple(problem.mode_axes[m] for m in mapped)
         participants = math.prod(problem.axis_sizes[a] for a in axes) if axes else 1
         local = tuple(problem.local_shape[m] for m in range(lo, hi))
-        block_bytes = math.prod(local) * problem.rank * problem.itemsize
+        # batched problems psum one partial per local batch entry, so the
+        # per-device wire volume scales with local_batch (zero for pure
+        # batch-parallel placements, where no mode is mapped at all)
+        block_bytes = (
+            math.prod(local) * problem.rank * problem.itemsize
+            * problem.local_batch
+        )
         nodes.append(
             ContractionNode(
                 id=nid,

@@ -123,7 +123,7 @@ def als_sweep(
             u, norms = normalize_columns(u, it)
             weights = norms
         factors[n] = u
-        gs[n] = u.T @ u
+        gs[n] = jnp.swapaxes(u, -1, -2) @ u
         return weights
 
     sched = plan.resolved_schedule
@@ -229,6 +229,15 @@ def cp_als(
     ``sweeps_per_sync - 1`` sweeps past the first converged one; the
     callback still fires once per executed sweep (with the chunk's mean
     per-sweep seconds).
+
+    Batched problems (``plan.problem.batched``) expect ``x`` of shape
+    ``(batch, *problem.shape)`` and run ALL problems through the same
+    compiled dispatches: factors/weights/Grams gain a leading batch axis,
+    the fit is per-problem (``CPState.fit`` has shape ``(batch,)``), the
+    callback receives the batch-mean fit, and convergence requires every
+    problem's fit delta below ``tol`` (problems are independent, so the
+    shared stop is the price of one fused dispatch -- at most a few extra
+    sweeps for the fastest converger).
     """
     problem = plan.problem
     if executor is None:
@@ -243,7 +252,17 @@ def cp_als(
     if k < 1:
         raise ValueError(f"sweeps_per_sync must be >= 1, got {sweeps_per_sync}")
     key = jax.random.PRNGKey(seed)
-    factors = init_factors or random_factors(key, x.shape, problem.rank, x.dtype)
+    if problem.batched:
+        expected = (problem.batch,) + problem.shape
+        if tuple(x.shape) != expected:
+            raise ValueError(
+                f"batched problem expects x.shape {expected}, got {tuple(x.shape)}"
+            )
+        factors = init_factors or random_factors(
+            key, problem.shape, problem.rank, x.dtype, batch=problem.batch
+        )
+    else:
+        factors = init_factors or random_factors(key, x.shape, problem.rank, x.dtype)
     x, factors = executor.prepare(problem, x, factors)
     # donated buffers are deleted after the first dispatch; prepare() may
     # pass caller arrays through unchanged (LocalExecutor), so donation is
@@ -252,8 +271,12 @@ def cp_als(
     donate = (3, 4, 5, 6) if jax.default_backend() != "cpu" else ()
     if donate and init_factors is not None:
         factors = [jnp.array(u, copy=True) for u in factors]
-    weights = jnp.ones((problem.rank,), x.dtype)
-    norm_x = tensor_norm(x).astype(x.dtype)
+    if problem.batched:
+        weights = jnp.ones((problem.batch, problem.rank), x.dtype)
+        norm_x = tensor_norm(x, batched=True).astype(x.dtype)
+    else:
+        weights = jnp.ones((problem.rank,), x.dtype)
+        norm_x = tensor_norm(x).astype(x.dtype)
     carry = (
         executor.init_carry(plan, x, factors)
         if hasattr(executor, "init_carry")
@@ -298,12 +321,22 @@ def cp_als(
         fits = _block_until_ready(fits)  # the chunk's single host sync
         dt = time.perf_counter() - t0
         for j in range(length):
-            f = float(fits[j])
-            if callback is not None:
-                callback(it + j, f, dt / length)
-            if track_fit and abs(f - fit_prev) < tol:
-                done = True
-            fit_prev = f
+            if problem.batched:
+                # per-problem fits (B,); stop only when EVERY problem's
+                # fit delta clears tol (one fused dispatch, shared stop).
+                f = fits[j]
+                if callback is not None:
+                    callback(it + j, float(jnp.mean(f)), dt / length)
+                if track_fit and bool(jnp.max(jnp.abs(f - fit_prev)) < tol):
+                    done = True
+                fit_prev = f
+            else:
+                f = float(fits[j])
+                if callback is not None:
+                    callback(it + j, f, dt / length)
+                if track_fit and abs(f - fit_prev) < tol:
+                    done = True
+                fit_prev = f
         it += length
         fit = fits[length - 1]
     return CPState(factors=factors, weights=weights, fit=fit, it=it)

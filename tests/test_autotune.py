@@ -85,7 +85,9 @@ def test_lookup_resolves_entry_fields(tuned_cache):
     m = lookup_measurements(problem, cache)
     assert m is not None
     assert set(m.tiles) == {"fused_mttkrp", "multi_ttv"}
-    assert set(m.kernel_tiles("fused_mttkrp")) == {"block_i", "block_b"}
+    assert set(m.kernel_tiles("fused_mttkrp")) == {
+        "block_i", "block_b", "block_batch",
+    }
     # every stored node row resolves through the node_s map
     assert len(m.node_s) == len(entry["nodes"]) > 0
     # and the same measurements come back through a fresh disk read
