@@ -1,0 +1,144 @@
+"""Serving throughput: packed fixed-shape batches vs serial dispatch.
+
+A fleet of small same-rank tensors over two shapes (two signatures -- the
+fMRI-style workload of the paper's Sec. 6, one subject = one tensor) is
+submitted to :class:`repro.serve.CPService` and drained once per batch size.
+``batch_size=1`` is the serial baseline (one dispatch per tensor);
+the packed rows amortize dispatch overhead over ``B`` problems per compiled
+call, so problems/sec must beat serial -- that ratio
+(``speedup_packed_vs_serial``) is the acceptance number of the committed
+baseline ``benchmarks/BENCH_serve.json``.
+
+Per batch size the JSON row records problems/sec (real problems over
+in-dispatch seconds), end-to-end p50/p99 submit-to-result latency (queue
+wait included -- packing trades tail latency for throughput and the rows
+show both sides), batch occupancy (real-slot fraction: partial batches pad
+by cycling real requests), and the serving counters (batches, compiles --
+exactly one per signature, warm-plan hits).  Every service is warmed with
+one full flush first so compile time never pollutes the measured drain
+(compiles are counted in the warm pass and asserted unchanged after).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --smoke --json out.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.util import row
+from repro.core.tensor_ops import random_tensor
+from repro.serve import CPService
+
+
+def _fleet(shapes, n_requests):
+    """n_requests tensors cycling over ``shapes`` (a mixed-signature stream)."""
+    return [
+        random_tensor(jax.random.PRNGKey(i), shapes[i % len(shapes)])
+        for i in range(n_requests)
+    ]
+
+
+def bench_batch_size(tensors, rank, batch_size, n_iters):
+    """One serving row: warm flush (compiles), then the timed drain."""
+    svc = CPService(batch_size=batch_size, n_iters=n_iters)
+    # warm pass: every signature plans + compiles its dispatch here
+    for x in tensors:
+        svc.submit(x, rank)
+    svc.flush()
+    compiles = svc.stats()["compiles"]
+    warm_execute_s = svc.stats()["execute_s"]
+
+    for x in tensors:
+        svc.submit(x, rank)
+    t0 = time.perf_counter()
+    done = svc.flush()
+    wall_s = time.perf_counter() - t0
+    stats = svc.stats()
+    assert len(done) == len(tensors)
+    assert stats["compiles"] == compiles, "timed drain must be compile-free"
+
+    lat = np.asarray(sorted(f.result().latency_s for f in done))
+    timed_execute_s = stats["execute_s"] - warm_execute_s
+    return {
+        "batch_size": batch_size,
+        "serial": batch_size == 1,
+        "requests": len(tensors),
+        "wall_s": wall_s,
+        "execute_s": timed_execute_s,
+        "problems_per_s": len(tensors) / timed_execute_s,
+        "problems_per_s_wall": len(tensors) / wall_s,
+        "p50_latency_s": float(np.percentile(lat, 50)),
+        "p99_latency_s": float(np.percentile(lat, 99)),
+        "batches": stats["batches"] // 2,  # warm + timed drains are identical
+        "batch_occupancy": stats["batch_occupancy"],
+        "signatures": stats["signatures"],
+        "compiles": compiles,
+        "warm_plan_hits": stats["warm_plan_hits"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny shapes, CI artifact path")
+    ap.add_argument("--json", default=None, help="write the rows to this file")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rank", type=int, default=None)
+    ap.add_argument("--n-iters", type=int, default=None)
+    ap.add_argument("--dim", type=int, default=None, help="edge of the cubic shape")
+    ap.add_argument("--batch-sizes", default=None, help="comma list, 1 = serial")
+    args = ap.parse_args()
+
+    if args.smoke:
+        requests = args.requests or 16
+        rank, n_iters, dim = args.rank or 4, args.n_iters or 3, args.dim or 8
+        batch_sizes = args.batch_sizes or "1,4,8"
+    else:
+        requests = args.requests or 64
+        rank, n_iters, dim = args.rank or 8, args.n_iters or 10, args.dim or 32
+        batch_sizes = args.batch_sizes or "1,4,8,16"
+    sizes = [int(s) for s in batch_sizes.split(",")]
+    shapes = [(dim,) * 3, (dim, dim // 2, dim)]
+    tensors = _fleet(shapes, requests)
+
+    rows = []
+    for b in sizes:
+        r = bench_batch_size(tensors, rank, b, n_iters)
+        rows.append(r)
+        tag = "serial" if r["serial"] else f"packed-B{b}"
+        print(row(
+            f"serve_{tag}",
+            r["execute_s"] / requests,
+            f"{r['problems_per_s']:.1f}/s p50={r['p50_latency_s'] * 1e3:.1f}ms "
+            f"p99={r['p99_latency_s'] * 1e3:.1f}ms occ={r['batch_occupancy']:.2f}",
+        ))
+
+    serial = next(r for r in rows if r["serial"])
+    packed = max((r for r in rows if not r["serial"]),
+                 key=lambda r: r["problems_per_s"], default=None)
+    speedup = packed["problems_per_s"] / serial["problems_per_s"] if packed else None
+    if packed:
+        print(row("serve_speedup_packed_vs_serial", 0.0, f"{speedup:.2f}x"))
+
+    out = {
+        "smoke": bool(args.smoke),
+        "requests": requests,
+        "rank": rank,
+        "n_iters": n_iters,
+        "shapes": [list(s) for s in shapes],
+        "device_count": jax.device_count(),
+        "rows": rows,
+        "speedup_packed_vs_serial": speedup,
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

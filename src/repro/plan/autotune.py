@@ -97,18 +97,15 @@ def problem_key(
     (1 when unsharded) -- NOT the runtime device count, so plans for
     detached hardware key consistently.
 
-    Batched problems append a ``|b{B}`` field; unbatched keys keep the
-    historical 5-field layout, so entries tuned before the batch dimension
-    existed keep resolving for B=1.
+    The construction itself is :meth:`repro.plan.problem.Problem.signature`
+    (the one canonical key, shared with the serving engine's batch buckets);
+    this wrapper only fills in the live jax backend.  Batched problems
+    append a ``|b{B}`` field; unbatched keys keep the historical 5-field
+    layout, so entries tuned before the batch dimension existed keep
+    resolving for B=1.
     """
     backend = backend_name() if backend is None else str(backend)
-    if n_devices is None:
-        n_devices = math.prod(problem.axis_sizes.values()) if problem.axis_sizes else 1
-    shape = "x".join(str(d) for d in problem.shape)
-    key = f"{backend}|{shape}|r{problem.rank}|{problem.dtype_str}|d{n_devices}"
-    if problem.batch > 1:
-        key += f"|b{problem.batch}"
-    return key
+    return problem.signature(backend=backend, n_devices=n_devices)
 
 
 def node_key(node: ContractionNode, algorithm: str, executor: str) -> str:

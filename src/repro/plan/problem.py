@@ -10,6 +10,7 @@ dry-runs) and inside ``jit`` traces (shapes are static under tracing).
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Any, Iterable, Mapping
 
@@ -194,6 +195,34 @@ class Problem:
     def local_batch(self) -> int:
         """Per-device batch extent under the ``batch_axes`` distribution."""
         return self.batch // self.batch_shards
+
+    def signature(
+        self, *, backend: str = "any", n_devices: int | None = None
+    ) -> str:
+        """THE canonical signature string of this problem.
+
+        ``backend|shape|rank|dtype|devices`` (plus ``|b{B}`` for batched
+        problems; B=1 keeps the historical 5-field layout) -- the one key
+        construction shared by the tuning cache
+        (:func:`repro.plan.autotune.problem_key`, which fills in the live
+        jax backend) and the serving engine's batch buckets
+        (:class:`repro.serve.cp_service.CPService`): two problems with equal
+        signatures are interchangeable in one compiled batched dispatch and
+        comparable under one set of hardware measurements.
+
+        ``n_devices`` defaults to the product of the problem's mesh axis
+        sizes (1 when unsharded) -- NOT the runtime device count, so plans
+        for detached hardware key consistently.
+        """
+        if n_devices is None:
+            n_devices = (
+                math.prod(self.axis_sizes.values()) if self.axis_sizes else 1
+            )
+        shape = "x".join(str(d) for d in self.shape)
+        key = f"{backend}|{shape}|r{self.rank}|{self.dtype_str}|d{int(n_devices)}"
+        if self.batch > 1:
+            key += f"|b{self.batch}"
+        return key
 
     def mode_shards(self, n: int) -> int:
         """Device count along the axis of mode ``n`` (1 when unmapped)."""

@@ -20,7 +20,7 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, MutableMapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -207,6 +207,8 @@ def cp_als(
     init_factors: list[Array] | None = None,
     callback: Callable[[int, float, float], None] | None = None,
     sweeps_per_sync: int = 1,
+    dispatch_cache: MutableMapping[Any, Callable] | None = None,
+    dispatch_key: Any = None,
 ) -> CPState:
     """THE CP-ALS driver: init, sync-free chunked sweep loop, convergence stop.
 
@@ -238,6 +240,16 @@ def cp_als(
     problem's fit delta below ``tol`` (problems are independent, so the
     shared stop is the price of one fused dispatch -- at most a few extra
     sweeps for the fastest converger).
+
+    ``dispatch_cache`` (with ``dispatch_key``) lets a caller that drives
+    many same-signature runs -- the serving engine of
+    :mod:`repro.serve.cp_service` -- reuse ONE jitted sweep-chunk across
+    calls: each ``cp_als`` call otherwise builds a fresh ``jax.jit`` wrapper
+    and recompiles.  The compiled chunk closes over ``(plan, executor)``, so
+    the caller must key the cache such that one key never maps two distinct
+    plans/executors (the service keys on the problem signature and memoizes
+    plan + executor under the same key).  A cache hit makes the call
+    compile-free for shapes already traced.
     """
     problem = plan.problem
     if executor is None:
@@ -306,7 +318,12 @@ def cp_als(
         )
         return factors, weights, gs, carry, fits
 
-    chunk = jax.jit(_chunk, static_argnames=("length",), donate_argnums=donate)
+    if dispatch_cache is not None and dispatch_key in dispatch_cache:
+        chunk = dispatch_cache[dispatch_key]
+    else:
+        chunk = jax.jit(_chunk, static_argnames=("length",), donate_argnums=donate)
+        if dispatch_cache is not None:
+            dispatch_cache[dispatch_key] = chunk
 
     fit_prev = -math.inf
     fit = jnp.asarray(0.0, x.dtype)

@@ -1,1 +1,33 @@
-"""Subpackage."""
+"""``repro.serve`` -- the serving layer: fixed-shape batches, one compile per signature.
+
+Two engines over one pattern (clients submit work, a scheduler packs
+same-signature requests into fixed-size compiled batches, results stream
+back):
+
+* :class:`CPService` (:mod:`repro.serve.cp_service`) -- decomposition as a
+  service: submit tensors, get :class:`CPFuture` handles, batches run
+  through ``Problem(batch=B) -> plan_sweep -> batched cp_als`` with the
+  persistent tuning cache as the warm-plan store.
+* :class:`ServeEngine` (:mod:`repro.serve.engine`) -- the LM micro engine
+  (prefill + decode) the pattern was first prototyped on.
+
+Both share the bounded FIFO+priority :class:`RequestQueue` of
+:mod:`repro.serve.queue` (backpressure via :class:`QueueFull`).
+"""
+
+from .cp_service import CPFuture, CPResult, CPService
+from .engine import GenerationConfig, Request, ServeEngine, generate
+from .queue import PendingRequest, QueueFull, RequestQueue
+
+__all__ = [
+    "CPFuture",
+    "CPResult",
+    "CPService",
+    "GenerationConfig",
+    "PendingRequest",
+    "QueueFull",
+    "Request",
+    "RequestQueue",
+    "ServeEngine",
+    "generate",
+]

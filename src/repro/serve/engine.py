@@ -1,14 +1,16 @@
-"""Batched serving engine: prefill + greedy/temperature decode, request queue.
+"""Batched LM serving engine: prefill + greedy/temperature decode.
 
 The engine serves fixed-shape batches (compiled once per (batch, prompt_len,
-max_len) signature -- the production pattern for TPU serving).  A simple slot
-scheduler packs queued requests into the next batch; finished sequences are
-padded out with EOS so the batch shape stays static.
+max_len) signature -- the production pattern for TPU serving).  The request
+queue and slot scheduler are the shared machinery of
+:mod:`repro.serve.queue` (the same pattern drives the CP decomposition
+service, :mod:`repro.serve.cp_service`): queued requests are packed into the
+next fixed-size batch; finished sequences are padded out with EOS so the
+batch shape stays static.
 """
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -17,6 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+
+from .queue import RequestQueue
 
 Array = jax.Array
 
@@ -66,6 +70,8 @@ def _select(logits: Array, gen: GenerationConfig, key: jax.Array) -> Array:
 
 @dataclass
 class Request:
+    """One LM generation request: prompt tokens in, generated tokens out."""
+
     rid: int
     tokens: np.ndarray  # (S,)
     done: bool = False
@@ -74,31 +80,48 @@ class Request:
 
 @dataclass
 class ServeEngine:
-    """Micro engine: enqueue prompts, flush() packs them into fixed batches."""
+    """Micro engine: enqueue prompts, flush() packs them into fixed batches.
+
+    The queue/slot-scheduler machinery is the shared
+    :class:`repro.serve.queue.RequestQueue`; this engine keeps its
+    historical surface (``submit`` returns an int rid, ``flush`` returns
+    ``{rid: generated tokens}``) and serves a single bucket (every prompt
+    shares one compiled signature family).
+    """
 
     model: Model
     params: Any
     gen: GenerationConfig
     batch_size: int = 4
-    _queue: list[Request] = field(default_factory=list)
-    _next_id: int = 0
+    max_pending: int | None = None
+    _queue: RequestQueue = field(default_factory=RequestQueue)
+
+    def __post_init__(self):
+        self._queue = RequestQueue(self.max_pending)
 
     def submit(self, tokens: np.ndarray) -> int:
-        rid = self._next_id
-        self._next_id += 1
-        self._queue.append(Request(rid, np.asarray(tokens, np.int32)))
-        return rid
+        """Enqueue one prompt; returns its request id.
+
+        Raises :class:`repro.serve.queue.QueueFull` when ``max_pending``
+        requests are already waiting.
+        """
+        req = self._queue.submit(
+            Request(rid=-1, tokens=np.asarray(tokens, np.int32))
+        )
+        req.payload.rid = req.rid  # the queue owns rid assignment
+        return req.rid
 
     def flush(self) -> dict[int, np.ndarray]:
         """Serve every queued request; returns rid -> generated tokens."""
         results: dict[int, np.ndarray] = {}
-        while self._queue:
-            chunk = self._queue[: self.batch_size]
-            self._queue = self._queue[self.batch_size :]
-            s = max(len(r.tokens) for r in chunk)
+        while True:
+            chunk = self._queue.take(self.batch_size)
+            if not chunk:
+                break
+            s = max(len(r.payload.tokens) for r in chunk)
             toks = np.zeros((self.batch_size, s), np.int32)
             for i, r in enumerate(chunk):
-                toks[i, s - len(r.tokens) :] = r.tokens  # left-pad
+                toks[i, s - len(r.payload.tokens) :] = r.payload.tokens  # left-pad
             batch = {"tokens": jnp.asarray(toks)}
             if self.model.cfg.is_encdec:
                 batch["frames"] = jnp.zeros(

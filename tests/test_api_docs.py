@@ -34,13 +34,13 @@ def _missing_docs(modname: str) -> list[str]:
     return missing
 
 
-@pytest.mark.parametrize("modname", ["repro.plan", "repro.dist"])
+@pytest.mark.parametrize("modname", ["repro.plan", "repro.dist", "repro.serve"])
 def test_public_api_has_docstrings(modname):
     missing = _missing_docs(modname)
     assert not missing, f"undocumented public API: {missing}"
 
 
-@pytest.mark.parametrize("modname", ["repro.plan", "repro.dist"])
+@pytest.mark.parametrize("modname", ["repro.plan", "repro.dist", "repro.serve"])
 def test_all_names_resolve(modname):
     """__all__ must not advertise names the package fails to define."""
     mod = importlib.import_module(modname)

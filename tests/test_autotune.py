@@ -191,8 +191,9 @@ def test_autotune_stamps_measured_node_times(tuned_cache):
     for np_ in plan.nodes:
         if np_.algorithm == "fused":
             assert np_.tiles == {
-                "block_i": entry["tiles"]["fused_mttkrp"]["block_i"],
-                "block_b": entry["tiles"]["fused_mttkrp"]["block_b"],
+                k: entry["tiles"]["fused_mttkrp"][k]
+                for k in ("block_i", "block_b", "block_batch")
+                if k in entry["tiles"]["fused_mttkrp"]
             }
 
 

@@ -42,3 +42,13 @@ def test_serve_driver_restores_checkpoint(tmp_path):
     )
     assert "restored step" in out
     assert "served 2 requests" in out
+
+
+def test_serve_cp_driver(tmp_path):
+    out = _run_module(
+        "repro.launch.serve_cp",
+        "--requests", "4", "--batch-size", "2", "--dim", "6",
+        "--n-iters", "2", "--tuning-cache", str(tmp_path / "tuning.json"),
+    )
+    assert "served 4 problems" in out
+    assert "signatures=2 compiles=2" in out
