@@ -39,6 +39,13 @@ tile rows plus the measured-vs-predicted node rows of the resulting
 ``plan_sweep(strategy="autotune")`` plan.  The first CPU-smoke baseline is
 committed in-tree as ``benchmarks/BENCH_autotune.json``.
 
+``--pp`` adds a ``pp`` section: a >=20-sweep CP-ALS run on a planted
+low-rank tensor, exact vs pairwise perturbation (``Problem.pp_tol``),
+reporting end-to-end amortized per-sweep seconds for both, the measured
+exact-sweep fraction (``CPState.pp_exact_sweeps / n_iters``) next to the
+planner's ``PP_EXACT_FRACTION`` assumption, and the fit gap.  The first
+CPU-smoke baseline is committed in-tree as ``benchmarks/BENCH_pp.json``.
+
     PYTHONPATH=src python -m benchmarks.bench_mttkrp --smoke --calibrate \
         --autotune --budget-ms 2000 --json out.json
 """
@@ -83,6 +90,15 @@ SCHEDULE_RANK = 8
 BATCHED_SHAPE = (16, 16, 16)
 BATCHED_RANK = 8
 BATCHED_ITERS = 3
+
+# pp section: big enough that the correction sweep's O(sum I_n*I_m*C) work
+# is clearly cheaper than the exact MTTKRP's O(prod I * C); a planted
+# low-rank tensor keeps the drift small so most sweeps ride the cache
+PP_SHAPE = (128, 128, 128)
+PP_RANK = 32
+PP_ITERS = 40
+PP_TOL = 0.05
+PP_INIT_NOISE = 0.05  # refinement regime: init = planted factors + noise
 
 
 def overlap_section(reps: int) -> dict:
@@ -318,6 +334,79 @@ def batched_section(batch: int, reps: int) -> dict:
     return out
 
 
+def pp_section(reps: int) -> dict:
+    """Exact vs pairwise-perturbation CP-ALS on a planted low-rank tensor.
+
+    Times both drivers end-to-end over ``PP_ITERS`` (>= 20) sweeps with the
+    hot loop fully sync-free (``sweeps_per_sync`` = all sweeps) and reports
+    amortized per-sweep seconds, the *measured* exact-sweep fraction
+    (``CPState.pp_exact_sweeps / n_iters``) next to the planner's
+    ``PP_EXACT_FRACTION`` planning assumption and its full analytic pricing
+    row (``SweepPlan.describe()["pp"]``), and the final-fit gap between the
+    two runs -- the accuracy cost of approximating most sweeps.
+    """
+    import time as _time
+
+    from repro.core import cp_full
+    from repro.plan import PP_EXACT_FRACTION, cp_als
+
+    true = random_factors(jax.random.PRNGKey(11), PP_SHAPE, PP_RANK)
+    x = cp_full(None, true)
+    x = x + 1e-3 * random_tensor(jax.random.PRNGKey(12), PP_SHAPE)
+    # start inside the convergence basin (planted factors + small noise):
+    # PP targets the refinement phase, where ALS steps settle quickly and
+    # nearly every sweep can ride the cached pairwise contractions
+    pert = random_factors(jax.random.PRNGKey(13), PP_SHAPE, PP_RANK)
+    init = [t + PP_INIT_NOISE * p for t, p in zip(true, pert)]
+
+    exact_plan = plan_sweep(Problem(shape=PP_SHAPE, rank=PP_RANK))
+    pp_prob = Problem(shape=PP_SHAPE, rank=PP_RANK, pp_tol=PP_TOL)
+    pp_plan = plan_sweep(pp_prob, strategy="pp")
+
+    def _run(run_plan, key):
+        state = best = None
+        cache: dict = {}
+        # first call compiles into the dispatch cache; timed calls reuse
+        # the compiled chunk and measure steady-state sweep dispatches
+        for i in range(max(1, reps) + 1):
+            t0 = _time.perf_counter()
+            state = cp_als(
+                x, run_plan, n_iters=PP_ITERS, tol=0.0,
+                init_factors=list(init), sweeps_per_sync=PP_ITERS,
+                dispatch_cache=cache, dispatch_key=key,
+            )
+            dt = _time.perf_counter() - t0
+            if i > 0:
+                best = dt if best is None else min(best, dt)
+        return state, best
+
+    st_exact, t_exact = _run(exact_plan, "exact")
+    st_pp, t_pp = _run(pp_plan, pp_prob.signature())
+    exact_fraction = st_pp.pp_exact_sweeps / PP_ITERS
+    return {
+        "shape": list(PP_SHAPE),
+        "rank": PP_RANK,
+        "n_iters": PP_ITERS,
+        "pp_tol": PP_TOL,
+        "exact": {
+            "total_s": t_exact,
+            "per_sweep_s": t_exact / PP_ITERS,
+            "fit": float(st_exact.fit),
+        },
+        "pp": {
+            "total_s": t_pp,
+            "per_sweep_s": t_pp / PP_ITERS,
+            "fit": float(st_pp.fit),
+            "exact_sweeps": int(st_pp.pp_exact_sweeps),
+            "exact_fraction_measured": exact_fraction,
+            "exact_fraction_assumed": PP_EXACT_FRACTION,
+        },
+        "speedup": t_exact / t_pp,
+        "fit_gap": abs(float(st_exact.fit) - float(st_pp.fit)),
+        "plan_pp_info": dict(pp_plan.describe()["pp"]),
+    }
+
+
 def calibrate_serial_fractions(overlap: dict) -> dict:
     """Fit per-executor ``serial_fraction`` from measured overlap rows.
 
@@ -430,6 +519,7 @@ def collect(
     budget_ms: float = 2000.0,
     tuning_cache: str | None = None,
     batch: int = 0,
+    pp: bool = False,
 ) -> dict:
     """Measure all shapes; returns {"plans": [...], "results": [...]}."""
     if full and smoke:
@@ -528,6 +618,19 @@ def collect(
                 f"amortized_ms={bt['batch_parallel']['amortized_ms_per_problem']:.3f}",
             )
         data["batched"] = bt
+    if pp:
+        ps = pp_section(reps)
+        rec(
+            "cp_als_exact_sweep", ps["exact"]["per_sweep_s"],
+            f"fit={ps['exact']['fit']:.5f}",
+        )
+        rec(
+            "cp_als_pp_sweep_amortized", ps["pp"]["per_sweep_s"],
+            f"vs_exact={ps['speedup']:.2f}x;"
+            f"exact_fraction={ps['pp']['exact_fraction_measured']:.3f};"
+            f"fit_gap={ps['fit_gap']:.2e}",
+        )
+        data["pp"] = ps
     if autotune:
         at = autotune_section(total, reps, budget_ms, tuning_cache)
         for kernel, info in at["tiles"].items():
@@ -599,13 +702,17 @@ def main() -> None:
                          "of B small tensors (problems/sec + amortized "
                          "per-problem ms; records the planner's "
                          "batch-vs-mode placement argmin in the JSON)")
+    ap.add_argument("--pp", action="store_true",
+                    help="time a >=20-sweep exact-vs-pairwise-perturbation "
+                         "cp_als run (amortized per-sweep seconds, measured "
+                         "exact-sweep fraction, fit gap)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write measurements + SweepPlan.describe() as JSON")
     args = ap.parse_args()
     data = collect(
         full=args.full, smoke=args.smoke, calibrate=args.calibrate,
         autotune=args.autotune, budget_ms=args.budget_ms,
-        tuning_cache=args.tuning_cache, batch=args.batch,
+        tuning_cache=args.tuning_cache, batch=args.batch, pp=args.pp,
     )
     for r in data["results"]:
         print(row(r["name"], r["median_s"], r["derived"]))

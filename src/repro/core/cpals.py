@@ -38,6 +38,9 @@ class CPState:
     weights: Array  # lambda, shape (C,) -- or (B, C) for batched problems
     fit: Array  # scalar in [.., 1] -- or shape (B,) for batched problems
     it: int = 0
+    # Exact (re-materializing) sweeps executed when the run used pairwise
+    # perturbation (Problem.pp_tol > 0); None for classic exact-only runs.
+    pp_exact_sweeps: int | None = None
 
 
 @dataclass

@@ -40,6 +40,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.core.dimtree import contract_from_partial, partial_mttkrp_range
 from repro.core.mttkrp import Method, mttkrp, mttkrp_batched
+from repro.core.tensor_ops import mode_letters
 
 from .collectives import compressed_psum
 
@@ -232,6 +233,76 @@ def dist_mttkrp(
         check_vma=False,
     )
     return fn(x, *factors)
+
+
+def dist_pp_pairs(
+    x: Array,
+    factors: Sequence[Array],
+    mode_axes: ModeAxes,
+    mesh: Mesh,
+    *,
+    batch_axes: Sequence[str] = (),
+) -> dict[tuple[int, int], Array]:
+    """All pairwise-perturbation intermediates of a block-distributed tensor.
+
+    For every mode pair ``n < m`` the intermediate
+    ``M_nm[c, i_n, i_m] = sum X * prod_{k not in {n,m}} U_k[i_k, c]``
+    gets exactly the full MTTKRP's treatment with two kept modes instead of
+    one: local einsum per device block inside ``shard_map``, then one psum
+    over the axes mapped to the contracted modes only -- the kept modes'
+    axes carry the output rows/columns, so no collective ever touches them
+    (the sharding the PP corrections later consume matches the factors they
+    perturb).  A leading batch axis (``x.ndim == len(factors) + 1``) is
+    sharded over ``batch_axes`` and never reduced.  Returns ``{(n, m):
+    M_nm}`` in the rank-major layout of :class:`repro.plan.schedule.PPPair`
+    -- global shapes ``(C, I_n, I_m)`` (batch-led when batched).
+    """
+    batched = x.ndim == len(factors) + 1
+    shape = x.shape[1:] if batched else x.shape
+    _validate(shape, mode_axes, mesh)
+    if batched:
+        _validate_batch(x.shape[0], batch_axes, mode_axes, mesh)
+    order = len(shape)
+    entry = _batch_entry(batch_axes)
+    letters = mode_letters(order)
+    out: dict[tuple[int, int], Array] = {}
+    for n in range(order):
+        for m in range(n + 1, order):
+            others = [k for k in range(order) if k not in (n, m)]
+            spec = (
+                ",".join(
+                    ["..." + letters] + ["..." + letters[k] + "c" for k in others]
+                )
+                + "->..." + letters[n] + letters[m] + "c"
+            )
+            reduce_axes = _reduce_axes(mode_axes, keep_modes=(n, m))
+
+            def local_fn(x_blk, *f_blks, spec=spec, reduce_axes=reduce_axes):
+                # rank-last einsum (the GEMM-friendly orientation), then
+                # rank to the front for the PPPair storage layout
+                p = jnp.moveaxis(jnp.einsum(spec, x_blk, *f_blks), -1, -3)
+                if reduce_axes:
+                    p = jax.lax.psum(p, reduce_axes)
+                return p
+
+            if batched:
+                f_specs = [P(entry, mode_axes.get(k), None) for k in others]
+                out_spec = P(entry, None, mode_axes.get(n), mode_axes.get(m))
+            else:
+                f_specs = [P(mode_axes.get(k), None) for k in others]
+                out_spec = P(None, mode_axes.get(n), mode_axes.get(m))
+            fn = compat.shard_map(
+                local_fn,
+                mesh=mesh,
+                in_specs=(
+                    _x_spec(order, mode_axes, batched=batched, batch_axes=batch_axes),
+                    *f_specs,
+                ),
+                out_specs=out_spec,
+                check_vma=False,
+            )
+            out[(n, m)] = fn(x, *[factors[k] for k in others])
+    return out
 
 
 def _chunk_bounds(extent: int, n_chunks: int) -> list[int]:

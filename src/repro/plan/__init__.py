@@ -36,6 +36,16 @@ The solver API redesigned around four pieces:
   ``SweepPlan.describe()`` and tuned tiles onto ``NodePlan.tiles``),
   falling back to the analytic model everywhere else.
 
+* Pairwise perturbation (Ma & Solomonik, arXiv 2010.12056):
+  ``Problem(pp_tol > 0)`` opts a problem into approximate sweeps that
+  reuse cached pairwise intermediates (:func:`pp_pairs` describes them,
+  :class:`PPState` carries them) plus first-order corrections while every
+  factor's drift stays under tolerance, re-materializing exactly when one
+  crosses it.  :func:`pp_amortized_cost` prices the amortized sweep so
+  ``plan_sweep`` can argmin PP against the exact strategies
+  (``strategy="pp"`` forces it); ``pp_tol=0`` problems never build the
+  cache and stay bitwise identical to classic exact ALS.
+
 Exactly one :func:`als_sweep` engine (a schedule walker) and one
 :func:`cp_als` driver (sync-free: ``sweeps_per_sync`` sweeps per device
 dispatch under ``lax.scan``, bitwise-identical iterates) consume them; the pre-redesign entry points
@@ -55,12 +65,16 @@ from .cost import (
     ALGORITHMS,
     DEFAULT_OVERLAP_CHUNKS,
     EXECUTORS,
+    PP_EXACT_FRACTION,
     ModeCost,
     compressed_allgather_bytes,
     dimtree_mode_cost,
     executor_mode_cost,
     mode_cost,
     node_cost,
+    pp_amortized_cost,
+    pp_build_cost,
+    pp_correction_cost,
     ring_allreduce_bytes,
     validate_executor,
 )
@@ -84,19 +98,22 @@ from .planner import (
 from .problem import Problem
 from .schedule import (
     ContractionNode,
+    PPPair,
     Schedule,
     binary_schedule,
     build_schedule,
     chain_schedule,
     enumerate_schedules,
     flat_schedule,
+    pp_pairs,
 )
-from .sweep import SweepState, als_sweep, cp_als, legacy_sweep
+from .sweep import PPState, SweepState, als_sweep, cp_als, legacy_sweep
 
 __all__ = [
     "ALGORITHMS",
     "DEFAULT_OVERLAP_CHUNKS",
     "EXECUTORS",
+    "PP_EXACT_FRACTION",
     "SCHEDULE_NAMES",
     "STRATEGIES",
     "CompressedShardedExecutor",
@@ -108,6 +125,8 @@ __all__ = [
     "ModePlan",
     "NodePlan",
     "OverlappingExecutor",
+    "PPPair",
+    "PPState",
     "Problem",
     "Schedule",
     "ShardedExecutor",
@@ -131,6 +150,10 @@ __all__ = [
     "mode_cost",
     "node_cost",
     "plan_sweep",
+    "pp_amortized_cost",
+    "pp_build_cost",
+    "pp_correction_cost",
+    "pp_pairs",
     "ring_allreduce_bytes",
     "select_executor",
     "tune",

@@ -41,7 +41,7 @@ from typing import Any, Callable, Mapping, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.tensor_ops import dims_split, random_factors
+from repro.core.tensor_ops import dims_split, random_factors, tensor_norm
 
 from .problem import Problem
 from .schedule import ROOT, ContractionNode
@@ -132,12 +132,16 @@ class Measurements:
     ``tiles`` maps kernel name (``"fused_mttkrp"`` / ``"multi_ttv"``) to its
     tuned tile config (``{"block_i": ..., "block_b": ...}`` subsets);
     ``serial_fractions`` are the overlap constants recalibrated from
-    measured sharded/overlapping node pairs (empty when nothing paired).
+    measured sharded/overlapping node pairs (empty when nothing paired);
+    ``pp`` holds the pairwise-perturbation rows (``"build_s"`` for the
+    cache materialization, ``"correct_sweep_s"`` for one correction-only
+    sweep) when the tuned problem opted in via ``pp_tol``.
     """
 
     node_s: Mapping[str, float] = field(default_factory=dict)
     tiles: Mapping[str, Mapping[str, int]] = field(default_factory=dict)
     serial_fractions: Mapping[str, float] = field(default_factory=dict)
+    pp: Mapping[str, float] = field(default_factory=dict)
 
     def node_time(
         self, node: ContractionNode, algorithm: str, executor: str
@@ -149,6 +153,13 @@ class Measurements:
         """Tuned tile config for one kernel name, ``None`` if untuned."""
         t = self.tiles.get(kernel)
         return {k: int(v) for k, v in t.items()} if t else None
+
+    def pp_second(self, key: str) -> float | None:
+        """Measured seconds of one PP row (``"build_s"`` /
+        ``"correct_sweep_s"``), ``None`` when the entry was tuned without
+        pairwise perturbation."""
+        v = self.pp.get(key)
+        return float(v) if v is not None else None
 
 
 class TuningCache:
@@ -240,6 +251,7 @@ def lookup_measurements(
             str(k): float(v)
             for k, v in entry.get("serial_fractions", {}).items()
         },
+        pp={str(k): float(v) for k, v in entry.get("pp", {}).items()},
     )
 
 
@@ -552,6 +564,51 @@ def node_key_from(key: str) -> str:
     return f"x|x|{rest}"
 
 
+def _tune_pp(
+    problem: Problem,
+    x: Array,
+    factors: Sequence[Array],
+    *,
+    mesh,
+    mode_axes,
+    reps: int,
+    budget: _Budget,
+) -> dict[str, float]:
+    """Measure the two pairwise-perturbation phases for a ``pp_tol > 0``
+    problem: ``build_s`` (cache materialization -- pairwise intermediates +
+    bases, i.e. what every exact sweep additionally pays) and
+    ``correct_sweep_s`` (one correction-only approximate sweep -- what
+    replaces the exact sweep while drifts stay under tolerance).  These are
+    the measured inputs of :func:`repro.plan.cost.pp_amortized_cost`."""
+    from . import sweep as sweeplib  # lazy: sweep imports planner/executor
+    from .executor import make_executor
+    from .planner import plan_sweep
+
+    kind = "sharded" if problem.sharded else "local"
+    ex = make_executor(kind, mesh, mode_axes)
+    xs, fs = ex.prepare(problem, x, list(factors))
+    build = jax.jit(lambda t, f: sweeplib._pp_materialize(problem, ex, t, f, 0))
+    rows: dict[str, float] = {}
+    if budget.exhausted():
+        return rows
+    rows["build_s"] = _time(lambda: build(xs, fs), reps)
+    if budget.exhausted():
+        return rows
+    plan = plan_sweep(problem, executor=kind, schedule="flat")
+    state = sweeplib.SweepState(
+        x=xs,
+        factors=list(fs),
+        weights=jnp.ones((problem.rank,), xs.dtype),
+        norm_x=tensor_norm(xs).astype(xs.dtype),
+        it=jnp.asarray(0),
+        grams=sweeplib.grams(fs),
+        pp=build(xs, fs),
+    )
+    corr = jax.jit(lambda st: sweeplib._pp_sweep(problem, plan, st))
+    rows["correct_sweep_s"] = _time(lambda: corr(state), reps)
+    return rows
+
+
 def tune(
     x: Array,
     rank: int,
@@ -563,6 +620,7 @@ def tune(
     budget_ms: float | None = 2000.0,
     reps: int = 3,
     seed: int = 0,
+    pp_tol: float = 0.0,
 ) -> dict:
     """Measure tiles + candidate plans for ``x``'s problem; persist winners.
 
@@ -578,11 +636,17 @@ def tune(
     sharded/overlapping pairs, and stores the entry in ``cache`` (the
     process default when ``None``) under :func:`problem_key`.  Pass
     ``mesh`` + ``mode_axes`` to tune a sharded problem; ``factors`` default
-    to random ones (timing depends on shapes, not values).  Returns the
-    stored entry dict.
+    to random ones (timing depends on shapes, not values).  ``pp_tol > 0``
+    tunes the pairwise-perturbation variant of the problem (its own cache
+    key, via the signature's ``|pp`` field) and additionally measures the
+    PP cache build and one correction-only sweep into the entry's ``pp``
+    rows, which ``plan_sweep`` then prefers over the analytic PP estimates.
+    Returns the stored entry dict.
     """
     cache = cache or default_tuning_cache()
-    problem = Problem.from_tensor(x, rank, mode_axes=mode_axes, mesh=mesh)
+    problem = Problem.from_tensor(
+        x, rank, mode_axes=mode_axes, mesh=mesh, pp_tol=pp_tol
+    )
     if factors is None:
         factors = random_factors(jax.random.PRNGKey(seed), x.shape, rank, x.dtype)
     budget = _Budget(budget_ms)
@@ -600,6 +664,14 @@ def tune(
         "fused_mttkrp": fused,
         "multi_ttv": _tune_ttv_tiles(x, factors, reps=reps, budget=budget),
     }
+    pp_rows = (
+        _tune_pp(
+            problem, x, factors, mesh=mesh, mode_axes=mode_axes,
+            reps=reps, budget=budget,
+        )
+        if problem.pp_tol > 0.0
+        else {}
+    )
     entry = {
         "backend": backend_name(),
         "n_devices": (
@@ -611,6 +683,7 @@ def tune(
         "tiles": tiles,
         "nodes": rows,
         "serial_fractions": _recalibrate_serial_fractions(problem, rows),
+        "pp": pp_rows,
     }
     cache.put(problem_key(problem), entry)
     return entry

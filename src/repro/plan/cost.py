@@ -45,7 +45,12 @@ from repro.core.mttkrp import mttkrp_flops
 from repro.core.tensor_ops import dims_split
 
 from .problem import Problem
-from .schedule import ContractionNode, binary_schedule, ring_allreduce_bytes
+from .schedule import (
+    ContractionNode,
+    binary_schedule,
+    pp_pairs,
+    ring_allreduce_bytes,
+)
 
 ALGORITHMS = (
     "1step",
@@ -72,6 +77,13 @@ DEFAULT_OVERLAP_CHUNKS = 4
 # 1/4 for fp32, 1/2 for bf16, 1/8 for f64).
 _INT8_ITEMSIZE = 1.0
 _SCALE_BYTES = 4.0
+
+# Assumed long-run fraction of pairwise-perturbation sweeps that
+# re-materialize the cache (factor drift crossing ``pp_tol``).  Late ALS
+# sweeps drift little, so re-materialization is rare once past the initial
+# transient; 1-in-8 is a conservative planning assumption -- the bench's
+# measured exact fraction (``bench_mttkrp --pp``) is the ground truth.
+PP_EXACT_FRACTION = 0.125
 
 
 def validate_executor(problem: Problem, executor: str) -> None:
@@ -482,6 +494,107 @@ def node_cost(
         participants=node.psum_participants,
         serial_fractions=serial_fractions,
     )
+
+
+def pp_build_cost(problem: Problem) -> ModeCost:
+    """Cost of materializing the pairwise-perturbation cache once.
+
+    One pass over the (local) tensor per pair intermediate ``M_{n,m}`` --
+    the naive per-pair einsum the executors run, *not* an amortizing tree --
+    each completed by its ring all-reduce over the axes mapped to the
+    contracted modes (:func:`repro.plan.schedule.pp_pairs` stamps the
+    volume), plus the N tiny base contractions ``M_{n,m} x V_m``.  Paid on
+    every exact (re-materialization) sweep, so the planner adds it to the
+    exact-sweep term of the amortized PP price.
+    """
+    c = problem.rank
+    s = problem.itemsize
+    lb = problem.local_batch
+    total = math.prod(problem.local_shape) * lb
+    gemm = krp = byts = coll = 0.0
+    for pair in pp_pairs(problem):
+        t_elems = math.prod(pair.local_shape) * lb
+        gemm += 2.0 * total * c
+        byts += total * s + t_elems * s
+        coll += pair.psum_bytes
+    # base terms: one correction-shaped GEMM per mode off its first pair
+    for n in range(problem.ndim):
+        m = 1 if n == 0 else 0
+        ln = problem.local_shape[n]
+        lm = problem.local_shape[m]
+        gemm += 2.0 * ln * lm * c * lb
+        byts += (ln * lm * c + lm * c + ln * c) * s * lb
+    return ModeCost(
+        gemm_flops=gemm, krp_flops=krp, second_step_flops=0.0,
+        bytes=byts, collective_bytes=coll,
+    )
+
+
+def pp_correction_cost(problem: Problem) -> ModeCost:
+    """Cost of ONE approximate (correction-only) PP sweep, all modes.
+
+    Each mode's MTTKRP is its cached base plus ``N - 1`` small GEMMs --
+    ``(C, I_n, I_m) x (I_m, C) -> (I_n, C)`` against each pairwise
+    intermediate -- so an approximate sweep never touches the raw tensor:
+    the per-sweep flops drop from ``O(N |X| C)`` to
+    ``O(sum I_n I_m C)``, the whole point of pairwise perturbation.  On
+    sharded problems the contraction over a mapped mode ``m`` ends in a
+    ring all-reduce of the ``(I_n, C)`` block over that mode's axis.
+    """
+    c = problem.rank
+    s = problem.itemsize
+    lb = problem.local_batch
+    gemm = byts = coll = 0.0
+    for n in range(problem.ndim):
+        ln = problem.local_shape[n]
+        out_bytes = ln * c * s * lb
+        for m in range(problem.ndim):
+            if m == n:
+                continue
+            lm = problem.local_shape[m]
+            gemm += 2.0 * ln * lm * c * lb
+            byts += (ln * lm * c + lm * c) * s * lb + out_bytes
+            coll += ring_allreduce_bytes(out_bytes, problem.mode_shards(m))
+    return ModeCost(
+        gemm_flops=gemm, krp_flops=0.0, second_step_flops=0.0,
+        bytes=byts, collective_bytes=coll,
+    )
+
+
+def pp_amortized_cost(
+    problem: Problem,
+    exact_sweep_s: float,
+    *,
+    exact_fraction: float = PP_EXACT_FRACTION,
+    build_s: float | None = None,
+    correction_s: float | None = None,
+) -> dict:
+    """Amortized per-sweep price of the PP strategy, as a describe() row.
+
+    ``f * (exact_sweep_s + build_s) + (1 - f) * correction_s`` with ``f``
+    the assumed exact-sweep fraction: a re-materialization sweep pays the
+    full exact sweep plus the cache build, every other sweep only the
+    first-order corrections.  This slightly over-prices PP -- the engine
+    only pays the build on exact sweeps whose step settled under the
+    tolerance, not on every exact sweep -- so the argmin errs toward the
+    exact strategy.  ``build_s`` / ``correction_s`` default to the
+    analytic predictions; pass hardware measurements (from
+    :func:`repro.plan.autotune.tune`) to price on the measured basis.
+    """
+    if build_s is None:
+        build_s = pp_build_cost(problem).predicted_s
+    if correction_s is None:
+        correction_s = pp_correction_cost(problem).predicted_s
+    f = float(exact_fraction)
+    amortized = f * (exact_sweep_s + build_s) + (1.0 - f) * correction_s
+    return {
+        "tol": problem.pp_tol,
+        "exact_fraction": f,
+        "exact_sweep_s": exact_sweep_s,
+        "build_s": build_s,
+        "correction_sweep_s": correction_s,
+        "amortized_sweep_s": amortized,
+    }
 
 
 def dimtree_mode_cost(problem: Problem, n: int, split: int) -> ModeCost:

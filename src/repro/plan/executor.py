@@ -32,6 +32,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.dimtree import contract_from_partial, partial_mttkrp_range
 from repro.core.mttkrp import mttkrp, mttkrp_batched
+from repro.core.tensor_ops import mode_letters
 from repro.dist.dist_mttkrp import (
     dist_contract_partial,
     dist_contract_partial_compressed,
@@ -40,6 +41,7 @@ from repro.dist.dist_mttkrp import (
     dist_mttkrp,
     dist_mttkrp_compressed,
     dist_mttkrp_overlapped,
+    dist_pp_pairs,
     shard_problem,
 )
 
@@ -130,6 +132,35 @@ class LocalExecutor:
         sibs = {m: factors[m] for m in node.contracted}
         return contract_from_partial(src, sibs, node.lo, node.hi, node.parent_lo)
 
+    def pp_pairs(
+        self, problem, x: Array, factors: Sequence[Array]
+    ) -> dict[tuple[int, int], Array]:
+        """All pairwise-perturbation intermediates at the current factors:
+        ``{(n, m): M_nm}`` for every ``n < m`` with
+        ``M_nm[c, i_n, i_m] = sum X * prod_{k not in {n,m}} U_k[i_k, c]``
+        in the rank-major layout of :class:`repro.plan.schedule.PPPair`
+        -- one einsum per pair; a leading batch axis on ``x`` and the
+        factors broadcasts through the ``...`` prefix unchanged."""
+        order = problem.ndim
+        letters = mode_letters(order)
+        out: dict[tuple[int, int], Array] = {}
+        for n in range(order):
+            for m in range(n + 1, order):
+                others = [k for k in range(order) if k not in (n, m)]
+                spec = (
+                    ",".join(
+                        ["..." + letters] + ["..." + letters[k] + "c" for k in others]
+                    )
+                    + "->..." + letters[n] + letters[m] + "c"
+                )
+                # contract rank-last (the GEMM-friendly orientation), then
+                # move rank to the front for the PPPair storage layout --
+                # asking einsum for the rank-major output directly makes
+                # XLA:CPU emit a far slower fused transpose-GEMM
+                p = jnp.einsum(spec, x, *[factors[k] for k in others])
+                out[(n, m)] = jnp.moveaxis(p, -1, -3)
+        return out
+
 
 class ShardedExecutor:
     """Block-distributed execution over a device mesh.
@@ -182,6 +213,21 @@ class ShardedExecutor:
         return dist_contract_partial(
             src, list(factors), node.lo, node.hi, node.parent_lo, node.parent_hi,
             self.mode_axes, self.mesh, n_chunks=self._n_chunks,
+            batch_axes=self.batch_axes,
+        )
+
+    def pp_pairs(
+        self, problem, x: Array, factors: Sequence[Array]
+    ) -> dict[tuple[int, int], Array]:
+        """Pairwise-perturbation intermediates on the mesh: per pair one
+        local einsum inside ``shard_map`` + the minimal psum over the axes
+        mapped to the contracted modes (both kept modes ride their own
+        axes, exactly like the factor rows they later update).  The PP
+        cache build stays *exact* on every sharded executor -- overlapping
+        changes only psum scheduling and compression only applies to the
+        per-sweep factor reductions, so both inherit this verbatim."""
+        return dist_pp_pairs(
+            x, list(factors), self.mode_axes, self.mesh,
             batch_axes=self.batch_axes,
         )
 

@@ -35,9 +35,11 @@ from typing import Mapping
 from .cost import (
     DEFAULT_OVERLAP_CHUNKS,
     EXECUTORS,
+    PP_EXACT_FRACTION,
     ModeCost,
     executor_mode_cost,
     node_cost,
+    pp_amortized_cost,
     validate_executor,
 )
 from .problem import Problem
@@ -53,6 +55,7 @@ from .schedule import (
 STRATEGIES = (
     "auto",
     "autotune",
+    "pp",
     "1step",
     "2step",
     "2step-left",
@@ -138,6 +141,14 @@ class SweepPlan:
     each candidate's predicted cost and ``problem`` is the winning
     placement -- build the executor from ``plan.problem``'s
     ``mode_axes``/``batch_axes``, not from the pre-planning problem.
+
+    ``pp`` flags the pairwise-perturbation sweep mode: the engine still
+    carries this plan's exact schedule (re-materialization sweeps run it
+    verbatim), but while factor drift stays under ``problem.pp_tol`` each
+    sweep approximates every MTTKRP from the cached pairwise intermediates
+    plus first-order corrections.  ``pp_info`` is the pricing row behind
+    the decision (see :func:`repro.plan.cost.pp_amortized_cost`), ``None``
+    when the problem never opted in (``pp_tol == 0``).
     """
 
     problem: Problem
@@ -150,6 +161,8 @@ class SweepPlan:
     nodes: tuple[NodePlan, ...] = ()
     serial_fractions: Mapping[str, float] | None = None
     placements: tuple[Mapping, ...] = ()
+    pp: bool = False
+    pp_info: Mapping | None = None
 
     @property
     def kind(self) -> str:
@@ -191,7 +204,10 @@ class SweepPlan:
         """Predicted flops / HBM bytes / collective bytes per mode and per
         schedule node, plus totals -- and, for batched sharded problems, the
         placement candidates compared (each with its predicted seconds and
-        wire bytes, the selected one flagged)."""
+        wire bytes, the selected one flagged).  The ``pp`` row prices the
+        pairwise-perturbation strategy against the exact sweep (amortized
+        per-sweep seconds; ``{"enabled": False}`` when the problem never
+        opted in via ``pp_tol``)."""
         return {
             "shape": list(self.problem.shape),
             "rank": self.problem.rank,
@@ -212,6 +228,7 @@ class SweepPlan:
             "modes": [m.as_dict() for m in self.modes],
             "nodes": [n.as_dict() for n in self.nodes],
             "serial_fractions": dict(self.serial_fractions or {}),
+            "pp": {"enabled": self.pp, **dict(self.pp_info or {})},
             "totals": self.total_cost(),
         }
 
@@ -519,6 +536,14 @@ def plan_sweep(
     proves, rather than assumes, that batch-parallel wins for fleets of
     small tensors.
 
+    Problems with ``pp_tol > 0`` additionally price the pairwise-
+    perturbation sweep mode (Ma & Solomonik): ``'auto'``/``'autotune'``
+    enable it (``SweepPlan.pp``) when the amortized per-sweep seconds --
+    assumed exact-sweep fraction x (exact sweep + cache build) plus the
+    correction-only sweeps -- beat the exact sweep, and ``strategy='pp'``
+    forces it.  The plan's schedule/executor stay the exact winner's: PP
+    re-materialization sweeps run them verbatim.
+
     ``'autotune'`` closes the predict -> measure loop: hardware timings
     recorded by :func:`repro.plan.autotune.tune` (read from
     ``tuning_cache``, defaulting to the process cache -- planning itself
@@ -531,6 +556,15 @@ def plan_sweep(
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r} (choose from {STRATEGIES})")
+    if strategy == "pp" and problem.pp_tol <= 0.0:
+        raise ValueError(
+            "strategy='pp' needs Problem(pp_tol > 0): the drift threshold is "
+            "part of the problem (and its signature), not a planner flag"
+        )
+    # "pp" forces the approximate sweep mode but still needs a full exact
+    # plan (re-materialization sweeps run it verbatim); its schedule /
+    # algorithm / executor choices follow the "auto" cost argmin.
+    node_strategy = "auto" if strategy == "pp" else strategy
     if split is not None:
         if strategy != "dimtree" and schedule != "binary":
             raise ValueError(
@@ -588,12 +622,12 @@ def plan_sweep(
         else:
             candidates = ("local",)
 
-        schedules = _resolve_schedules(prob, strategy, split, schedule)
+        schedules = _resolve_schedules(prob, node_strategy, split, schedule)
         results = [
             (sched,)
             + _best_executor(
-                prob, sched, strategy, candidates, n_chunks, serial_fractions,
-                measured,
+                prob, sched, node_strategy, candidates, n_chunks,
+                serial_fractions, measured,
             )
             for sched in schedules
         ]  # rows: (sched, executor, node_plans, analytic_total, measured_total)
@@ -620,6 +654,33 @@ def plan_sweep(
         if row[4] < winner[4]:
             winner = row
     prob, sched, chosen, node_plans = winner[0], winner[1], winner[2], winner[3]
+
+    # pairwise perturbation: price the approximate sweep against the chosen
+    # exact plan whenever the problem opted in (pp_tol > 0); strategy="pp"
+    # forces it, "auto"/"autotune" argmin the amortized per-sweep seconds.
+    # The comparison runs on the measured basis only when BOTH sides are
+    # measured (the winner's sweep total and the tuned PP rows) -- measured
+    # and analytic seconds never compete inside one comparison.
+    pp_enabled = False
+    pp_info = None
+    if prob.pp_tol > 0.0:
+        m_build = measured.pp_second("build_s") if measured is not None else None
+        m_corr = (
+            measured.pp_second("correct_sweep_s") if measured is not None else None
+        )
+        if winner[5] is not None and m_build is not None and m_corr is not None:
+            pp_info = pp_amortized_cost(
+                prob, winner[5], build_s=m_build, correction_s=m_corr
+            )
+            pp_info["basis"] = "measured"
+        else:
+            pp_info = pp_amortized_cost(prob, winner[4])
+            pp_info["basis"] = "analytic"
+        if strategy == "pp":
+            pp_enabled = True
+        elif strategy in ("auto", "autotune"):
+            pp_enabled = pp_info["amortized_sweep_s"] < pp_info["exact_sweep_s"]
+
     placement_rows = tuple(
         {
             "placement": _placement_label(r[0]),
@@ -655,4 +716,6 @@ def plan_sweep(
         nodes=node_plans,
         serial_fractions=dict(serial_fractions) if serial_fractions else None,
         placements=placement_rows,
+        pp=pp_enabled,
+        pp_info=pp_info,
     )

@@ -33,6 +33,13 @@ class Problem:
     third mesh-axis role next to mode axes: batch entries never contract
     against each other, so a pure batch-parallel placement moves zero
     reduce traffic while a mode-parallel placement pays psum volume x B.
+
+    ``pp_tol`` opts into pairwise-perturbation sweeps (Ma & Solomonik,
+    arXiv 2010.12056): while every factor's relative drift since the last
+    exact sweep stays below it, MTTKRPs are approximated from cached
+    pairwise intermediates plus first-order corrections.  The default 0.0
+    disables the approximation entirely -- the sweep engine then runs the
+    classic exact path with *bitwise identical* iterates by construction.
     """
 
     shape: tuple[int, ...]
@@ -42,6 +49,7 @@ class Problem:
     axis_sizes: Mapping[str, int] = field(default_factory=dict)
     batch: int = 1
     batch_axes: tuple[str, ...] = ()
+    pp_tol: float = 0.0
 
     def __post_init__(self):
         object.__setattr__(self, "shape", tuple(int(d) for d in self.shape))
@@ -56,6 +64,7 @@ class Problem:
         object.__setattr__(
             self, "batch_axes", tuple(str(a) for a in self.batch_axes)
         )
+        object.__setattr__(self, "pp_tol", float(self.pp_tol))
         self._validate()
 
     def __hash__(self):
@@ -71,6 +80,7 @@ class Problem:
                 tuple(sorted(self.axis_sizes.items())),
                 self.batch,
                 self.batch_axes,
+                self.pp_tol,
             )
         )
 
@@ -79,6 +89,8 @@ class Problem:
             raise ValueError(f"rank must be >= 1, got {self.rank}")
         if self.batch < 1:
             raise ValueError(f"batch must be >= 1, got {self.batch}")
+        if not self.pp_tol >= 0.0:  # also rejects NaN
+            raise ValueError(f"pp_tol must be >= 0, got {self.pp_tol}")
         self.itemsize  # fail at construction on an unresolvable dtype
         mode_axis_names = set(self.mode_axes.values())
         for axis in self.batch_axes:
@@ -122,7 +134,8 @@ class Problem:
 
     @classmethod
     def from_tensor(
-        cls, x, rank: int, mode_axes=None, mesh=None, *, batch=1, batch_axes=()
+        cls, x, rank: int, mode_axes=None, mesh=None, *, batch=1, batch_axes=(),
+        pp_tol: float = 0.0,
     ) -> "Problem":
         """Build a Problem from an array (or tracer / ShapeDtypeStruct).
 
@@ -131,6 +144,8 @@ class Problem:
         executor).  With ``batch=B > 1`` the array's leading axis is the
         batch (``x.shape[0] == B``) and the tensor shape is ``x.shape[1:]``;
         ``batch_axes`` optionally shards that axis over mesh axes.
+        ``pp_tol > 0`` opts into pairwise-perturbation sweeps (see the class
+        docstring).
         """
         batch = int(batch)
         shape = tuple(x.shape)
@@ -148,6 +163,7 @@ class Problem:
             axis_sizes=dict(mesh.shape) if mesh is not None else {},
             batch=batch,
             batch_axes=tuple(batch_axes),
+            pp_tol=pp_tol,
         )
 
     # ------------------------------------------------------------- derived
@@ -202,8 +218,10 @@ class Problem:
         """THE canonical signature string of this problem.
 
         ``backend|shape|rank|dtype|devices`` (plus ``|b{B}`` for batched
-        problems; B=1 keeps the historical 5-field layout) -- the one key
-        construction shared by the tuning cache
+        problems and ``|pp{tol}`` when pairwise perturbation is enabled;
+        defaults keep the historical 5-field layout, so old on-disk keys
+        keep resolving) -- the one key construction shared by the tuning
+        cache
         (:func:`repro.plan.autotune.problem_key`, which fills in the live
         jax backend) and the serving engine's batch buckets
         (:class:`repro.serve.cp_service.CPService`): two problems with equal
@@ -222,6 +240,8 @@ class Problem:
         key = f"{backend}|{shape}|r{self.rank}|{self.dtype_str}|d{int(n_devices)}"
         if self.batch > 1:
             key += f"|b{self.batch}"
+        if self.pp_tol > 0.0:
+            key += f"|pp{self.pp_tol:g}"
         return key
 
     def mode_shards(self, n: int) -> int:

@@ -37,7 +37,7 @@ from repro.core.tensor_ops import random_factors, tensor_norm
 from .executor import Executor, LocalExecutor, ShardedExecutor
 from .planner import SweepPlan, plan_sweep
 from .problem import Problem
-from .schedule import ROOT
+from .schedule import ROOT, pp_pairs as pp_pair_meta
 
 Array = jax.Array
 
@@ -58,6 +58,11 @@ class SweepState:
     ``U_k^T U_k`` across sweeps: each mode's update refreshes its own Gram,
     so the next sweep starts from exact values without recomputing all N --
     ``None`` (the single-shot default) recomputes them from the factors.
+
+    ``pp`` is the pairwise-perturbation cache (:class:`PPState`) when the
+    plan enabled PP sweeps, ``None`` otherwise -- and ``None`` keeps the
+    sweep graph literally the classic exact one (the ``pp_tol=0`` bitwise
+    guarantee is *by construction*, not by tolerance).
     """
 
     x: Array
@@ -68,16 +73,241 @@ class SweepState:
     fit: Array | float = 0.0
     carry: Any = None
     grams: list[Array] | None = None
+    pp: Any = None
 
 
 jax.tree_util.register_pytree_node(
     SweepState,
     lambda s: (
-        (s.x, s.factors, s.weights, s.norm_x, s.it, s.fit, s.carry, s.grams),
+        (s.x, s.factors, s.weights, s.norm_x, s.it, s.fit, s.carry, s.grams, s.pp),
         None,
     ),
     lambda _, c: SweepState(*c),
 )
+
+
+@dataclass
+class PPState:
+    """Pairwise-perturbation cache (Ma & Solomonik, arXiv 2010.12056).
+
+    Captured at the end of every *exact* sweep and carried across the
+    approximate ones: ``ref`` are the factor iterates the cache was built
+    from, ``pairs`` maps ``(n, m)`` (``n < m``) to the pairwise intermediate
+    ``M_{n,m}[i_n, i_m, c] = sum X * prod_{k not in {n,m}} V_k[i_k, c]``,
+    and ``base`` is each mode's exact MTTKRP at the reference point
+    (``pairs`` contracted with one more reference factor).  ``drift`` is the
+    per-factor relative drift ``||U_n - V_n||_F / ||V_n||_F`` since the
+    capture (float32, max over the batch for batched problems; +inf before
+    the first capture so the run always opens with an exact sweep), and
+    ``n_exact`` counts exact (re-materializing) sweeps -- the measured
+    exact-sweep fraction the bench reports against the planner's assumption.
+    """
+
+    ref: list[Array]
+    pairs: dict[tuple[int, int], Array]
+    base: list[Array]
+    drift: Array
+    n_exact: Array
+
+
+jax.tree_util.register_pytree_node(
+    PPState,
+    lambda s: ((s.ref, s.pairs, s.base, s.drift, s.n_exact), None),
+    lambda _, c: PPState(*c),
+)
+
+
+def _pp_drift(factors: Sequence[Array], ref: Sequence[Array]) -> Array:
+    """Per-factor relative drift ``||U_n - V_n||_F / ||V_n||_F`` as an
+    ``(ndim,)`` float32 vector (max over the batch when batched) -- the
+    quantity the PP gate compares against ``Problem.pp_tol``."""
+    ds = []
+    for u, v in zip(factors, ref):
+        du = (u - v).astype(jnp.float32)
+        num = jnp.sqrt(jnp.sum(du * du, axis=(-2, -1)))
+        den = jnp.sqrt(jnp.sum(v.astype(jnp.float32) ** 2, axis=(-2, -1)))
+        ds.append(jnp.max(num / jnp.maximum(den, 1e-30)))
+    return jnp.stack(ds)
+
+
+def _pp_contract_second(pair: Array, v: Array) -> Array:
+    """``M_{n,m} . v_m -> (I_n, C)``: contract the rank-major pair
+    ``(..., C, I_n, I_m)`` with a factor ``(..., I_m, C)`` over the m
+    index.  The stored layout makes this one stride-1 batched GEMM over
+    the rank axis -- an index-major pair would force a transpose of the
+    (large) pair per correction, which on CPU costs more than the GEMM."""
+    vt = jnp.swapaxes(v, -1, -2)  # (..., C, I_m)
+    out = jnp.matmul(pair, vt[..., :, :, None])[..., 0]  # (..., C, I_n)
+    return jnp.swapaxes(out, -1, -2)
+
+
+def _pp_contract_first(pair: Array, v: Array) -> Array:
+    """``M_{m,n} . v_m -> (I_n, C)`` when the partner is the pair's FIRST
+    index (``m < n``): same stride-1 batched GEMM, contracting the
+    ``(..., C, I_m, I_n)`` pair with ``(..., I_m, C)`` over ``I_m``."""
+    vt = jnp.swapaxes(v, -1, -2)  # (..., C, I_m)
+    out = jnp.matmul(vt[..., :, None, :], pair)[..., 0, :]  # (..., C, I_n)
+    return jnp.swapaxes(out, -1, -2)
+
+
+def _pp_base(
+    pairs: dict[tuple[int, int], Array], ref: Sequence[Array], n: int
+) -> Array:
+    """Mode-``n`` exact MTTKRP at the reference point, recovered from one
+    pairwise intermediate: contract ``M_{n,m}`` with reference factor
+    ``V_m`` (any partner ``m`` works; the smallest index is used)."""
+    m = 1 if n == 0 else 0
+    if n < m:
+        return _pp_contract_second(pairs[(n, m)], ref[m])
+    return _pp_contract_first(pairs[(m, n)], ref[m])
+
+
+def _pp_materialize(problem: Problem, executor, x, factors, n_exact) -> "PPState":
+    """Build the PP cache at the current iterates: pairwise intermediates
+    via ``executor.pp_pairs`` (local einsum, or shard_map + per-pair psum),
+    per-mode bases, zero drift, ``n_exact`` exact-sweep count."""
+    pairs = executor.pp_pairs(problem, x, factors)
+    base = [_pp_base(pairs, factors, n) for n in range(problem.ndim)]
+    return PPState(
+        ref=list(factors),
+        pairs=pairs,
+        base=base,
+        drift=jnp.zeros((problem.ndim,), jnp.float32),
+        n_exact=jnp.asarray(n_exact, jnp.int32),
+    )
+
+
+def _pp_init(problem: Problem, x, factors) -> "PPState":
+    """Zero-filled PP cache with +inf drift: structurally identical to a
+    materialized one (so ``lax.cond``/``scan`` carry one pytree shape) but
+    guaranteed to route the first sweep through the exact branch."""
+    lead = (problem.batch,) if problem.batched else ()
+    pairs = {
+        (p.n, p.m): jnp.zeros(lead + p.shape, x.dtype)
+        for p in pp_pair_meta(problem)
+    }
+    return PPState(
+        ref=[jnp.zeros_like(u) for u in factors],
+        pairs=pairs,
+        base=[jnp.zeros_like(u) for u in factors],
+        drift=jnp.full((problem.ndim,), jnp.inf, jnp.float32),
+        n_exact=jnp.asarray(0, jnp.int32),
+    )
+
+
+def _update_factor(
+    plan: SweepPlan, factors: list[Array], gs: list[Array], weights: Array,
+    n: int, m_n: Array, it: Array,
+) -> Array:
+    """THE per-mode factor update (paper Sec. 2.2), shared by the exact and
+    the pairwise-perturbation sweeps: solve ``U H = M`` via pinv on the
+    C x C Gram-Hadamard, optionally column-normalize into the lambdas, and
+    refresh exactly the changed factor's Gram.  Mutates ``factors``/``gs``
+    in place; returns the (possibly updated) weights."""
+    h = hadamard_except(gs, n)
+    u = m_n @ jnp.linalg.pinv(h)
+    if plan.normalize:
+        u, norms = normalize_columns(u, it)
+        weights = norms
+    factors[n] = u
+    gs[n] = jnp.swapaxes(u, -1, -2) @ u
+    return weights
+
+
+def _exact_sweep(
+    problem: Problem, plan: SweepPlan, executor: Executor, state: SweepState
+) -> SweepState:
+    """The exact schedule-walking sweep (see :func:`als_sweep`); passes
+    ``state.pp`` through untouched."""
+    x = state.x
+    factors = list(state.factors)
+    weights = state.weights
+    it = state.it
+    carry = state.carry
+    use_carry = hasattr(executor, "contract_carry")
+    gs = list(state.grams) if state.grams is not None else grams(factors)
+    m_last = None
+
+    sched = plan.resolved_schedule
+    cache: dict[int, Array] = {ROOT: x}
+    for node in sched.walk():
+        src = cache[node.parent]
+        if plan.nodes:
+            np_ = plan.node_plan(node.id)
+            alg, tiles = np_.algorithm, np_.tiles
+        else:
+            alg, tiles = "auto", None
+        if use_carry:
+            out, carry = executor.contract_carry(
+                node, src, factors, alg, carry, tiles=tiles
+            )
+        else:
+            out = executor.contract(node, src, factors, alg, tiles=tiles)
+        if node.is_leaf:
+            m_last = out
+            weights = _update_factor(plan, factors, gs, weights, node.mode, m_last, it)
+        else:
+            cache[node.id] = out
+
+    # Fit from the last MTTKRP (standard trick; avoids forming the model).
+    fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], state.norm_x)
+    return SweepState(
+        x=x, factors=factors, weights=weights, norm_x=state.norm_x, it=it, fit=fit,
+        carry=carry, grams=gs, pp=state.pp,
+    )
+
+
+def _pp_sweep(
+    problem: Problem, plan: SweepPlan, state: SweepState
+) -> SweepState:
+    """One approximate sweep from the PP cache: per mode ``n`` the MTTKRP is
+    the cached base plus one small GEMM per perturbed factor,
+    ``M_n ~= base_n + sum_{m != n} M_{n,m} . (U_m - V_m)``
+    (first order in the drifts -- the neglected terms are products of two or
+    more deltas, hence the O(drift^2) error the property suite checks).  The
+    factor update itself is the shared exact algebra; the tensor is never
+    touched, which is the whole point.  Returns the state with refreshed
+    drifts; the cache (``ref``/``pairs``/``base``/``n_exact``) rides along
+    unchanged.
+    """
+    pp = state.pp
+    factors = list(state.factors)
+    weights = state.weights
+    it = state.it
+    gs = list(state.grams) if state.grams is not None else grams(factors)
+    m_last = None
+    for n in range(problem.ndim):
+        m_n = pp.base[n]
+        for m in range(problem.ndim):
+            if m == n:
+                continue
+            du = factors[m] - pp.ref[m]
+            if n < m:
+                m_n = m_n + _pp_contract_second(pp.pairs[(n, m)], du)
+            else:
+                m_n = m_n + _pp_contract_first(pp.pairs[(m, n)], du)
+        m_last = m_n
+        weights = _update_factor(plan, factors, gs, weights, n, m_n, it)
+    fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], state.norm_x)
+    new_pp = PPState(
+        ref=pp.ref, pairs=pp.pairs, base=pp.base,
+        drift=_pp_drift(factors, pp.ref), n_exact=pp.n_exact,
+    )
+    return SweepState(
+        x=state.x, factors=factors, weights=weights, norm_x=state.norm_x,
+        it=it, fit=fit, carry=state.carry, grams=gs, pp=new_pp,
+    )
+
+
+def _with_payload(state: SweepState, payload) -> SweepState:
+    """Rebuild a :class:`SweepState` from the sweep-mutable payload tuple
+    (the ``lax.cond`` operands of the PP gate), keeping the tensor and the
+    other sweep-invariant fields from ``state``."""
+    factors, weights, fit, carry, gs, pp = payload
+    return SweepState(
+        x=state.x, factors=list(factors), weights=weights, norm_x=state.norm_x,
+        it=state.it, fit=fit, carry=carry, grams=gs, pp=pp,
+    )
 
 
 def als_sweep(
@@ -105,54 +335,59 @@ def als_sweep(
     sweeps (``cp_als`` does): each update refreshes exactly the changed
     factor's Gram, so carried Grams are identical to recomputing all N from
     the factors -- which is what happens when ``state.grams is None``.
+
+    With a PP cache on ``state.pp`` the sweep becomes a traced two-way
+    gate (``lax.cond``): while every factor's drift since the last exact
+    sweep stays below ``problem.pp_tol``, the approximate
+    :func:`_pp_sweep` runs (no tensor contraction at all); once any drift
+    crosses the threshold, the exact walk above runs verbatim and the
+    cache is re-materialized at the fresh iterates.  ``state.pp is None``
+    (every ``pp_tol=0`` plan) skips the gate entirely -- the graph is the
+    classic exact sweep, bitwise.
     """
-    x = state.x
-    factors = list(state.factors)
-    weights = state.weights
-    it = state.it
-    carry = state.carry
-    use_carry = hasattr(executor, "contract_carry")
-    gs = list(state.grams) if state.grams is not None else grams(factors)
-    m_last = None
+    if state.pp is None:
+        return _exact_sweep(problem, plan, executor, state)
 
-    def update(n: int, m: Array, weights: Array) -> Array:
-        h = hadamard_except(gs, n)
-        # Solve U H = M  via pinv on the C x C Gram-Hadamard (paper Sec. 2.2).
-        u = m @ jnp.linalg.pinv(h)
-        if plan.normalize:
-            u, norms = normalize_columns(u, it)
-            weights = norms
-        factors[n] = u
-        gs[n] = jnp.swapaxes(u, -1, -2) @ u
-        return weights
+    # the cond's operands/outputs are only what a sweep can change -- the
+    # tensor (and norm_x/it) stay OUTSIDE the gate: cond outputs cannot
+    # alias, so routing the full state through it would copy the tensor
+    # buffer every sweep
+    def _payload(st: SweepState):
+        return (st.factors, st.weights, st.fit, st.carry, st.grams, st.pp)
 
-    sched = plan.resolved_schedule
-    cache: dict[int, Array] = {ROOT: x}
-    for node in sched.walk():
-        src = cache[node.parent]
-        if plan.nodes:
-            np_ = plan.node_plan(node.id)
-            alg, tiles = np_.algorithm, np_.tiles
-        else:
-            alg, tiles = "auto", None
-        if use_carry:
-            out, carry = executor.contract_carry(
-                node, src, factors, alg, carry, tiles=tiles
+    def exact_branch(payload):
+        st = _with_payload(state, payload)
+        out = _exact_sweep(problem, plan, executor, st)
+        # rebuild the cache only when this sweep's own step settled under
+        # the tolerance -- i.e. the next sweeps would actually stay in the
+        # PP regime.  During the early large-step phase the build would be
+        # invalidated immediately, so keep the stale cache (drift = inf
+        # keeps routing through this exact branch) and pay nothing extra.
+        step = _pp_drift(out.factors, st.factors)
+
+        def build(pp):
+            return _pp_materialize(
+                problem, executor, out.x, out.factors, pp.n_exact + 1
             )
-        else:
-            out = executor.contract(node, src, factors, alg, tiles=tiles)
-        if node.is_leaf:
-            m_last = out
-            weights = update(node.mode, m_last, weights)
-        else:
-            cache[node.id] = out
 
-    # Fit from the last MTTKRP (standard trick; avoids forming the model).
-    fit = fit_from_last_mttkrp(gs, weights, m_last, factors[-1], state.norm_x)
-    return SweepState(
-        x=x, factors=factors, weights=weights, norm_x=state.norm_x, it=it, fit=fit,
-        carry=carry, grams=gs,
+        def stale(pp):
+            return PPState(
+                ref=pp.ref, pairs=pp.pairs, base=pp.base,
+                drift=jnp.full_like(pp.drift, jnp.inf),
+                n_exact=pp.n_exact + 1,
+            )
+
+        pp = jax.lax.cond(jnp.max(step) < problem.pp_tol, build, stale, st.pp)
+        return _payload(out)[:-1] + (pp,)
+
+    def pp_branch(payload):
+        return _payload(_pp_sweep(problem, plan, _with_payload(state, payload)))
+
+    payload = jax.lax.cond(
+        jnp.max(state.pp.drift) < problem.pp_tol,
+        pp_branch, exact_branch, _payload(state),
     )
+    return _with_payload(state, payload)
 
 
 def legacy_sweep(
@@ -241,6 +476,15 @@ def cp_als(
     shared stop is the price of one fused dispatch -- at most a few extra
     sweeps for the fastest converger).
 
+    Plans with ``plan.pp`` (built from a ``Problem(pp_tol > 0)``) run the
+    pairwise-perturbation loop: the scan carries the PP cache next to the
+    factors, each sweep gates exact-vs-approximate on the traced drifts (so
+    chunks stay sync-free), and ``CPState.pp_exact_sweeps`` reports how many
+    sweeps re-materialized the cache -- ``pp_exact_sweeps / it`` is the
+    measured exact-sweep fraction the bench compares against the planner's
+    amortization assumption.  ``pp_tol=0`` plans never build the cache, so
+    their iterates are bitwise identical to classic exact ALS.
+
     ``dispatch_cache`` (with ``dispatch_key``) lets a caller that drives
     many same-signature runs -- the serving engine of
     :mod:`repro.serve.cp_service` -- reuse ONE jitted sweep-chunk across
@@ -280,7 +524,7 @@ def cp_als(
     # pass caller arrays through unchanged (LocalExecutor), so donation is
     # keyed off the backend (a no-op-with-warning on CPU) and caller-owned
     # init_factors are copied once rather than invalidated under the caller.
-    donate = (3, 4, 5, 6) if jax.default_backend() != "cpu" else ()
+    donate = (3, 4, 5, 6, 7) if jax.default_backend() != "cpu" else ()
     if donate and init_factors is not None:
         factors = [jnp.array(u, copy=True) for u in factors]
     if problem.batched:
@@ -297,26 +541,33 @@ def cp_als(
     # Grams are computed once here and carried across sweeps (each update
     # refreshes exactly the changed factor's Gram inside the sweep).
     gs = grams(factors)
+    # PP plans carry the cache through the same scan (zeros + inf drift, so
+    # the first sweep is exact); pp stays None otherwise and the chunk
+    # graph is the classic exact one, bitwise.
+    pp = _pp_init(problem, x, factors) if plan.pp else None
 
     # One dispatch = `length` sweeps under lax.scan.  jit only the evolving
     # buffers out (returning x from the compiled fn would make XLA emit a
     # full-tensor copy every chunk); donate them in so off-CPU backends
-    # update factors/Grams/carry in place.
-    def _chunk(x, norm_x, it0, factors, weights, gs, carry, length):
+    # update factors/Grams/carry/PP-cache in place.
+    def _chunk(x, norm_x, it0, factors, weights, gs, carry, pp, length):
         def body(c, _):
-            factors, weights, gs, carry, it = c
+            factors, weights, gs, carry, pp, it = c
             state = SweepState(
                 x=x, factors=factors, weights=weights, norm_x=norm_x,
-                it=it, carry=carry, grams=gs,
+                it=it, carry=carry, grams=gs, pp=pp,
             )
             out = als_sweep(problem, plan, executor, state)
-            return (out.factors, out.weights, out.grams, out.carry, it + 1), out.fit
+            return (
+                (out.factors, out.weights, out.grams, out.carry, out.pp, it + 1),
+                out.fit,
+            )
 
-        init = (factors, weights, gs, carry, it0)
-        (factors, weights, gs, carry, _), fits = jax.lax.scan(
+        init = (factors, weights, gs, carry, pp, it0)
+        (factors, weights, gs, carry, pp, _), fits = jax.lax.scan(
             body, init, None, length=length
         )
-        return factors, weights, gs, carry, fits
+        return factors, weights, gs, carry, pp, fits
 
     if dispatch_cache is not None and dispatch_key in dispatch_cache:
         chunk = dispatch_cache[dispatch_key]
@@ -332,8 +583,9 @@ def cp_als(
     while it < n_iters and not done:
         length = min(k, n_iters - it)
         t0 = time.perf_counter()
-        factors, weights, gs, carry, fits = chunk(
-            x, norm_x, jnp.asarray(it), factors, weights, gs, carry, length=length
+        factors, weights, gs, carry, pp, fits = chunk(
+            x, norm_x, jnp.asarray(it), factors, weights, gs, carry, pp,
+            length=length,
         )
         fits = _block_until_ready(fits)  # the chunk's single host sync
         dt = time.perf_counter() - t0
@@ -356,4 +608,7 @@ def cp_als(
                 fit_prev = f
         it += length
         fit = fits[length - 1]
-    return CPState(factors=factors, weights=weights, fit=fit, it=it)
+    return CPState(
+        factors=factors, weights=weights, fit=fit, it=it,
+        pp_exact_sweeps=int(pp.n_exact) if pp is not None else None,
+    )

@@ -109,6 +109,7 @@ class _CPRequest:
     rank: int
     n_iters: int
     tol: float
+    pp_tol: float
     init_factors: list[Array] | None
     seed: int
     future: CPFuture
@@ -143,7 +144,10 @@ class CPService:
     over all its axes (batch-parallel: zero collective traffic;
     ``batch_size`` must be divisible by the mesh's device count).
     ``max_pending`` bounds the queue; a full queue rejects submission with
-    :class:`repro.serve.queue.QueueFull`.
+    :class:`repro.serve.queue.QueueFull`.  ``pp_tol > 0`` makes
+    pairwise-perturbation sweeps the service default (overridable per
+    request); PP requests bucket under their own signature, so exact and PP
+    traffic never share a compiled dispatch.
     """
 
     def __init__(
@@ -157,6 +161,7 @@ class CPService:
         strategy: str = "autotune",
         tuning_cache=None,
         mesh=None,
+        pp_tol: float = 0.0,
     ):
         """See the class docstring for the knobs; validation happens here."""
         if batch_size < 1:
@@ -164,6 +169,7 @@ class CPService:
         self.batch_size = int(batch_size)
         self.n_iters = int(n_iters)
         self.tol = float(tol)
+        self.pp_tol = float(pp_tol)
         self.sweeps_per_sync = sweeps_per_sync
         self.strategy = strategy
         self.tuning_cache = tuning_cache
@@ -190,7 +196,9 @@ class CPService:
         self._execute_s = 0.0
 
     # ------------------------------------------------------------ submission
-    def _problem_for(self, tensor: Array, rank: int) -> Problem:
+    def _problem_for(
+        self, tensor: Array, rank: int, pp_tol: float | None = None
+    ) -> Problem:
         """The batched Problem one dispatch of this tensor's bucket solves."""
         axis_sizes = dict(self.mesh.shape) if self.mesh is not None else {}
         batch_axes = (
@@ -205,19 +213,22 @@ class CPService:
             batch=self.batch_size,
             batch_axes=batch_axes,
             axis_sizes=axis_sizes,
+            pp_tol=self.pp_tol if pp_tol is None else float(pp_tol),
         )
 
     def signature_of(self, tensor: Array, rank: int, *, n_iters: int | None = None,
-                     tol: float | None = None) -> str:
+                     tol: float | None = None, pp_tol: float | None = None) -> str:
         """Batch-bucket signature of one request: the canonical
         :meth:`repro.plan.problem.Problem.signature` of the *batched*
-        problem (shape, rank, dtype, device count, batch -- via
-        :func:`repro.plan.autotune.problem_key`, so it shares the tuning
+        problem (shape, rank, dtype, device count, batch, PP tolerance --
+        via :func:`repro.plan.autotune.problem_key`, so it shares the tuning
         cache's key space) extended with the update options (sweep budget,
-        tolerance) that shape the compiled dispatch."""
+        tolerance) that shape the compiled dispatch.  A ``pp_tol > 0``
+        request buckets separately from the exact one for the same tensor
+        (its compiled dispatch carries the PP cache through the scan)."""
         n_iters = self.n_iters if n_iters is None else int(n_iters)
         tol = self.tol if tol is None else float(tol)
-        base = problem_key(self._problem_for(tensor, rank))
+        base = problem_key(self._problem_for(tensor, rank, pp_tol))
         return f"{base}|i{n_iters}|t{tol:g}"
 
     def submit(
@@ -227,6 +238,7 @@ class CPService:
         *,
         n_iters: int | None = None,
         tol: float | None = None,
+        pp_tol: float | None = None,
         init_factors: Sequence[Array] | None = None,
         seed: int = 0,
         priority: int = 0,
@@ -234,9 +246,11 @@ class CPService:
         """Enqueue one tensor for rank-``rank`` CP decomposition.
 
         Returns a :class:`CPFuture` that resolves when the request's batch
-        executes (during :meth:`step`/:meth:`flush`).  ``n_iters``/``tol``
-        override the service defaults (they are part of the signature:
-        requests only share a dispatch when their update options match);
+        executes (during :meth:`step`/:meth:`flush`).  ``n_iters``/``tol``/
+        ``pp_tol`` override the service defaults (they are part of the
+        signature: requests only share a dispatch when their update options
+        match -- a pairwise-perturbation request never shares a compiled
+        dispatch with an exact one);
         ``init_factors`` pins the initial factors (per-mode ``(I_k, C)``,
         unbatched -- the service stacks them into the batch), otherwise they
         are drawn from ``seed``.  Higher ``priority`` serves first, FIFO
@@ -253,12 +267,13 @@ class CPService:
             got = [tuple(u.shape) for u in init_factors]
             if got != want:
                 raise ValueError(f"init_factors shapes {got} != expected {want}")
-        sig = self.signature_of(tensor, rank, n_iters=n_iters, tol=tol)
+        sig = self.signature_of(tensor, rank, n_iters=n_iters, tol=tol, pp_tol=pp_tol)
         payload = _CPRequest(
             tensor=tensor,
             rank=rank,
             n_iters=self.n_iters if n_iters is None else int(n_iters),
             tol=self.tol if tol is None else float(tol),
+            pp_tol=self.pp_tol if pp_tol is None else float(pp_tol),
             init_factors=init_factors,
             seed=int(seed),
             future=CPFuture(-1, sig),
@@ -278,7 +293,7 @@ class CPService:
         state = self._states.get(sig)
         if state is not None:
             return state
-        problem = self._problem_for(payload.tensor, payload.rank)
+        problem = self._problem_for(payload.tensor, payload.rank, payload.pp_tol)
         warm = (
             self.strategy == "autotune"
             and lookup_measurements(problem, cache=self.tuning_cache) is not None

@@ -286,43 +286,26 @@ def test_mttkrp_batched_ragged_grid(order, batch):
     )
 
 
-# Optional dev dep: only the property sweep needs it, so absence must
-# degrade to a visible skip (repo convention) -- not a module-level
-# importorskip, which would drop the whole file.
-try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
-
-    HAVE_HYPOTHESIS = True
-except ImportError:
-    HAVE_HYPOTHESIS = False
+from conftest import given, settings, st  # noqa: E402  (shared optional-dep shim)
 
 
-if HAVE_HYPOTHESIS:
-
-    @settings(max_examples=12, deadline=None)
-    @given(
-        order=st.integers(min_value=3, max_value=4),
-        batch=st.integers(min_value=1, max_value=5),
-        mode=st.integers(min_value=0, max_value=3),
-        fused=st.booleans(),
-    )
-    def test_mttkrp_batched_property(order, batch, mode, fused):
-        """Hypothesis sweep over (order, B, mode, kernel) -- small B forces
-        the ragged last chunk of the batch grid axis."""
-        if fused:
-            _check_mttkrp_batched(
-                order, batch, mode, method="fused",
-                tiles={"block_i": 4, "block_b": 8, "block_batch": 2},
-            )
-        else:
-            _check_mttkrp_batched(order, batch, mode)
-
-else:
-
-    @pytest.mark.skip(reason="hypothesis not installed")
-    def test_mttkrp_batched_property():
-        pass
+@settings(max_examples=12, deadline=None)
+@given(
+    order=st.integers(min_value=3, max_value=4),
+    batch=st.integers(min_value=1, max_value=5),
+    mode=st.integers(min_value=0, max_value=3),
+    fused=st.booleans(),
+)
+def test_mttkrp_batched_property(order, batch, mode, fused):
+    """Hypothesis sweep over (order, B, mode, kernel) -- small B forces
+    the ragged last chunk of the batch grid axis."""
+    if fused:
+        _check_mttkrp_batched(
+            order, batch, mode, method="fused",
+            tiles={"block_i": 4, "block_b": 8, "block_batch": 2},
+        )
+    else:
+        _check_mttkrp_batched(order, batch, mode)
 
 
 # --------------------------------------------------------- tuning cache

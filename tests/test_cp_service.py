@@ -109,6 +109,28 @@ def test_one_compile_per_signature_across_flushes():
     assert svc.stats()["signatures"] == 3 and svc.stats()["compiles"] == 3
 
 
+def test_pp_requests_bucket_separately():
+    """A pairwise-perturbation request cannot share a bucket (or a compiled
+    dispatch) with the exact request for the same tensor: ``pp_tol`` is part
+    of ``Problem.signature()``, so it is part of the batch key too."""
+    svc = CPService(batch_size=2, n_iters=N_ITERS)
+    x, init = _request((6, 5, 4), seed=77)
+    sig_exact = svc.signature_of(x, RANK)
+    sig_pp = svc.signature_of(x, RANK, pp_tol=0.25)
+    assert "|pp" not in sig_exact and "|pp0.25" in sig_pp
+
+    svc.submit(x, RANK, init_factors=init)
+    svc.submit(x, RANK, init_factors=init, pp_tol=0.25)
+    svc.flush()
+    stats = svc.stats()
+    assert stats["signatures"] == 2 and stats["compiles"] == 2
+
+    # a repeat exact submit reuses the exact bucket's dispatch
+    svc.submit(x, RANK, init_factors=init)
+    svc.flush()
+    assert svc.stats()["compiles"] == 2
+
+
 # ---------------------------------------------------------------- scheduling
 def test_fifo_within_signature_and_priority_across():
     """step() serves the bucket owning the most urgent request; within a

@@ -66,6 +66,11 @@ def test_compressed_dp_trainer_tracks_exact():
     assert "compressed_dp OK" in out
 
 
+def test_pp_sharded_matches_local():
+    out = _run("pp_sharded")
+    assert "pp_sharded OK" in out
+
+
 def test_elastic_restore_across_mesh_shapes():
     out = _run("elastic_restore")
     assert "elastic_restore OK" in out

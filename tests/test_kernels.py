@@ -8,11 +8,9 @@ non-divisible dims alike.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
+import pytest  # noqa: F401  (parametrize marks below)
 
-pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
-from hypothesis import given, settings  # noqa: E402
-from hypothesis import strategies as st  # noqa: E402
+from conftest import given, settings, st  # shared optional-dep shim
 
 from repro.core import random_factors, random_tensor
 from repro.kernels import ops, ref

@@ -406,54 +406,95 @@ def test_make_executor_builds_matching_kinds():
     assert isinstance(make_executor("compressed", mesh, mode_axes), CompressedShardedExecutor)
 
 
+# ------------------------------------------------------------- dispatch cache
+class _CountingCache(dict):
+    """dict that counts lookups so tests can distinguish hit from rebuild."""
+
+    def __init__(self):
+        super().__init__()
+        self.hits = 0
+
+    def __getitem__(self, key):
+        self.hits += 1
+        return super().__getitem__(key)
+
+
+def test_dispatch_cache_reuses_compiled_chunk():
+    """A second ``cp_als`` call with the same key reuses the cached dispatch
+    (no new entry, one hit) and reproduces the first run bit for bit."""
+    shape, rank = (6, 5, 4), 3
+    x = random_tensor(jax.random.PRNGKey(50), shape)
+    init = random_factors(jax.random.PRNGKey(51), shape, rank)
+    problem = Problem(shape=shape, rank=rank)
+    plan = plan_sweep(problem)
+    cache = _CountingCache()
+    key = problem.signature()
+
+    a = cp_als(x, plan, n_iters=4, tol=0.0, init_factors=list(init),
+               dispatch_cache=cache, dispatch_key=key)
+    assert len(cache) == 1 and cache.hits == 0  # cold: built, not looked up
+    b = cp_als(x, plan, n_iters=4, tol=0.0, init_factors=list(init),
+               dispatch_cache=cache, dispatch_key=key)
+    assert len(cache) == 1 and cache.hits == 1  # warm: reused, nothing built
+    for fa, fb in zip(a.factors, b.factors):
+        assert np.array_equal(np.asarray(fa), np.asarray(fb))
+    assert np.array_equal(np.asarray(a.weights), np.asarray(b.weights))
+
+
+def test_dispatch_cache_isolates_signatures():
+    """Different problems -- including the same shape with PP enabled -- get
+    their own cache entries when keyed by ``Problem.signature()``; the PP
+    signature is distinct by construction (``|pp`` suffix)."""
+    shape, rank = (6, 5, 4), 3
+    x = random_tensor(jax.random.PRNGKey(52), shape)
+    cache = _CountingCache()
+
+    exact = Problem(shape=shape, rank=rank)
+    cp_als(x, plan_sweep(exact), n_iters=3, tol=0.0,
+           dispatch_cache=cache, dispatch_key=exact.signature())
+    assert len(cache) == 1
+
+    other = Problem(shape=(5, 5, 5), rank=rank)
+    cp_als(random_tensor(jax.random.PRNGKey(53), (5, 5, 5)), plan_sweep(other),
+           n_iters=3, tol=0.0, dispatch_cache=cache,
+           dispatch_key=other.signature())
+    assert len(cache) == 2
+
+    pp = Problem(shape=shape, rank=rank, pp_tol=0.1)
+    assert pp.signature() != exact.signature() and "|pp" in pp.signature()
+    cp_als(x, plan_sweep(pp, strategy="pp"), n_iters=3, tol=0.0,
+           dispatch_cache=cache, dispatch_key=pp.signature())
+    assert len(cache) == 3 and cache.hits == 0  # three builds, zero collisions
+
+
 # --------------------------------------------- hypothesis planner invariants
-# Optional dev dep: only these two property tests need it, so absence must
-# degrade to visible skips (repo convention) -- not a module-level
-# importorskip, which would drop the whole file.
-try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
-
-    HAVE_HYPOTHESIS = True
-except ImportError:
-    HAVE_HYPOTHESIS = False
+from conftest import given, settings, st  # noqa: E402  (shared optional-dep shim)
 
 
-if HAVE_HYPOTHESIS:
+@settings(max_examples=30, deadline=None)
+@given(
+    shape=st.lists(st.integers(2, 30), min_size=3, max_size=6),
+    rank=st.integers(1, 32),
+)
+def test_auto_plan_invariants(shape, rank):
+    # the per-mode invariants live on the flat schedule; tree-schedule
+    # invariants are property-tested in test_schedule.py
+    plan = plan_sweep(Problem(shape=tuple(shape), rank=rank), schedule="flat")
+    assert [m.mode for m in plan.modes] == list(range(len(shape)))
+    # external modes are always 1-step (2-step degenerates there)
+    assert plan.modes[0].algorithm == "1step"
+    assert plan.modes[-1].algorithm == "1step"
+    for m in plan.modes:
+        assert m.algorithm in ("1step", "2step-left", "2step-right")
+        assert m.cost.predicted_s > 0.0
+        assert m.cost.collective_bytes == 0.0
 
-    @settings(max_examples=30, deadline=None)
-    @given(
-        shape=st.lists(st.integers(2, 30), min_size=3, max_size=6),
-        rank=st.integers(1, 32),
-    )
-    def test_auto_plan_invariants(shape, rank):
-        # the per-mode invariants live on the flat schedule; tree-schedule
-        # invariants are property-tested in test_schedule.py
-        plan = plan_sweep(Problem(shape=tuple(shape), rank=rank), schedule="flat")
-        assert [m.mode for m in plan.modes] == list(range(len(shape)))
-        # external modes are always 1-step (2-step degenerates there)
-        assert plan.modes[0].algorithm == "1step"
-        assert plan.modes[-1].algorithm == "1step"
-        for m in plan.modes:
-            assert m.algorithm in ("1step", "2step-left", "2step-right")
-            assert m.cost.predicted_s > 0.0
-            assert m.cost.collective_bytes == 0.0
 
-    @settings(max_examples=15, deadline=None)
-    @given(
-        shape=st.lists(st.integers(2, 12), min_size=3, max_size=5),
-        strategy=st.sampled_from(["1step", "einsum", "baseline", "fused"]),
-    )
-    def test_forced_strategy_is_verbatim(shape, strategy):
-        plan = plan_sweep(Problem(shape=tuple(shape), rank=4), strategy=strategy)
-        assert all(m.algorithm == strategy for m in plan.modes)
-
-else:
-
-    @pytest.mark.skip(reason="hypothesis not installed")
-    def test_auto_plan_invariants():
-        pass
-
-    @pytest.mark.skip(reason="hypothesis not installed")
-    def test_forced_strategy_is_verbatim():
-        pass
+@settings(max_examples=15, deadline=None)
+@given(
+    shape=st.lists(st.integers(2, 12), min_size=3, max_size=5),
+    strategy=st.sampled_from(["1step", "einsum", "baseline", "fused"]),
+)
+def test_forced_strategy_is_verbatim(shape, strategy):
+    plan = plan_sweep(Problem(shape=tuple(shape), rank=4), strategy=strategy)
+    assert all(m.algorithm == strategy for m in plan.modes)

@@ -5,9 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
-from hypothesis import given, settings  # noqa: E402
-from hypothesis import strategies as st  # noqa: E402
+from conftest import given, settings, st  # shared optional-dep shim
 
 from repro.configs import get_config
 from repro.launch import mesh as meshlib
@@ -103,6 +101,148 @@ def test_mttkrp_scaling_in_factor(seed):
     scaled[0] = scaled[0] * 2.0
     out = np.asarray(mttkrp(x, scaled, 1))
     np.testing.assert_allclose(out, 2.0 * base, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------- pairwise perturbation
+@settings(max_examples=5, deadline=None)
+@given(
+    shape=st.lists(st.integers(3, 8), min_size=3, max_size=4).map(tuple),
+    rank=st.integers(2, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pp_tol_zero_bitwise_on_generated_problems(shape, rank, seed):
+    """Hypothesis sweep of the exact-fallback invariant: for arbitrary
+    shapes/ranks, ``pp_tol=0`` iterates are bitwise equal to exact ALS."""
+    from repro.core import random_factors, random_tensor
+    from repro.plan import Problem, cp_als, plan_sweep
+
+    x = random_tensor(jax.random.PRNGKey(seed), shape)
+    init = random_factors(jax.random.PRNGKey(seed + 1), shape, rank)
+    a = cp_als(x, plan_sweep(Problem(shape=shape, rank=rank)),
+               n_iters=4, tol=0.0, init_factors=list(init))
+    b = cp_als(x, plan_sweep(Problem(shape=shape, rank=rank, pp_tol=0.0)),
+               n_iters=4, tol=0.0, init_factors=list(init))
+    assert np.array_equal(np.asarray(a.weights), np.asarray(b.weights))
+    for fa, fb in zip(a.factors, b.factors):
+        assert np.array_equal(np.asarray(fa), np.asarray(fb))
+
+
+def test_pp_tol_zero_is_bitwise_exact():
+    """``pp_tol=0`` is classic exact ALS, bit for bit: the PP state is never
+    built, the sweep graph is untouched, and the signature does not change."""
+    from repro.core import random_factors, random_tensor
+    from repro.plan import Problem, cp_als, plan_sweep
+
+    shape, rank = (8, 7, 6), 4
+    x = random_tensor(jax.random.PRNGKey(10), shape)
+    init = random_factors(jax.random.PRNGKey(11), shape, rank)
+
+    p_exact = Problem(shape=shape, rank=rank)
+    p_zero = Problem(shape=shape, rank=rank, pp_tol=0.0)
+    assert p_zero.signature() == p_exact.signature()  # backward-compatible key
+
+    a = cp_als(x, plan_sweep(p_exact), n_iters=8, tol=0.0, init_factors=list(init))
+    b = cp_als(x, plan_sweep(p_zero), n_iters=8, tol=0.0, init_factors=list(init))
+    assert a.pp_exact_sweeps is None and b.pp_exact_sweeps is None
+    assert np.array_equal(np.asarray(a.weights), np.asarray(b.weights))
+    for fa, fb in zip(a.factors, b.factors):
+        assert np.array_equal(np.asarray(fa), np.asarray(fb))
+    assert np.array_equal(np.asarray(a.fit), np.asarray(b.fit))
+
+
+def test_pp_exact_sweep_cadence():
+    """The drift gate controls the exact/approximate cadence at both extremes.
+    The pair cache is only rebuilt once an exact sweep's own step settles
+    under ``pp_tol``, so a vanishing tolerance never leaves the exact regime
+    (every sweep is exact ALS); a huge tolerance materializes after the very
+    first sweep and approximates everything after."""
+    from repro.core import random_factors, random_tensor
+    from repro.plan import Problem, cp_als, plan_sweep
+
+    shape, rank, n_iters = (8, 7, 6), 4, 6
+    x = random_tensor(jax.random.PRNGKey(10), shape)
+    init = random_factors(jax.random.PRNGKey(11), shape, rank)
+
+    tiny = cp_als(
+        x, plan_sweep(Problem(shape=shape, rank=rank, pp_tol=1e-12), strategy="pp"),
+        n_iters=n_iters, tol=0.0, init_factors=list(init),
+    )
+    assert tiny.pp_exact_sweeps == n_iters  # the cache is never rebuilt
+
+    huge = cp_als(
+        x, plan_sweep(Problem(shape=shape, rank=rank, pp_tol=1e9), strategy="pp"),
+        n_iters=n_iters, tol=0.0, init_factors=list(init),
+    )
+    assert huge.pp_exact_sweeps == 1
+
+
+def test_pp_correction_error_is_second_order():
+    """The first-order PP approximation of MTTKRP has O(drift^2) error:
+    halving the factor perturbation quarters the approximation error."""
+    from repro.core import mttkrp, random_factors, random_tensor
+    from repro.plan import LocalExecutor, Problem
+
+    shape, rank = (6, 5, 4, 3), 3
+    x = random_tensor(jax.random.PRNGKey(20), shape)
+    ref = random_factors(jax.random.PRNGKey(21), shape, rank)
+    direction = random_factors(jax.random.PRNGKey(22), shape, rank)
+    problem = Problem(shape=shape, rank=rank, pp_tol=0.5)
+    pairs = {
+        k: np.asarray(v, np.float64)
+        for k, v in LocalExecutor().pp_pairs(problem, x, ref).items()
+    }
+
+    # pairs are stored rank-major: M_{n,m}[c, i_n, i_m]
+    def mean_rel_err(eps):
+        cur = [r + eps * d for r, d in zip(ref, direction)]
+        errs = []
+        for n in range(len(shape)):
+            m0 = 1 if n == 0 else 0
+            if n < m0:
+                approx = np.einsum("cab,bc->ac", pairs[(n, m0)], np.asarray(ref[m0]))
+            else:
+                approx = np.einsum("cab,ac->bc", pairs[(m0, n)], np.asarray(ref[m0]))
+            for m in range(len(shape)):
+                if m == n:
+                    continue
+                du = np.asarray(cur[m] - ref[m], np.float64)
+                if n < m:
+                    approx = approx + np.einsum("cab,bc->ac", pairs[(n, m)], du)
+                else:
+                    approx = approx + np.einsum("cab,ac->bc", pairs[(m, n)], du)
+            exact = np.asarray(mttkrp(x, cur, n), np.float64)
+            errs.append(np.linalg.norm(approx - exact) / np.linalg.norm(exact))
+        return float(np.mean(errs))
+
+    e1, e2 = mean_rel_err(0.1), mean_rel_err(0.05)
+    assert e1 > 1e-6  # the approximation is genuinely approximate at eps=0.1
+    assert 3.0 < e1 / e2 < 5.0  # quadratic: halving eps quarters the error
+
+
+def test_pp_final_fit_matches_exact():
+    """On a planted low-rank tensor a PP run (mostly approximated sweeps)
+    converges to the same fit as exact ALS, while actually skipping exact
+    re-materializations."""
+    from repro.core import cp_full, random_factors, random_tensor
+    from repro.plan import Problem, cp_als, plan_sweep
+
+    shape, rank, n_iters = (12, 10, 8), 4, 40
+    true = random_factors(jax.random.PRNGKey(30), shape, rank)
+    x = cp_full(None, true)
+    x = x + 1e-3 * random_tensor(jax.random.PRNGKey(31), shape)
+    init = random_factors(jax.random.PRNGKey(32), shape, rank)
+
+    exact = cp_als(
+        x, plan_sweep(Problem(shape=shape, rank=rank)),
+        n_iters=n_iters, tol=0.0, init_factors=list(init),
+    )
+    pp = cp_als(
+        x, plan_sweep(Problem(shape=shape, rank=rank, pp_tol=0.003), strategy="pp"),
+        n_iters=n_iters, tol=0.0, init_factors=list(init),
+    )
+    # a majority of sweeps were approximated, yet the fit agrees
+    assert 0 < pp.pp_exact_sweeps < n_iters // 2
+    assert abs(float(exact.fit) - float(pp.fit)) < 1e-3
 
 
 def test_moe_combine_weights_are_convex(host_mesh):

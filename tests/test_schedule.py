@@ -280,54 +280,41 @@ def test_every_enumerated_schedule_matches_flat_on_order4():
 
 
 # --------------------------------------------- hypothesis: random tree shapes
-# Optional dev dep (repo convention: degrade to a visible skip).
-try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
-
-    HAVE_HYPOTHESIS = True
-except ImportError:
-    HAVE_HYPOTHESIS = False
+from conftest import given, settings, st  # noqa: E402  (shared optional-dep shim)
 
 
-if HAVE_HYPOTHESIS:
-
-    @st.composite
-    def _spec(draw, lo, hi):
-        """A random valid nested spec over modes [lo, hi)."""
-        if hi - lo == 1:
-            return lo
-        k = draw(st.integers(2, hi - lo))
-        cuts = sorted(
-            draw(
-                st.sets(
-                    st.integers(lo + 1, hi - 1), min_size=k - 1, max_size=k - 1
-                )
+@st.composite
+def _spec(draw, lo, hi):
+    """A random valid nested spec over modes [lo, hi)."""
+    if hi - lo == 1:
+        return lo
+    k = draw(st.integers(2, hi - lo))
+    cuts = sorted(
+        draw(
+            st.sets(
+                st.integers(lo + 1, hi - 1), min_size=k - 1, max_size=k - 1
             )
         )
-        bounds = [lo, *cuts, hi]
-        return [
-            a if b - a == 1 else draw(_spec(a, b))
-            for a, b in zip(bounds[:-1], bounds[1:])
-        ]
+    )
+    bounds = [lo, *cuts, hi]
+    return [
+        a if b - a == 1 else draw(_spec(a, b))
+        for a, b in zip(bounds[:-1], bounds[1:])
+    ]
 
-    @st.composite
-    def _problem_and_spec(draw):
-        order = draw(st.integers(3, 6))
-        shape = tuple(draw(st.integers(2, 5)) for _ in range(order))
-        spec = draw(_spec(0, order))
-        return shape, spec
 
-    @settings(max_examples=15, deadline=None)
-    @given(case=_problem_and_spec())
-    def test_random_schedule_matches_flat_iterates(case):
-        """Property (the ALS-exactness invariant of the IR): ANY valid tree
-        over a random order-3..6 shape reproduces the flat sweep."""
-        shape, spec = case
-        _assert_matches_flat(shape, spec, seed=11)
+@st.composite
+def _problem_and_spec(draw):
+    order = draw(st.integers(3, 6))
+    shape = tuple(draw(st.integers(2, 5)) for _ in range(order))
+    spec = draw(_spec(0, order))
+    return shape, spec
 
-else:
 
-    @pytest.mark.skip(reason="hypothesis not installed")
-    def test_random_schedule_matches_flat_iterates():
-        pass
+@settings(max_examples=15, deadline=None)
+@given(case=_problem_and_spec())
+def test_random_schedule_matches_flat_iterates(case):
+    """Property (the ALS-exactness invariant of the IR): ANY valid tree
+    over a random order-3..6 shape reproduces the flat sweep."""
+    shape, spec = case
+    _assert_matches_flat(shape, spec, seed=11)
