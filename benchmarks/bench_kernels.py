@@ -14,6 +14,10 @@ correctness (max |err| vs the einsum oracle) and the XLA wall time of the
 
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
+
 import jax
 import numpy as np
 
@@ -25,6 +29,91 @@ from .util import row, time_fn
 
 SHAPES = [(256, 64, 256), (64, 64, 64, 64), (32, 16, 32, 16, 32)]
 C = 32
+
+# matrix-free vs reshape+GEMM section: one shape per supported order, sized
+# so the 1-step fallback's KRP materialization dominates (where the
+# streaming kernel's zero-intermediate-bytes model predicts the win)
+MATRIX_FREE_SHAPES = {
+    3: (64, 48, 64),
+    4: (24, 20, 24, 20),
+    5: (16, 12, 16, 12, 16),
+    6: (8, 8, 8, 8, 8, 8),
+}
+MATRIX_FREE_C = 16
+
+
+def matrix_free_section(reps: int = 3) -> dict:
+    """Per (order, mode): analytic bytes-moved + measured ms, matrix-free
+    Pallas kernel (interpret mode on CPU) vs the reshape+GEMM 1-step path."""
+    from repro.plan import Problem
+    from repro.plan.cost import mode_cost
+
+    entries = []
+    for order, shape in sorted(MATRIX_FREE_SHAPES.items()):
+        x = random_tensor(jax.random.PRNGKey(order), shape)
+        factors = random_factors(jax.random.PRNGKey(100 + order), shape, MATRIX_FREE_C)
+        problem = Problem(shape=shape, rank=MATRIX_FREE_C)
+        for n in range(order):
+            # generous tiles: whole target mode per block, reduction blocks
+            # capped by the VMEM element budget inside the wrapper
+            t_mf = time_fn(
+                lambda a, f, n=n: ops.matrix_free_mttkrp(
+                    a, f, n, block_i=128, block_r=32
+                ),
+                x, factors, reps=reps,
+            )
+            t_1s = time_fn(
+                jax.jit(lambda a, f, n=n: mttkrp_1step(a, f, n)), x, factors, reps=reps
+            )
+            err = float(
+                np.max(
+                    np.abs(
+                        np.asarray(
+                            ops.matrix_free_mttkrp(x, factors, n, block_i=128, block_r=32)
+                        )
+                        - np.asarray(mttkrp_einsum(x, factors, n))
+                    )
+                )
+            )
+            bytes_mf = mode_cost(problem, n, "matrix_free").bytes
+            bytes_1s = mode_cost(problem, n, "1step").bytes
+            entries.append(
+                {
+                    "order": order,
+                    "mode": n,
+                    "shape": list(shape),
+                    "rank": MATRIX_FREE_C,
+                    "bytes_matrix_free": bytes_mf,
+                    "bytes_1step": bytes_1s,
+                    "bytes_saved": bytes_1s - bytes_mf,
+                    "ms_matrix_free": t_mf["median_s"] * 1e3,
+                    "ms_1step": t_1s["median_s"] * 1e3,
+                    "speedup_vs_1step": t_1s["median_s"] / t_mf["median_s"],
+                    "max_err_vs_einsum": err,
+                    "wins_ms": t_mf["median_s"] < t_1s["median_s"],
+                    "wins_bytes": bytes_mf < bytes_1s,
+                }
+            )
+    return {
+        "section": "matrix_free_vs_reshape_gemm",
+        "backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "entries": entries,
+        "n_wins_ms": sum(e["wins_ms"] for e in entries),
+        "n_wins_bytes": sum(e["wins_bytes"] for e in entries),
+    }
+
+
+def matrix_free_rows(section: dict) -> list[str]:
+    return [
+        row(
+            f"matrix_free_o{e['order']}_m{e['mode']}",
+            e["ms_matrix_free"] / 1e3,
+            f"ms_1step={e['ms_1step']:.3f};bytes_saved={e['bytes_saved']:.3e};"
+            f"speedup={e['speedup_vs_1step']:.2f};err={e['max_err_vs_einsum']:.1e}",
+        )
+        for e in section["entries"]
+    ]
 
 
 def run(full: bool = False) -> list[str]:
@@ -55,9 +144,20 @@ def run(full: bool = False) -> list[str]:
                 f"gemm_flops={flops['gemm_flops']:.3e}",
             )
         )
+    out.extend(matrix_free_rows(matrix_free_section()))
     return out
 
 
 if __name__ == "__main__":
-    for line in run():
-        print(line)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default=None, help="write the matrix-free section here")
+    args = ap.parse_args()
+    if args.json:
+        section = matrix_free_section()
+        pathlib.Path(args.json).write_text(json.dumps(section, indent=1) + "\n")
+        for line in matrix_free_rows(section):
+            print(line)
+    else:
+        for line in run(args.full):
+            print(line)

@@ -27,7 +27,7 @@ from .krp import krp, krp_or_ones
 from .tensor_ops import as_lir, dims_split, matricize, mode_letters, multi_ttv
 
 Array = jax.Array
-Method = Literal["auto", "1step", "2step", "2step-left", "2step-right", "einsum", "baseline", "fused"]
+Method = Literal["auto", "1step", "2step", "2step-left", "2step-right", "einsum", "baseline", "fused", "matrix_free"]
 
 
 def _split_factors(factors: Sequence[Array], n: int):
@@ -144,8 +144,11 @@ def mttkrp(
     (Sec. 5.3.3): 1-step for external modes (where 2-step degenerates anyway)
     and 2-step for internal modes.  ``'fused'`` routes to the Pallas kernel
     (beyond-paper: KRP never materialized in HBM) via repro.kernels.ops;
-    ``tiles`` (``{"block_i": ..., "block_b": ...}``, from the autotuner's
-    ``NodePlan.tiles``) overrides that kernel's tile sizes and is ignored by
+    ``'matrix_free'`` routes to the fully streaming kernel (no matricization
+    and no KRP of any size -- raw factors go straight into VMEM).  ``tiles``
+    (``{"block_i": ..., "block_b": ...}`` for fused, ``{"block_i": ...,
+    "block_r": ...}`` for matrix-free, from the autotuner's
+    ``NodePlan.tiles``) overrides the kernel's tile sizes and is ignored by
     the non-kernel methods (their blocking is XLA's concern).
     """
     if method == "auto":
@@ -171,6 +174,15 @@ def mttkrp(
             if k in ("block_i", "block_b")
         }
         return kops.fused_mttkrp(x, list(factors), n, **kw)
+    if method == "matrix_free":
+        from repro.kernels import ops as kops  # lazy: kernels import pallas
+
+        kw = {
+            k: int(v)
+            for k, v in (tiles or {}).items()
+            if k in ("block_i", "block_r")
+        }
+        return kops.matrix_free_mttkrp(x, list(factors), n, **kw)
     raise ValueError(f"unknown method {method!r}")
 
 
@@ -202,6 +214,15 @@ def mttkrp_batched(
             if k in ("block_i", "block_b", "block_batch")
         }
         return kops.fused_mttkrp_batched(x, list(factors), n, **kw)
+    if method == "matrix_free":
+        from repro.kernels import ops as kops  # lazy: kernels import pallas
+
+        kw = {
+            k: int(v)
+            for k, v in (tiles or {}).items()
+            if k in ("block_i", "block_r", "block_batch")
+        }
+        return kops.matrix_free_mttkrp_batched(x, list(factors), n, **kw)
 
     def one(xb, *fb):
         return mttkrp(xb, list(fb), n, method=method, tiles=tiles)

@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the MTTKRP hot spots the paper optimizes.
 
 - fused_mttkrp: MTTKRP with the KRP formed on-the-fly in VMEM (never in HBM)
+- matrix_free:  fully streaming MTTKRP -- no matricization, no KRP at all
 - krp_kernel:   tiled explicit KRP (paper Alg. 1's parallel row blocks)
 - multi_ttv:    the 2-step algorithm's 2nd step (Alg. 4)
 
@@ -11,8 +12,13 @@ pure-jnp oracles the tests compare against.
 from . import ops, ref
 from .fused_mttkrp import fused_mttkrp_bilinear, fused_mttkrp_bilinear_batched
 from .krp_kernel import krp_pair
-from .multi_ttv import multi_ttv as multi_ttv_kernel
-from .multi_ttv import multi_ttv_batched as multi_ttv_batched_kernel
+from .matrix_free import (
+    matrix_free_batched_kernel,
+    matrix_free_kernel,
+    matrix_free_mttkrp,
+    matrix_free_mttkrp_batched,
+)
+from .multi_ttv import multi_ttv_batched_kernel, multi_ttv_kernel
 
 __all__ = [
     "ops",
@@ -20,6 +26,10 @@ __all__ = [
     "fused_mttkrp_bilinear",
     "fused_mttkrp_bilinear_batched",
     "krp_pair",
+    "matrix_free_kernel",
+    "matrix_free_batched_kernel",
+    "matrix_free_mttkrp",
+    "matrix_free_mttkrp_batched",
     "multi_ttv_kernel",
     "multi_ttv_batched_kernel",
 ]

@@ -1,0 +1,45 @@
+"""Shared tiling/padding helpers for the Pallas kernel wrappers.
+
+Every jit'd wrapper (ops.py, multi_ttv.py, matrix_free.py) uses the same
+three decisions: interpret off-TPU, zero-pad each tiled axis to its block
+multiple, and clamp requested blocks to the actual extent.  Keeping them in
+one module means the kernels never import each other's wrapper modules
+(no ops <-> multi_ttv <-> matrix_free cycles).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_default(flag: bool | None) -> bool:
+    """Interpret mode resolves to "not on TPU" unless explicitly forced."""
+    return (not on_tpu()) if flag is None else flag
+
+
+def pad_axis(x: Array, axis: int, mult: int) -> Array:
+    """Zero-pad ``axis`` up to a multiple of ``mult``.
+
+    ``axis`` is a raw array axis, NOT a tensor mode: batched wrappers must
+    shift mode positions by one for the leading batch axis (the unbatched
+    wrappers pass modes through unchanged).
+    """
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def block(dim: int, target: int) -> int:
+    """Largest block <= target; dims smaller than target use the dim itself."""
+    return min(dim, target)

@@ -11,13 +11,24 @@ VPU with the rank axis on lanes: each grid step does
 Grid ``(I_blocks, L)`` with the reduction dim innermost (revisited-output
 accumulation, zero-initialized at l == 0).  VMEM per step: T-tile (bi*C) +
 W row (C) + out (bi*C) -> a few hundred KB at bi=512, C=128.
+
+This module is the single multi-TTV implementation: the raw grid kernels
+(``multi_ttv_kernel`` / ``multi_ttv_batched_kernel``) plus the jit'd
+padding wrappers (``multi_ttv`` / ``multi_ttv_batched``).  ``ops.multi_ttv``
+is a frozen alias of the wrapper here, so tile threading has one seam.
 """
 
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ._tiling import block as _block
+from ._tiling import interpret_default as _interpret
+from ._tiling import pad_axis as _pad_axis
 
 Array = jax.Array
 
@@ -32,7 +43,7 @@ def _kernel(t_ref, w_ref, o_ref):
     o_ref[...] += (t_ref[0, :, :] * w_ref[0, :]).astype(o_ref.dtype)
 
 
-def multi_ttv(
+def multi_ttv_kernel(
     t: Array, w: Array, *, block_i: int, interpret: bool = False
 ) -> Array:
     """``M[i,c] = sum_l t[l,i,c] * w[l,c]`` (t: (L, I, C), w: (L, C))."""
@@ -68,7 +79,7 @@ def _kernel_batched(t_ref, w_ref, o_ref):
     )
 
 
-def multi_ttv_batched(
+def multi_ttv_batched_kernel(
     t: Array,
     w: Array,
     *,
@@ -78,9 +89,9 @@ def multi_ttv_batched(
 ) -> Array:
     """Batched multi-TTV: ``M[s,i,c] = sum_l t[s,l,i,c] * w[s,l,c]``.
 
-    Same VPU accumulation as :func:`multi_ttv` with a leading batch grid
-    axis (outermost; the L reduction stays innermost so each output block
-    is revisited in place).  S and I must be padded to block multiples.
+    Same VPU accumulation as :func:`multi_ttv_kernel` with a leading batch
+    grid axis (outermost; the L reduction stays innermost so each output
+    block is revisited in place).  S and I must be padded to block multiples.
     """
     n_batch, big_l, dim_i, c = t.shape
     if w.shape != (n_batch, big_l, c):
@@ -103,3 +114,42 @@ def multi_ttv_batched(
         out_shape=jax.ShapeDtypeStruct((n_batch, dim_i, c), jnp.float32),
         interpret=interpret,
     )(t, w)
+
+
+@partial(jax.jit, static_argnames=("block_i", "interpret"))
+def multi_ttv(
+    t: Array, w: Array, *, block_i: int = 256, interpret: bool | None = None
+) -> Array:
+    """Kernelized multi-TTV:  M[i,c] = sum_l t[l,i,c] * w[l,c]."""
+    interp = _interpret(interpret)
+    dim_i = t.shape[1]
+    bi = _block(dim_i, block_i)
+    t_pad = _pad_axis(t, 1, bi)
+    out = multi_ttv_kernel(t_pad, w, block_i=bi, interpret=interp)
+    return out[:dim_i].astype(t.dtype)
+
+
+@partial(jax.jit, static_argnames=("block_i", "block_batch", "interpret"))
+def multi_ttv_batched(
+    t: Array,
+    w: Array,
+    *,
+    block_i: int = 256,
+    block_batch: int = 8,
+    interpret: bool | None = None,
+) -> Array:
+    """Batched multi-TTV: ``M[s,i,c] = sum_l t[s,l,i,c] * w[s,l,c]``.
+
+    One launch over the kernel's batch grid axis; the I tile is chosen from
+    the mode extent ``t.shape[2]`` (pad axes shifted for the batch axis).
+    """
+    interp = _interpret(interpret)
+    s_batch, dim_i = t.shape[0], t.shape[2]
+    bi = _block(dim_i, block_i)
+    bs = _block(s_batch, block_batch)
+    t_pad = _pad_axis(_pad_axis(t, 2, bi), 0, bs)
+    w_pad = _pad_axis(w, 0, bs)
+    out = multi_ttv_batched_kernel(
+        t_pad, w_pad, block_i=bi, block_batch=bs, interpret=interp
+    )
+    return out[:s_batch, :dim_i].astype(t.dtype)

@@ -7,10 +7,17 @@ Public entry points:
 * :func:`fused_mttkrp_batched` -- same, with a leading batch axis mapped to
                             the kernel's batch grid dimension (one launch
                             for S stacked problems).
+* :func:`matrix_free_mttkrp` -- streaming matrix-free MTTKRP (no KRP at
+                            all, not even partial; see matrix_free.py).
+* :func:`matrix_free_mttkrp_batched` -- same, leading batch axis.
 * :func:`krp_materialize`-- explicit KRP via the tiled kernel (Alg. 1).
 * :func:`multi_ttv`      -- kernelized 2nd step of the 2-step algorithm.
 * :func:`multi_ttv_batched` -- batched variant over a leading batch axis.
 * :func:`mttkrp_2step_kernel` -- Alg. 4 with the multi-TTV step kernelized.
+
+``multi_ttv`` / ``multi_ttv_batched`` and the matrix-free pair are frozen
+aliases of the single implementations in ``multi_ttv.py`` / ``matrix_free.py``
+(re-exported here so callers keep one import surface).
 
 On non-TPU backends the kernels run in ``interpret=True`` mode (the kernel
 body executes in Python on CPU) -- this container's validation path.  Real-TPU
@@ -29,41 +36,16 @@ import jax.numpy as jnp
 from repro.core.krp import krp_or_ones, krp_or_ones_batched
 from repro.core.tensor_ops import dims_split
 
+from ._tiling import block as _block
+from ._tiling import interpret_default as _interpret
+from ._tiling import on_tpu as _on_tpu
+from ._tiling import pad_axis as _pad_axis
 from .fused_mttkrp import fused_mttkrp_bilinear, fused_mttkrp_bilinear_batched
 from .krp_kernel import krp_pair
-from .multi_ttv import multi_ttv as _multi_ttv_kernel
-from .multi_ttv import multi_ttv_batched as _multi_ttv_batched_kernel
+from .matrix_free import matrix_free_mttkrp, matrix_free_mttkrp_batched
+from .multi_ttv import multi_ttv, multi_ttv_batched
 
 Array = jax.Array
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _interpret(flag: bool | None) -> bool:
-    return (not _on_tpu()) if flag is None else flag
-
-
-def _pad_axis(x: Array, axis: int, mult: int) -> Array:
-    """Zero-pad ``axis`` up to a multiple of ``mult``.
-
-    ``axis`` is a raw array axis, NOT a tensor mode: batched wrappers must
-    shift mode positions by one for the leading batch axis (the unbatched
-    wrappers pass modes through unchanged).
-    """
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
-
-def _block(dim: int, target: int) -> int:
-    """Largest block <= target; dims smaller than target use the dim itself."""
-    return min(dim, target)
 
 
 def balanced_split(dims: Sequence[int]) -> int:
@@ -267,45 +249,6 @@ def krp_materialize(
         prod = prod.reshape(ja, u_pad.shape[0], -1)[:, :jb, :]
         out = prod.reshape(ja * jb, -1)
     return out
-
-
-@partial(jax.jit, static_argnames=("block_i", "interpret"))
-def multi_ttv(
-    t: Array, w: Array, *, block_i: int = 256, interpret: bool | None = None
-) -> Array:
-    """Kernelized multi-TTV:  M[i,c] = sum_l t[l,i,c] * w[l,c]."""
-    interp = _interpret(interpret)
-    dim_i = t.shape[1]
-    bi = _block(dim_i, block_i)
-    t_pad = _pad_axis(t, 1, bi)
-    out = _multi_ttv_kernel(t_pad, w, block_i=bi, interpret=interp)
-    return out[:dim_i].astype(t.dtype)
-
-
-@partial(jax.jit, static_argnames=("block_i", "block_batch", "interpret"))
-def multi_ttv_batched(
-    t: Array,
-    w: Array,
-    *,
-    block_i: int = 256,
-    block_batch: int = 8,
-    interpret: bool | None = None,
-) -> Array:
-    """Batched multi-TTV: ``M[s,i,c] = sum_l t[s,l,i,c] * w[s,l,c]``.
-
-    One launch over the kernel's batch grid axis; the I tile is chosen from
-    the mode extent ``t.shape[2]`` (pad axes shifted for the batch axis).
-    """
-    interp = _interpret(interpret)
-    s_batch, dim_i = t.shape[0], t.shape[2]
-    bi = _block(dim_i, block_i)
-    bs = _block(s_batch, block_batch)
-    t_pad = _pad_axis(_pad_axis(t, 2, bi), 0, bs)
-    w_pad = _pad_axis(w, 0, bs)
-    out = _multi_ttv_batched_kernel(
-        t_pad, w_pad, block_i=bi, block_batch=bs, interpret=interp
-    )
-    return out[:s_batch, :dim_i].astype(t.dtype)
 
 
 @partial(jax.jit, static_argnames=("n", "block_i", "interpret"))

@@ -70,14 +70,30 @@ FUSED_TILE_CANDIDATES = (
     (256, 512, 8),
 )
 
+# Candidate (block_i, block_r, block_batch) tilings for the matrix-free
+# MTTKRP kernel (default (128, 8, 8) first).  block_i sizes the target-mode
+# output block held in VMEM, block_r caps every reduction-mode block (the
+# wrapper shrinks further when the tensor tile would blow the VMEM budget),
+# block_batch slabs the batched kernel's leading grid axis (inert unbatched).
+MATRIX_FREE_TILE_CANDIDATES = (
+    (128, 8, 8),
+    (64, 8, 8),
+    (128, 16, 8),
+    (256, 8, 8),
+    (64, 16, 8),
+    (128, 4, 8),
+)
+
 # Candidate block_i tilings for the multi-TTV kernel (default 256 first).
 TTV_TILE_CANDIDATES = (256, 64, 128, 512)
 
 # Leaf algorithms the tuner measures head-to-head for a full mode-n MTTKRP.
-# "fused" is measured only on the local executor (the Pallas kernels are
-# single-device objects; sharded executors dispatch per-mode methods).
-_LEAF_ALGORITHMS = ("1step", "2step-left", "2step-right", "fused")
-_EXTERNAL_LEAF_ALGORITHMS = ("1step", "fused")
+# "fused" and "matrix_free" are measured only on the local executor (the
+# Pallas kernels are single-device objects; sharded executors dispatch
+# per-mode methods).
+_LEAF_ALGORITHMS = ("1step", "2step-left", "2step-right", "fused", "matrix_free")
+_EXTERNAL_LEAF_ALGORITHMS = ("1step", "fused", "matrix_free")
+_KERNEL_LEAF_ALGORITHMS = ("fused", "matrix_free")
 
 
 def backend_name() -> str:
@@ -129,8 +145,9 @@ class Measurements:
     """One problem's resolved tuning entry, as the planner consumes it.
 
     ``node_s`` maps :func:`node_key` strings to measured median seconds;
-    ``tiles`` maps kernel name (``"fused_mttkrp"`` / ``"multi_ttv"``) to its
-    tuned tile config (``{"block_i": ..., "block_b": ...}`` subsets);
+    ``tiles`` maps kernel name (``"fused_mttkrp"`` / ``"matrix_free"`` /
+    ``"multi_ttv"``) to its tuned tile config (``{"block_i": ...,
+    "block_b": ...}`` / ``{"block_i": ..., "block_r": ...}`` subsets);
     ``serial_fractions`` are the overlap constants recalibrated from
     measured sharded/overlapping node pairs (empty when nothing paired);
     ``pp`` holds the pairwise-perturbation rows (``"build_s"`` for the
@@ -239,7 +256,7 @@ def lookup_measurements(
         k: {
             kk: int(vv)
             for kk, vv in v.items()
-            if kk in ("block_i", "block_b", "block_batch")
+            if kk in ("block_i", "block_b", "block_r", "block_batch")
         }
         for k, v in entry.get("tiles", {}).items()
         if v
@@ -355,6 +372,32 @@ def _tune_fused_tiles(
     return _summarize_tiles(rows, ("block_i", "block_b", "block_batch"), n)
 
 
+def _tune_matrix_free_tiles(
+    x: Array, factors: Sequence[Array], *, reps: int, budget: _Budget
+) -> dict:
+    """Measure candidate matrix-free tilings on the same representative
+    internal mode as the fused tuner; the winner feeds ``NodePlan.tiles``
+    and the tuner's ``matrix_free`` node measurements."""
+    from repro.kernels import ops as kops  # lazy: kernels import pallas
+
+    n = x.ndim // 2
+    in_dim = x.shape[n]
+    red_max = max(d for k, d in enumerate(x.shape) if k != n)
+    # effective tile: block_i clamped to the mode, block_r to the largest
+    # reduction extent (batch tile effectively 1; the tuned block_batch
+    # rides along for the batched kernel, exactly as with fused)
+    rows = _tile_rows(
+        MATRIX_FREE_TILE_CANDIDATES,
+        lambda cand: (min(in_dim, cand[0]), min(red_max, cand[1]), 1),
+        lambda cand: kops.matrix_free_mttkrp(
+            x, list(factors), n, block_i=cand[0], block_r=cand[1]
+        ),
+        reps,
+        budget,
+    )
+    return _summarize_tiles(rows, ("block_i", "block_r", "block_batch"), n)
+
+
 def _tune_ttv_tiles(
     x: Array, factors: Sequence[Array], *, reps: int, budget: _Budget
 ) -> dict:
@@ -393,8 +436,10 @@ def _leaf_algorithms(problem: Problem, node: ContractionNode, kind: str) -> tupl
         if problem.external_mode(node.mode)
         else _LEAF_ALGORITHMS
     )
-    # the Pallas kernel is a single-device object; measure it locally only
-    return algs if kind == "local" else tuple(a for a in algs if a != "fused")
+    # the Pallas kernels are single-device objects; measure them locally only
+    if kind == "local":
+        return algs
+    return tuple(a for a in algs if a not in _KERNEL_LEAF_ALGORITHMS)
 
 
 def _tune_nodes(
@@ -407,6 +452,7 @@ def _tune_nodes(
     reps: int,
     budget: _Budget,
     fused_tiles: Mapping[str, int] | None = None,
+    matrix_free_tiles: Mapping[str, int] | None = None,
 ) -> list[dict]:
     """Measure every node of every candidate (schedule x executor) plan.
 
@@ -414,8 +460,9 @@ def _tune_nodes(
     outputs cached for their children, carry-bearing executors measured
     through their carry path), timing each deduped :func:`node_key` once.
     Root leaves are measured under every competing algorithm -- ``fused``
-    with ``fused_tiles`` (the already-tuned tiling), so the argmin times
-    exactly the configuration the resulting plan will execute.  Stops
+    with ``fused_tiles`` and ``matrix_free`` with ``matrix_free_tiles``
+    (the already-tuned tilings), so the argmin times exactly the
+    configuration the resulting plan will execute.  Stops
     cleanly when ``budget`` runs out -- unmeasured nodes simply keep their
     analytic costs at plan time.
     """
@@ -451,7 +498,12 @@ def _tune_nodes(
                 out = None
                 for alg in algs:
                     key = node_key(node, alg, kind)
-                    tl = fused_tiles if alg == "fused" else None
+                    if alg == "fused":
+                        tl = fused_tiles
+                    elif alg == "matrix_free":
+                        tl = matrix_free_tiles
+                    else:
+                        tl = None
                     run_out = None
                     if carry is not None:
                         fn = jax.jit(
@@ -626,11 +678,13 @@ def tune(
 
     The one measuring entry point (nothing else runs kernels): in budget
     priority order, times candidate fused-MTTKRP tilings
-    (:data:`FUSED_TILE_CANDIDATES`), then every contraction node of every
-    candidate (schedule x executor) plan -- ``fused`` leaves under the
-    just-tuned tiling, so the argmin times what will execute -- then
-    candidate multi-TTV tilings (:data:`TTV_TILE_CANDIDATES`; consumed by
-    the public ``mttkrp_2step_kernel``, so it only spends leftover budget).
+    (:data:`FUSED_TILE_CANDIDATES`) and matrix-free tilings
+    (:data:`MATRIX_FREE_TILE_CANDIDATES`), then every contraction node of
+    every candidate (schedule x executor) plan -- ``fused`` /
+    ``matrix_free`` leaves under the just-tuned tilings, so the argmin
+    times what will execute -- then candidate multi-TTV tilings
+    (:data:`TTV_TILE_CANDIDATES`; consumed by the public
+    ``mttkrp_2step_kernel``, so it only spends leftover budget).
     Capped by ``budget_ms`` of wall clock (compile time included; ``None``
     = no cap); recalibrates ``serial_fractions`` from measured
     sharded/overlapping pairs, and stores the entry in ``cache`` (the
@@ -651,6 +705,7 @@ def tune(
         factors = random_factors(jax.random.PRNGKey(seed), x.shape, rank, x.dtype)
     budget = _Budget(budget_ms)
     fused = _tune_fused_tiles(x, factors, reps=reps, budget=budget)
+    mfree = _tune_matrix_free_tiles(x, factors, reps=reps, budget=budget)
     rows = _tune_nodes(
         problem, x, factors, mesh=mesh, mode_axes=mode_axes, reps=reps,
         budget=budget,
@@ -659,9 +714,15 @@ def tune(
             "block_b": fused["block_b"],
             "block_batch": fused["block_batch"],
         },
+        matrix_free_tiles={
+            "block_i": mfree["block_i"],
+            "block_r": mfree["block_r"],
+            "block_batch": mfree["block_batch"],
+        },
     )
     tiles = {
         "fused_mttkrp": fused,
+        "matrix_free": mfree,
         "multi_ttv": _tune_ttv_tiles(x, factors, reps=reps, budget=budget),
     }
     pp_rows = (

@@ -59,6 +59,7 @@ ALGORITHMS = (
     "2step-right",
     "dimtree",
     "fused",
+    "matrix_free",
     "einsum",
     "baseline",
 )
@@ -297,6 +298,26 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
             second_step_flops=0.0,
             # the full KRP never hits HBM -- only the two partials stream in
             bytes=base["tensor_bytes"] + (da + db) * c * s * lb + out_bytes,
+            collective_bytes=coll,
+        )
+    if algorithm == "matrix_free":
+        # bytes-read-once model: the tensor streams through VMEM exactly one
+        # time, the raw non-target factors ride along (sum of mode extents,
+        # not KRP products), and nothing of KRP shape is ever written.  The
+        # in-VMEM fold costs one full contraction (== gemm_flops) plus the
+        # shrinking broadcast-MAC chain, priced as second_step_flops.
+        others = [k for k in range(len(shape)) if k != n]
+        spatial = float(math.prod(shape)) / shape[others[-1]]
+        fold = 0.0
+        for k in reversed(others[:-1]):
+            fold += 2.0 * spatial * c * lb
+            spatial /= shape[k]
+        factor_bytes = float(sum(shape[k] for k in others)) * c * s * lb
+        return ModeCost(
+            gemm_flops=base["gemm_flops"],
+            krp_flops=0.0,
+            second_step_flops=fold,
+            bytes=base["tensor_bytes"] + factor_bytes + out_bytes,
             collective_bytes=coll,
         )
     if algorithm == "einsum":

@@ -62,6 +62,7 @@ STRATEGIES = (
     "2step-right",
     "dimtree",
     "fused",
+    "matrix_free",
     "einsum",
     "baseline",
 )
@@ -282,7 +283,8 @@ def _auto_mode(
     ``strategy='autotune'``) every candidate's hardware measurement is
     stamped on its cost; when the *whole* candidate set is measured the
     choice is a strict argmin over measured seconds (the paper's own Sec. 5
-    methodology) and the Pallas ``fused`` kernel joins the candidates.
+    methodology) and the Pallas kernels (``fused`` and the streaming
+    ``matrix_free``) join the candidates.
     Measured and analytic seconds never compete inside one comparison --
     a partially measured set falls back to the analytic near-tie rule.
     """
@@ -302,12 +304,13 @@ def _auto_mode(
     if not problem.external_mode(n):
         cands["2step-left"] = cost("2step-left")
         cands["2step-right"] = cost("2step-right")
-    if (
-        measured is not None
-        and node is not None
-        and measured.node_time(node, "fused", executor) is not None
-    ):
-        cands["fused"] = cost("fused")
+    for kernel_alg in ("fused", "matrix_free"):
+        if (
+            measured is not None
+            and node is not None
+            and measured.node_time(node, kernel_alg, executor) is not None
+        ):
+            cands[kernel_alg] = cost(kernel_alg)
     if len(cands) > 1 and all(c.measured_s is not None for c in cands.values()):
         alg = min(cands, key=lambda a: cands[a].measured_s)
         return ModePlan(n, alg, cands[alg])
@@ -358,11 +361,12 @@ def _plan_nodes(
                     problem, node.mode, alg, executor, n_chunks=n_chunks,
                     serial_fractions=serial_fractions,
                 )
-            tiles = (
-                measured.kernel_tiles("fused_mttkrp")
-                if measured is not None and alg == "fused"
-                else None
-            )
+            tiles = None
+            if measured is not None:
+                if alg == "fused":
+                    tiles = measured.kernel_tiles("fused_mttkrp")
+                elif alg == "matrix_free":
+                    tiles = measured.kernel_tiles("matrix_free")
             plans.append(NodePlan(node, alg, cost, tiles=tiles))
         else:
             alg = "partial-krp" if node.from_root else "partial-ttv"
@@ -584,7 +588,9 @@ def plan_sweep(
             if not 0.0 <= float(f) <= 1.0:
                 raise ValueError(f"serial_fractions[{kind!r}] must be in [0, 1], got {f}")
     measured = None
-    if strategy == "autotune":
+    if strategy in ("autotune", "fused", "matrix_free"):
+        # forced kernel strategies reuse the tuned tile stamps (and carry
+        # any hardware timings on describe()); only autotune argmins on them
         from .autotune import lookup_measurements  # lazy: autotune plans via us
 
         measured = lookup_measurements(problem, cache=tuning_cache)

@@ -301,12 +301,12 @@ def _pp_sweep(
 
 def _with_payload(state: SweepState, payload) -> SweepState:
     """Rebuild a :class:`SweepState` from the sweep-mutable payload tuple
-    (the ``lax.cond`` operands of the PP gate), keeping the tensor and the
-    other sweep-invariant fields from ``state``."""
-    factors, weights, fit, carry, gs, pp = payload
+    (the ``lax.cond`` outputs of the PP gate), keeping the tensor, the PP
+    cache, and the other sweep-invariant fields from ``state``."""
+    factors, weights, fit, carry, gs = payload
     return SweepState(
         x=state.x, factors=list(factors), weights=weights, norm_x=state.norm_x,
-        it=state.it, fit=fit, carry=carry, grams=gs, pp=pp,
+        it=state.it, fit=fit, carry=carry, grams=gs, pp=state.pp,
     )
 
 
@@ -344,50 +344,77 @@ def als_sweep(
     cache is re-materialized at the fresh iterates.  ``state.pp is None``
     (every ``pp_tol=0`` plan) skips the gate entirely -- the graph is the
     classic exact sweep, bitwise.
+
+    Gate structure: cond outputs cannot alias their operands, so everything
+    routed through a cond's output is a fresh buffer every sweep.  The
+    per-sweep gate therefore carries only what a sweep actually rewrites --
+    factors, weights, fit, carry, grams; the tensor (and norm_x/it) and the
+    pair cache stay outside.  The cache (``ref``/``pairs``/``base``, by far
+    the largest conditional state) crosses exactly one minimal cond whose
+    predicate -- "this was an exact sweep whose own step settled under the
+    tolerance" -- is false on every approximate sweep, with a pure identity
+    keep-branch, instead of riding the two-way sweep gate's carry on every
+    iteration.  The drift/n_exact bookkeeping is recomputed outside the
+    gate from the same quantities the branches used, bitwise identical to
+    the nested-cond formulation (``test_property.py`` pins this).
     """
     if state.pp is None:
         return _exact_sweep(problem, plan, executor, state)
 
-    # the cond's operands/outputs are only what a sweep can change -- the
-    # tensor (and norm_x/it) stay OUTSIDE the gate: cond outputs cannot
-    # alias, so routing the full state through it would copy the tensor
-    # buffer every sweep
+    pp0 = state.pp
+    use_pp = jnp.max(pp0.drift) < problem.pp_tol
+
     def _payload(st: SweepState):
-        return (st.factors, st.weights, st.fit, st.carry, st.grams, st.pp)
+        return (st.factors, st.weights, st.fit, st.carry, st.grams)
 
     def exact_branch(payload):
-        st = _with_payload(state, payload)
-        out = _exact_sweep(problem, plan, executor, st)
-        # rebuild the cache only when this sweep's own step settled under
-        # the tolerance -- i.e. the next sweeps would actually stay in the
-        # PP regime.  During the early large-step phase the build would be
-        # invalidated immediately, so keep the stale cache (drift = inf
-        # keeps routing through this exact branch) and pay nothing extra.
-        step = _pp_drift(out.factors, st.factors)
-
-        def build(pp):
-            return _pp_materialize(
-                problem, executor, out.x, out.factors, pp.n_exact + 1
-            )
-
-        def stale(pp):
-            return PPState(
-                ref=pp.ref, pairs=pp.pairs, base=pp.base,
-                drift=jnp.full_like(pp.drift, jnp.inf),
-                n_exact=pp.n_exact + 1,
-            )
-
-        pp = jax.lax.cond(jnp.max(step) < problem.pp_tol, build, stale, st.pp)
-        return _payload(out)[:-1] + (pp,)
+        out = _exact_sweep(problem, plan, executor, _with_payload(state, payload))
+        return _payload(out)
 
     def pp_branch(payload):
-        return _payload(_pp_sweep(problem, plan, _with_payload(state, payload)))
+        out = _pp_sweep(problem, plan, _with_payload(state, payload))
+        return _payload(out)
 
-    payload = jax.lax.cond(
-        jnp.max(state.pp.drift) < problem.pp_tol,
-        pp_branch, exact_branch, _payload(state),
+    payload = jax.lax.cond(use_pp, pp_branch, exact_branch, _payload(state))
+    new_factors = list(payload[0])
+
+    # rebuild the cache only when an exact sweep's own step settled under
+    # the tolerance -- i.e. the next sweeps would actually stay in the PP
+    # regime.  During the early large-step phase the build would be
+    # invalidated immediately, so keep the stale cache (drift = inf keeps
+    # routing through the exact branch) and pay nothing extra.
+    step = _pp_drift(new_factors, state.factors)
+    rebuild = jnp.logical_and(
+        jnp.logical_not(use_pp), jnp.max(step) < problem.pp_tol
     )
-    return _with_payload(state, payload)
+
+    def build(_):
+        new = _pp_materialize(problem, executor, state.x, new_factors, 0)
+        return (new.ref, new.pairs, new.base)
+
+    def keep(_):
+        return (pp0.ref, pp0.pairs, pp0.base)
+
+    ref, pairs, base = jax.lax.cond(rebuild, build, keep, None)
+    # drift after the sweep: vs the (kept) reference on approximate sweeps
+    # (what _pp_sweep refreshes), exactly zero right after a rebuild (the
+    # reference IS the fresh iterate), +inf while the cache is stale.
+    drift = jnp.where(
+        use_pp,
+        _pp_drift(new_factors, pp0.ref),
+        jnp.where(
+            rebuild,
+            jnp.zeros_like(pp0.drift),
+            jnp.full_like(pp0.drift, jnp.inf),
+        ),
+    )
+    n_exact = pp0.n_exact + jnp.where(use_pp, 0, 1).astype(pp0.n_exact.dtype)
+    out = _with_payload(state, payload)
+    return SweepState(
+        x=out.x, factors=out.factors, weights=out.weights, norm_x=out.norm_x,
+        it=out.it, fit=out.fit, carry=out.carry, grams=out.grams,
+        pp=PPState(ref=ref, pairs=pairs, base=base, drift=drift, n_exact=n_exact),
+    )
 
 
 def legacy_sweep(

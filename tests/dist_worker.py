@@ -46,6 +46,26 @@ def case_dist_mttkrp():
     print("dist_mttkrp OK")
 
 
+def case_matrix_free_sharded():
+    """Matrix-free kernel inside the shard_map local contraction == einsum
+    oracle: each worker streams its natural-layout shard through the Pallas
+    kernel (interpret mode on CPU) and the psum stitches the full MTTKRP."""
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    x = random_tensor(jax.random.PRNGKey(3), (8, 6, 4, 5))
+    factors = random_factors(jax.random.PRNGKey(4), x.shape, 7)
+    mode_axes = {0: "data", 2: "model"}
+    xs, fs = shard_problem(x, factors, mode_axes, mesh)
+    tiles = {"block_i": 4, "block_r": 2}
+    for n in range(4):
+        out = dist_mttkrp(xs, fs, n, mode_axes, mesh, method="matrix_free", tiles=tiles)
+        ref = mttkrp_einsum(x, factors, n)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=5e-4, atol=5e-4, err_msg=f"mode {n}"
+        )
+    print("matrix_free_sharded OK")
+
+
 def case_dist_cpals():
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     key = jax.random.PRNGKey(2)
@@ -391,6 +411,7 @@ def case_pp_sharded():
 if __name__ == "__main__":
     {
         "dist_mttkrp": case_dist_mttkrp,
+        "matrix_free_sharded": case_matrix_free_sharded,
         "dist_cpals": case_dist_cpals,
         "dist_dimtree": case_dist_dimtree,
         "elastic_restore": case_elastic_restore,

@@ -84,9 +84,12 @@ def test_lookup_resolves_entry_fields(tuned_cache):
     problem = Problem(shape=SHAPE, rank=RANK)
     m = lookup_measurements(problem, cache)
     assert m is not None
-    assert set(m.tiles) == {"fused_mttkrp", "multi_ttv"}
+    assert set(m.tiles) == {"fused_mttkrp", "matrix_free", "multi_ttv"}
     assert set(m.kernel_tiles("fused_mttkrp")) == {
         "block_i", "block_b", "block_batch",
+    }
+    assert set(m.kernel_tiles("matrix_free")) == {
+        "block_i", "block_r", "block_batch",
     }
     # every stored node row resolves through the node_s map
     assert len(m.node_s) == len(entry["nodes"]) > 0

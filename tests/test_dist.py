@@ -31,6 +31,11 @@ def test_dist_mttkrp_all_modes():
     assert "dist_mttkrp OK" in out
 
 
+def test_matrix_free_sharded_matches_einsum():
+    out = _run("matrix_free_sharded")
+    assert "matrix_free_sharded OK" in out
+
+
 def test_dist_cpals_recovers_planted():
     out = _run("dist_cpals")
     assert "dist_cpals OK" in out

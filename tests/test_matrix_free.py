@@ -1,0 +1,118 @@
+"""Matrix-free Pallas MTTKRP vs the jnp oracle, every mode of orders 3-6.
+
+The kernel streams natural-layout tensor blocks (no matricization, no KRP)
+and folds factors in VMEM; these tests pin it to ``fused_mttkrp_ref`` at
+HIGHEST precision across the full (order, mode, batch) grid the planner
+offers it for, in interpret mode on CPU.  Block sizes are chosen small so
+multi-block grids, revisited output blocks, and padding all execute.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest  # noqa: F401  (parametrize marks below)
+
+from conftest import given, settings, st  # shared optional-dep shim
+
+from repro.core import random_factors, random_tensor
+from repro.kernels import ops, ref
+
+# one representative shape per order, odd dims so padding paths run
+SHAPES = {
+    3: (10, 8, 12),
+    4: (6, 5, 8, 4),
+    5: (4, 6, 5, 3, 4),
+    6: (3, 4, 3, 3, 4, 3),
+}
+
+
+def _problem(shape, c, seed=0):
+    kx, kf = jax.random.split(jax.random.PRNGKey(seed))
+    return random_tensor(kx, shape), random_factors(kf, shape, c)
+
+
+def _batched_problem(shape, c, s, seed=0):
+    kx, kf = jax.random.split(jax.random.PRNGKey(seed))
+    x = random_tensor(kx, (s,) + shape)
+    keys = jax.random.split(kf, s)
+    fs = [
+        jnp.stack([random_factors(keys[b], shape, c)[k] for b in range(s)])
+        for k in range(len(shape))
+    ]
+    return x, fs
+
+
+@pytest.mark.parametrize("order", sorted(SHAPES))
+def test_matrix_free_all_modes(order):
+    shape = SHAPES[order]
+    x, factors = _problem(shape, 7, seed=order)
+    for n in range(order):
+        out = np.asarray(ops.matrix_free_mttkrp(x, factors, n, block_i=4, block_r=2))
+        want = np.asarray(ref.fused_mttkrp_ref(x, factors, n))
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4, err_msg=f"mode {n}")
+
+
+@pytest.mark.parametrize("order", sorted(SHAPES))
+@pytest.mark.parametrize("s", [1, 4])
+def test_matrix_free_batched_all_modes(order, s):
+    shape = SHAPES[order]
+    x, factors = _batched_problem(shape, 5, s, seed=10 + order)
+    for n in range(order):
+        out = np.asarray(
+            ops.matrix_free_mttkrp_batched(
+                x, factors, n, block_i=4, block_r=2, block_batch=2
+            )
+        )
+        want = np.asarray(
+            jax.vmap(lambda xb, *fb, n=n: ref.fused_mttkrp_ref(xb, fb, n))(x, *factors)
+        )
+        np.testing.assert_allclose(
+            out, want, rtol=1e-4, atol=1e-4, err_msg=f"mode {n} batch {s}"
+        )
+
+
+def test_matrix_free_rank_one_and_default_blocks():
+    # rank 1 (degenerate KRP) and the default tile stamps both hold
+    x, factors = _problem((9, 7, 5, 6), 1, seed=3)
+    for n in range(4):
+        out = np.asarray(ops.matrix_free_mttkrp(x, factors, n))
+        want = np.asarray(ref.fused_mttkrp_ref(x, factors, n))
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4, err_msg=f"mode {n}")
+
+
+def test_matrix_free_rejects_unsupported_orders():
+    x, factors = _problem((8, 6), 3, seed=5)
+    with pytest.raises(ValueError):
+        ops.matrix_free_mttkrp(x, factors, 0)
+
+
+def test_matrix_free_via_core_dispatch():
+    # method="matrix_free" through core.mttkrp threads tiles into the kernel
+    from repro.core import mttkrp
+
+    x, factors = _problem((8, 9, 6, 5), 4, seed=6)
+    for n in range(4):
+        out = np.asarray(
+            mttkrp(x, factors, n, method="matrix_free", tiles={"block_i": 4, "block_r": 2})
+        )
+        want = np.asarray(ref.fused_mttkrp_ref(x, factors, n))
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4, err_msg=f"mode {n}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    order=st.integers(3, 6),
+    c=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_matrix_free_property(order, c, seed, data):
+    shape = tuple(
+        data.draw(st.integers(2, 9 if order <= 4 else 5)) for _ in range(order)
+    )
+    n = data.draw(st.integers(0, order - 1))
+    x, factors = _problem(shape, c, seed=seed)
+    out = np.asarray(ops.matrix_free_mttkrp(x, factors, n, block_i=4, block_r=2))
+    want = np.asarray(ref.fused_mttkrp_ref(x, factors, n))
+    scale = max(1.0, float(np.abs(want).max()))
+    np.testing.assert_allclose(out / scale, want / scale, rtol=1e-4, atol=1e-5)

@@ -219,6 +219,74 @@ def test_pp_correction_error_is_second_order():
     assert 3.0 < e1 / e2 < 5.0  # quadratic: halving eps quarters the error
 
 
+def test_pp_gate_restricted_carry_bitwise_iterates():
+    """The PP gate carries only the sweep-mutable payload (the pair cache
+    crosses a single rebuild cond instead of riding the per-sweep gate);
+    this must not change a single bit: drive the same problem with the
+    cond-gated ``als_sweep`` and with a reference loop that picks the
+    exact/approximate/rebuild phases in host Python from the same drift
+    quantities, and compare every sweep's iterates bitwise."""
+    from dataclasses import replace as dc_replace
+
+    from repro.core import cp_full, random_factors, random_tensor, tensor_norm
+    from repro.plan import LocalExecutor, Problem, SweepState, als_sweep, plan_sweep
+    from repro.plan import sweep as sweeplib
+
+    shape, rank, n_sweeps = (10, 8, 6), 3, 16
+    true = random_factors(jax.random.PRNGKey(40), shape, rank)
+    x = cp_full(None, true) + 1e-3 * random_tensor(jax.random.PRNGKey(41), shape)
+    init = random_factors(jax.random.PRNGKey(42), shape, rank)
+    problem = Problem(shape=shape, rank=rank, pp_tol=0.08)
+    plan = plan_sweep(problem, strategy="pp")
+    ex = LocalExecutor()
+
+    def initial_state():
+        return SweepState(
+            x=x, factors=list(init), weights=jnp.ones((rank,), x.dtype),
+            norm_x=tensor_norm(x).astype(x.dtype), it=jnp.asarray(0),
+            grams=sweeplib.grams(init), pp=sweeplib._pp_init(problem, x, init),
+        )
+
+    gated = initial_state()
+    ref = initial_state()
+    saw_pp = saw_exact = False
+    for _ in range(n_sweeps):
+        gated = als_sweep(problem, plan, ex, gated)
+
+        # reference: the same phases, chosen by host control flow
+        use_pp = bool(np.max(np.asarray(ref.pp.drift)) < problem.pp_tol)
+        saw_pp |= use_pp
+        saw_exact |= not use_pp
+        if use_pp:
+            ref = sweeplib._pp_sweep(problem, plan, ref)
+        else:
+            out = sweeplib._exact_sweep(problem, plan, ex, ref)
+            step = sweeplib._pp_drift(out.factors, ref.factors)
+            if float(jnp.max(step)) < problem.pp_tol:
+                pp = sweeplib._pp_materialize(
+                    problem, ex, out.x, out.factors, ref.pp.n_exact + 1
+                )
+            else:
+                pp = sweeplib.PPState(
+                    ref=ref.pp.ref, pairs=ref.pp.pairs, base=ref.pp.base,
+                    drift=jnp.full_like(ref.pp.drift, jnp.inf),
+                    n_exact=ref.pp.n_exact + 1,
+                )
+            ref = dc_replace(out, pp=pp)
+
+        assert int(gated.pp.n_exact) == int(ref.pp.n_exact)
+        assert np.array_equal(np.asarray(gated.weights), np.asarray(ref.weights))
+        for fa, fb in zip(gated.factors, ref.factors):
+            assert np.array_equal(np.asarray(fa), np.asarray(fb))
+        assert np.array_equal(
+            np.asarray(gated.pp.drift), np.asarray(ref.pp.drift)
+        )
+        gated = dc_replace(gated, it=gated.it + 1)
+        ref = dc_replace(ref, it=ref.it + 1)
+    # the run actually exercised both regimes, or the comparison is vacuous
+    assert saw_pp and saw_exact
+
+
 def test_pp_final_fit_matches_exact():
     """On a planted low-rank tensor a PP run (mostly approximated sweeps)
     converges to the same fit as exact ALS, while actually skipping exact
