@@ -46,6 +46,15 @@ exact-sweep fraction (``CPState.pp_exact_sweeps / n_iters``) next to the
 planner's ``PP_EXACT_FRACTION`` assumption, and the fit gap.  The first
 CPU-smoke baseline is committed in-tree as ``benchmarks/BENCH_pp.json``.
 
+``--hierarchical`` adds a ``hierarchical`` section on a 2x4 node mesh:
+per mode, the modeled intra/inter bytes and predicted seconds of the flat
+ring vs the two-level reduce-scatter/psum/all-gather decomposition, the
+Ballard-Knight-Rouse communication lower bound with the planner's
+mesh-mapping rows and ``certified`` verdict, and -- when 8 devices are
+attached -- measured flat-vs-hierarchical ``dist_mttkrp`` seconds.  The
+first CPU-smoke baseline is committed in-tree as
+``benchmarks/BENCH_hierarchical.json``.
+
     PYTHONPATH=src python -m benchmarks.bench_mttkrp --smoke --calibrate \
         --autotune --budget-ms 2000 --json out.json
 """
@@ -90,6 +99,13 @@ SCHEDULE_RANK = 8
 BATCHED_SHAPE = (16, 16, 16)
 BATCHED_RANK = 8
 BATCHED_ITERS = 3
+
+# hierarchical section: the CI node mesh -- 2 nodes x 4 devices, mode 0 on
+# the inter-node axis, mode 2 on the fast intra-node axis
+HIER_SHAPE = (8, 6, 4, 5)
+HIER_RANK = 7
+HIER_NODES = 2
+HIER_DEVICES_PER_NODE = 4
 
 # pp section: big enough that the correction sweep's O(sum I_n*I_m*C) work
 # is clearly cheaper than the exact MTTKRP's O(prod I * C); a planted
@@ -407,6 +423,92 @@ def pp_section(reps: int) -> dict:
     }
 
 
+def hierarchical_section(reps: int) -> dict:
+    """Flat vs hierarchical collectives per mode: measured ms + modeled bytes.
+
+    Plans the order-4 problem on the two-level ``(2 nodes x 4 devices)``
+    mesh with ``intra_axes=("device",)`` and records, per mode, the cost
+    model's intra/inter byte split under both collectives, the planner's
+    per-node pick, the per-mode Ballard-Knight-Rouse lower-bound term, and
+    -- when the runtime has the matching 8-device mesh -- the measured
+    flat-vs-hierarchical ``dist_mttkrp`` milliseconds head-to-head.  The
+    section also carries the plan-level certification verdict and the
+    mapping-enumeration rows straight from ``SweepPlan.describe()``.
+    """
+    from repro.dist.dist_mttkrp import dist_mttkrp, shard_problem
+    from repro.plan import mode_cost
+
+    n_dev = jax.device_count()
+    mode_axes = {0: "node", 2: "device"}
+    problem = Problem(
+        shape=HIER_SHAPE, rank=HIER_RANK, mode_axes=mode_axes,
+        axis_sizes={"node": HIER_NODES, "device": HIER_DEVICES_PER_NODE},
+        intra_axes=("device",),
+    )
+    # flat schedule: per-MODE rows, one leaf per mode (tree shapes would
+    # interleave partial contractions into the comparison)
+    plan = plan_sweep(problem, executor="auto", schedule="flat")
+    desc = plan.describe()
+    rows = []
+    for np_ in plan.nodes:
+        n = np_.node.mode
+        flat_c = mode_cost(problem, n, np_.algorithm)
+        hier_c = mode_cost(problem, n, np_.algorithm, collective="hierarchical")
+        rows.append({
+            "mode": n,
+            "algorithm": np_.algorithm,
+            "collective": np_.collective,  # the planner's per-node pick
+            "lower_bound_bytes": np_.lower_bound_bytes,
+            "flat": {
+                "intra_bytes": flat_c.intra_bytes,
+                "inter_bytes": flat_c.inter_bytes,
+                "predicted_s": flat_c.predicted_s,
+                "measured_s": None,
+            },
+            "hierarchical": {
+                "intra_bytes": hier_c.intra_bytes,
+                "inter_bytes": hier_c.inter_bytes,
+                "predicted_s": hier_c.predicted_s,
+                "measured_s": None,
+            },
+        })
+    measured = n_dev == HIER_NODES * HIER_DEVICES_PER_NODE
+    if measured:
+        from repro.launch.mesh import make_node_mesh
+
+        mesh = make_node_mesh(HIER_NODES, HIER_DEVICES_PER_NODE)
+        x = random_tensor(jax.random.PRNGKey(14), HIER_SHAPE)
+        factors = random_factors(jax.random.PRNGKey(15), HIER_SHAPE, HIER_RANK)
+        xs, fs = shard_problem(x, factors, mode_axes, mesh)
+        for r in rows:
+            n = r["mode"]
+            r["flat"]["measured_s"] = time_fn(
+                jax.jit(lambda t, fl, m=n: dist_mttkrp(t, fl, m, mode_axes, mesh)),
+                xs, fs, reps=reps,
+            )["median_s"]
+            r["hierarchical"]["measured_s"] = time_fn(
+                jax.jit(
+                    lambda t, fl, m=n: dist_mttkrp(
+                        t, fl, m, mode_axes, mesh,
+                        collective="hierarchical", node_axis="device",
+                    )
+                ),
+                xs, fs, reps=reps,
+            )["median_s"]
+    return {
+        "shape": list(HIER_SHAPE),
+        "rank": HIER_RANK,
+        "mesh": {"nodes": HIER_NODES, "devices_per_node": HIER_DEVICES_PER_NODE},
+        "mode_axes": {str(k): v for k, v in mode_axes.items()},
+        "measured": measured,
+        "executor": plan.executor,
+        "lower_bound_bytes": desc["lower_bound_bytes"],
+        "certified": desc["certified"],
+        "mappings": desc["mappings"],
+        "modes": rows,
+    }
+
+
 def calibrate_serial_fractions(overlap: dict) -> dict:
     """Fit per-executor ``serial_fraction`` from measured overlap rows.
 
@@ -520,6 +622,7 @@ def collect(
     tuning_cache: str | None = None,
     batch: int = 0,
     pp: bool = False,
+    hierarchical: bool = False,
 ) -> dict:
     """Measure all shapes; returns {"plans": [...], "results": [...]}."""
     if full and smoke:
@@ -618,6 +721,19 @@ def collect(
                 f"amortized_ms={bt['batch_parallel']['amortized_ms_per_problem']:.3f}",
             )
         data["batched"] = bt
+    if hierarchical:
+        hs = hierarchical_section(reps)
+        for r in hs["modes"]:
+            if r["hierarchical"]["measured_s"] is not None:
+                rec(
+                    f"dist_mttkrp_hier_mode{r['mode']}",
+                    r["hierarchical"]["measured_s"],
+                    f"flat_s={r['flat']['measured_s']:.3e};"
+                    f"picked={r['collective']};"
+                    f"inter_bytes={r['hierarchical']['inter_bytes']:.0f}"
+                    f"_vs_{r['flat']['inter_bytes']:.0f}",
+                )
+        data["hierarchical"] = hs
     if pp:
         ps = pp_section(reps)
         rec(
@@ -706,6 +822,10 @@ def main() -> None:
                     help="time a >=20-sweep exact-vs-pairwise-perturbation "
                          "cp_als run (amortized per-sweep seconds, measured "
                          "exact-sweep fraction, fit gap)")
+    ap.add_argument("--hierarchical", action="store_true",
+                    help="price + (on an 8-device mesh) time flat vs "
+                         "hierarchical two-level collectives per mode, with "
+                         "the BKR lower bound and mapping certification")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write measurements + SweepPlan.describe() as JSON")
     args = ap.parse_args()
@@ -713,6 +833,7 @@ def main() -> None:
         full=args.full, smoke=args.smoke, calibrate=args.calibrate,
         autotune=args.autotune, budget_ms=args.budget_ms,
         tuning_cache=args.tuning_cache, batch=args.batch, pp=args.pp,
+        hierarchical=args.hierarchical,
     )
     for r in data["results"]:
         print(row(r["name"], r["median_s"], r["derived"]))

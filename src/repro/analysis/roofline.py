@@ -34,6 +34,11 @@ import numpy as np
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
+# Nominal inter-node (DCN / host network) bandwidth per device, for two-level
+# meshes: 4x slower than the intra-node ICI links, which is what makes the
+# hierarchical psum (reduce-scatter on ICI, cross-node exchange on the 1/k
+# shard, all-gather back) worth its extra intra-node hops.
+DCN_BW = 12.5e9
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

@@ -17,11 +17,21 @@ per schedule node (chunked for overlap via ``n_chunks``), and the
 collective.
 
 ``collectives``: bandwidth-reducing collectives (int8 quantized
-all-reduce with error feedback) and the data-parallel train step built
-on them.
+all-reduce with error feedback), hierarchical two-level collectives
+(``hierarchical_psum`` = ``reduce_scatter`` within the node +
+cross-node psum of the shard + ``all_gather`` back, so only ``1/k`` of
+each block crosses the slow inter-node level), and the data-parallel
+train step built on them.
 """
 
-from .collectives import compressed_psum, init_error_state, make_compressed_dp_step
+from .collectives import (
+    all_gather,
+    compressed_psum,
+    hierarchical_psum,
+    init_error_state,
+    make_compressed_dp_step,
+    reduce_scatter,
+)
 from .dist_mttkrp import (
     dist_als_sweep,
     dist_contract_partial,
@@ -38,9 +48,12 @@ from .dist_mttkrp import (
 )
 
 __all__ = [
+    "all_gather",
     "compressed_psum",
+    "hierarchical_psum",
     "init_error_state",
     "make_compressed_dp_step",
+    "reduce_scatter",
     "dist_als_sweep",
     "dist_contract_partial",
     "dist_contract_partial_compressed",

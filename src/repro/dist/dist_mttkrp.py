@@ -42,10 +42,47 @@ from repro.core.dimtree import contract_from_partial, partial_mttkrp_range
 from repro.core.mttkrp import Method, mttkrp, mttkrp_batched
 from repro.core.tensor_ops import mode_letters
 
-from .collectives import compressed_psum
+from .collectives import compressed_psum, hierarchical_psum
 
 Array = jax.Array
 ModeAxes = Mapping[int, str]
+
+# Collective strategies the node psum can complete with: "flat" is the plain
+# single-level psum; "hierarchical" is the two-level decomposition of
+# repro.dist.collectives.hierarchical_psum (reduce-scatter within the node
+# axis, cross-node psum of the shard, all-gather back).
+COLLECTIVES = ("flat", "hierarchical")
+
+
+def _validate_collective(collective: str) -> None:
+    if collective not in COLLECTIVES:
+        raise ValueError(
+            f"unknown collective {collective!r} (choose from {COLLECTIVES})"
+        )
+
+
+def _node_psum(
+    m: Array,
+    reduce_axes: tuple[str, ...],
+    mesh: Mesh,
+    collective: str,
+    node_axis: str | None,
+    *,
+    scatter_axis: int = 0,
+) -> Array:
+    """Complete one node contraction's reduction over ``reduce_axes``.
+
+    ``collective="hierarchical"`` routes through
+    :func:`repro.dist.collectives.hierarchical_psum` with ``node_axis`` as
+    the intra-node level (falling back to the flat psum whenever the
+    decomposition cannot apply); ``"flat"`` is the classic single psum.
+    """
+    _validate_collective(collective)
+    if collective == "hierarchical":
+        return hierarchical_psum(
+            m, reduce_axes, mesh, node_axis=node_axis, scatter_axis=scatter_axis
+        )
+    return jax.lax.psum(m, reduce_axes)
 
 # default chunk count of the overlapped psum pipeline; the canonical knob
 # the planner uses is repro.plan.cost.DEFAULT_OVERLAP_CHUNKS (same value --
@@ -186,6 +223,8 @@ def dist_mttkrp(
     tiles: Mapping[str, int] | None = None,
     *,
     batch_axes: Sequence[str] = (),
+    collective: str = "flat",
+    node_axis: str | None = None,
 ) -> Array:
     """Mode-``n`` MTTKRP of a block-distributed tensor.
 
@@ -196,12 +235,19 @@ def dist_mttkrp(
     over ``mode_axes[n]`` (replicated if mode ``n`` is unmapped) -- the
     sharding of the factor it updates in ALS.
 
+    ``collective="hierarchical"`` completes the reduction with
+    :func:`repro.dist.collectives.hierarchical_psum` instead of the flat
+    psum: reduce-scatter within ``node_axis`` (the intra-node mesh axis),
+    cross-node psum of the ``1/k`` shard, all-gather back -- same value up
+    to summation order, a factor-``k`` less volume on the slow level.
+
     When ``x`` carries a leading batch axis (``x.ndim == len(factors) + 1``),
     the batch is sharded over ``batch_axes`` and each device runs the
     batched local kernel on its slab of whole problems; the psum pattern is
     untouched -- batch axes are never reduced (problems are independent),
     which is exactly why batch-parallel placement costs zero reduce traffic.
     """
+    _validate_collective(collective)
     batched = x.ndim == len(factors) + 1
     shape = x.shape[1:] if batched else x.shape
     _validate(shape, mode_axes, mesh)
@@ -209,6 +255,7 @@ def dist_mttkrp(
         _validate_batch(x.shape[0], batch_axes, mode_axes, mesh)
     reduce_axes = _reduce_axes(mode_axes, keep_modes=(n,))
     order = len(shape)
+    lead = 1 if batched else 0
     entry = _batch_entry(batch_axes)
 
     def local_fn(x_blk, *f_blks):
@@ -217,7 +264,9 @@ def dist_mttkrp(
         else:
             m = mttkrp(x_blk, list(f_blks), n, method=method, tiles=tiles)
         if reduce_axes:
-            m = jax.lax.psum(m, reduce_axes)
+            m = _node_psum(
+                m, reduce_axes, mesh, collective, node_axis, scatter_axis=lead
+            )
         return m
 
     fn = compat.shard_map(
@@ -326,6 +375,8 @@ def dist_mttkrp_overlapped(
     tiles: Mapping[str, int] | None = None,
     *,
     batch_axes: Sequence[str] = (),
+    collective: str = "flat",
+    node_axis: str | None = None,
 ) -> Array:
     """Mode-``n`` MTTKRP with the completing psum hidden behind the GEMMs.
 
@@ -344,7 +395,12 @@ def dist_mttkrp_overlapped(
     (leading batch axis, sharded over ``batch_axes``) chunk along mode
     ``n`` of every problem in the local slab -- the slab axis shifts by one
     but the pipeline structure is identical.
+
+    ``collective="hierarchical"`` completes each slab's reduction with the
+    two-level psum (slabs whose row count the ``node_axis`` size does not
+    divide fall back to the flat psum individually -- still exact).
     """
+    _validate_collective(collective)
     batched = x.ndim == len(factors) + 1
     shape = x.shape[1:] if batched else x.shape
     _validate(shape, mode_axes, mesh)
@@ -354,6 +410,7 @@ def dist_mttkrp_overlapped(
         return dist_mttkrp(
             x, factors, n, mode_axes, mesh,
             method=method, tiles=tiles, batch_axes=batch_axes,
+            collective=collective, node_axis=node_axis,
         )
     if batched:
         _validate_batch(x.shape[0], batch_axes, mode_axes, mesh)
@@ -374,7 +431,12 @@ def dist_mttkrp_overlapped(
             local_one(jax.lax.slice_in_dim(x_blk, i0, i1, axis=n + lead), f_blks)
             for i0, i1 in zip(bounds[:-1], bounds[1:])
         ]
-        reduced = [jax.lax.psum(p, reduce_axes) for p in partials]
+        reduced = [
+            _node_psum(
+                p, reduce_axes, mesh, collective, node_axis, scatter_axis=lead
+            )
+            for p in partials
+        ]
         return jnp.concatenate(reduced, axis=lead)
 
     fn = compat.shard_map(
@@ -430,6 +492,8 @@ def dist_mttkrp_compressed(
     tiles: Mapping[str, int] | None = None,
     *,
     batch_axes: Sequence[str] = (),
+    collective: str = "flat",
+    node_axis: str | None = None,
 ) -> tuple[Array, Array]:
     """Mode-``n`` MTTKRP completed by the int8 error-feedback collective.
 
@@ -446,7 +510,15 @@ def dist_mttkrp_compressed(
     Batched tensors thread a batched residual (global layout: reduce-axis
     leads, then the batch axis, then the output dims); the quantize /
     all-gather / dequant path is shape-agnostic, so nothing else changes.
+
+    ``collective="hierarchical"`` splits the levels around the compressor:
+    the ``node_axis`` (intra-node) reduction runs as an *exact* psum on the
+    fast links first, then only the cross-node exchange is quantized --
+    every device in a node compresses the identical node-sum, so the
+    residual layout and carry semantics are unchanged while the int8 wire
+    traffic spans ``m`` nodes instead of ``k * m`` devices.
     """
+    _validate_collective(collective)
     batched = x.ndim == len(factors) + 1
     shape = x.shape[1:] if batched else x.shape
     _validate(shape, mode_axes, mesh)
@@ -461,6 +533,16 @@ def dist_mttkrp_compressed(
         _validate_batch(x.shape[0], batch_axes, mode_axes, mesh)
     order = len(shape)
     entry = _batch_entry(batch_axes)
+    intra_first = (
+        collective == "hierarchical"
+        and node_axis in reduce_axes
+        and len(reduce_axes) > 1
+    )
+    gather_axes = (
+        tuple(a for a in reduce_axes if a != node_axis)
+        if intra_first
+        else reduce_axes
+    )
     if batched:
         err_spec = P(*reduce_axes, entry, mode_axes.get(n), None)
         out_spec = P(entry, mode_axes.get(n), None)
@@ -473,7 +555,9 @@ def dist_mttkrp_compressed(
             m = mttkrp_batched(x_blk, list(f_blks), n, method=method, tiles=tiles)
         else:
             m = mttkrp(x_blk, list(f_blks), n, method=method, tiles=tiles)
-        total, new_e = compressed_psum(m, reduce_axes, err_blk.reshape(m.shape))
+        if intra_first:
+            m = jax.lax.psum(m, (node_axis,))
+        total, new_e = compressed_psum(m, gather_axes, err_blk.reshape(m.shape))
         return total, new_e.reshape(err_blk.shape)
 
     fn = compat.shard_map(
@@ -521,6 +605,8 @@ def _dist_contract(
     n_chunks: int = 1,
     err: Array | None = None,
     batch_axes: Sequence[str] = (),
+    collective: str = "flat",
+    node_axis: str | None = None,
 ):
     """Shared core of the four per-node contraction entry points.
 
@@ -529,7 +615,11 @@ def _dist_contract(
     raw tensor, :func:`contract_from_partial` off a partial -- and
     completes it with this node's collective: per-slab psums along mode
     ``lo`` when exact (``err is None``), the int8 error-feedback
-    ``compressed_psum`` otherwise.
+    ``compressed_psum`` otherwise.  ``collective="hierarchical"`` swaps
+    each exact psum for the two-level decomposition around ``node_axis``
+    (reduce-scatter / cross-node psum / all-gather); the compressed path
+    runs the intra-node level as an exact psum first and quantizes only
+    the cross-node exchange.
 
     Batchedness is inferred from ``src.ndim`` (one extra leading axis over
     the unbatched shape for the node's topology); the local contraction is
@@ -537,6 +627,7 @@ def _dist_contract(
     factors, residual, output -- gains a leading ``batch_axes`` entry.
     Batch axes never appear in ``reduce_axes``: problems are independent.
     """
+    _validate_collective(collective)
     order = parent_hi - parent_lo
     expected = order if from_root else order + 1
     batched = src.ndim == expected + 1
@@ -585,20 +676,36 @@ def _dist_contract(
             return jax.vmap(one)(src_blk, *cf)
         return one(src_blk, *cf)
 
+    intra_first = (
+        collective == "hierarchical"
+        and node_axis in reduce_axes
+        and len(reduce_axes) > 1
+    )
+    gather_axes = (
+        tuple(a for a in reduce_axes if a != node_axis)
+        if intra_first
+        else reduce_axes
+    )
+
     def local_exact(src_blk, *cf):
         out = contract_local(src_blk, cf)
         if not reduce_axes:
             return out
         # slab axis = mode lo of the node output (shifted past the batch)
         slabs = [
-            jax.lax.psum(jax.lax.slice_in_dim(out, i0, i1, axis=lead), reduce_axes)
+            _node_psum(
+                jax.lax.slice_in_dim(out, i0, i1, axis=lead),
+                reduce_axes, mesh, collective, node_axis, scatter_axis=lead,
+            )
             for i0, i1 in zip(bounds[:-1], bounds[1:])
         ]
         return slabs[0] if len(slabs) == 1 else jnp.concatenate(slabs, axis=lead)
 
     def local_compressed(src_blk, err_blk, *cf):
         out = contract_local(src_blk, cf)
-        total, new_e = compressed_psum(out, reduce_axes, err_blk.reshape(out.shape))
+        if intra_first:
+            out = jax.lax.psum(out, (node_axis,))
+        total, new_e = compressed_psum(out, gather_axes, err_blk.reshape(out.shape))
         return total, new_e.reshape(err_blk.shape)
 
     contracted_factors = [factors[m] for m in contracted]
@@ -631,6 +738,8 @@ def dist_contract_range(
     *,
     n_chunks: int = 1,
     batch_axes: Sequence[str] = (),
+    collective: str = "flat",
+    node_axis: str | None = None,
 ) -> Array:
     """Distributed range contraction: every mode outside ``[lo, hi)`` of the
     block-distributed tensor is contracted with its (row-sharded) factor.
@@ -650,6 +759,7 @@ def dist_contract_range(
     return _dist_contract(
         x, factors, lo, hi, 0, order, mode_axes, mesh,
         from_root=True, n_chunks=n_chunks, batch_axes=batch_axes,
+        collective=collective, node_axis=node_axis,
     )
 
 
@@ -665,6 +775,8 @@ def dist_contract_partial(
     *,
     n_chunks: int = 1,
     batch_axes: Sequence[str] = (),
+    collective: str = "flat",
+    node_axis: str | None = None,
 ) -> Array:
     """Distributed partial-to-partial contraction of one schedule node.
 
@@ -682,6 +794,7 @@ def dist_contract_partial(
     return _dist_contract(
         t, factors, lo, hi, parent_lo, parent_hi, mode_axes, mesh,
         from_root=False, n_chunks=n_chunks, batch_axes=batch_axes,
+        collective=collective, node_axis=node_axis,
     )
 
 
@@ -695,6 +808,8 @@ def dist_contract_range_compressed(
     err: Array,
     *,
     batch_axes: Sequence[str] = (),
+    collective: str = "flat",
+    node_axis: str | None = None,
 ) -> tuple[Array, Array]:
     """:func:`dist_contract_range` with the node psum compressed.
 
@@ -718,6 +833,7 @@ def dist_contract_range_compressed(
     return _dist_contract(
         x, factors, lo, hi, 0, order, mode_axes, mesh,
         from_root=True, err=err, batch_axes=batch_axes,
+        collective=collective, node_axis=node_axis,
     )
 
 
@@ -733,6 +849,8 @@ def dist_contract_partial_compressed(
     err: Array,
     *,
     batch_axes: Sequence[str] = (),
+    collective: str = "flat",
+    node_axis: str | None = None,
 ) -> tuple[Array, Array]:
     """:func:`dist_contract_partial` with the node psum compressed.
 
@@ -752,6 +870,7 @@ def dist_contract_partial_compressed(
     return _dist_contract(
         t, factors, lo, hi, parent_lo, parent_hi, mode_axes, mesh,
         from_root=False, err=err, batch_axes=batch_axes,
+        collective=collective, node_axis=node_axis,
     )
 
 

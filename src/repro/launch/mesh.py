@@ -81,6 +81,27 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     return compat.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
 
 
+def make_node_mesh(
+    nodes: int, devices_per_node: int, *, axis_names: tuple[str, str] = ("node", "device")
+) -> Mesh:
+    """Two-level ``(nodes, devices_per_node)`` mesh for hierarchical collectives.
+
+    Axis ``axis_names[0]`` (default ``"node"``) spans the *nodes* -- the
+    slow-DCN level a flat ring would drag full blocks across -- and
+    ``axis_names[1]`` (default ``"device"``) spans the devices within one
+    node (the fast-ICI level ``repro.dist.collectives.hierarchical_psum``
+    reduce-scatters over).  On real multi-host hardware the device order of
+    ``jax.devices()`` already groups by process, so consecutive blocks of
+    ``devices_per_node`` land on one host; on the CI fake-device backend the
+    grouping is synthetic but exercises the identical collective structure.
+    Declare the intra level to the planner via
+    ``Problem(intra_axes=(axis_names[1],))``.
+    """
+    return compat.make_mesh(
+        (int(nodes), int(devices_per_node)), tuple(axis_names), axis_types=_auto(2)
+    )
+
+
 @contextlib.contextmanager
 def use_mesh(mesh: Mesh):
     token = _MESH.set(mesh)

@@ -36,6 +36,16 @@ The solver API redesigned around four pieces:
   ``SweepPlan.describe()`` and tuned tiles onto ``NodePlan.tiles``),
   falling back to the analytic model everywhere else.
 
+* Two-level collectives (Ballard/Knight/Rouse, arXiv 1708.07401): problems
+  built with ``intra_axes`` declare a fast intra-node level of the mesh;
+  the cost model then prices each node psum's intra/inter traffic
+  separately (:func:`collective_level_bytes`), the planner picks flat vs
+  hierarchical per node (:func:`hierarchical_applicable` gates it),
+  enumerates alternative mode->axis mappings, and certifies the winner
+  against the per-node communication lower bound
+  (:func:`mttkrp_comm_lower_bound`) -- stamped as
+  ``SweepPlan.certified_bandwidth_optimal``.
+
 * Pairwise perturbation (Ma & Solomonik, arXiv 2010.12056):
   ``Problem(pp_tol > 0)`` opts a problem into approximate sweeps that
   reuse cached pairwise intermediates (:func:`pp_pairs` describes them,
@@ -67,10 +77,13 @@ from .cost import (
     EXECUTORS,
     PP_EXACT_FRACTION,
     ModeCost,
+    collective_level_bytes,
     compressed_allgather_bytes,
     dimtree_mode_cost,
     executor_mode_cost,
+    hierarchical_applicable,
     mode_cost,
+    mttkrp_comm_lower_bound,
     node_cost,
     pp_amortized_cost,
     pp_build_cost,
@@ -137,6 +150,7 @@ __all__ = [
     "binary_schedule",
     "build_schedule",
     "chain_schedule",
+    "collective_level_bytes",
     "compressed_allgather_bytes",
     "cp_als",
     "default_tuning_cache",
@@ -144,10 +158,12 @@ __all__ = [
     "enumerate_schedules",
     "executor_mode_cost",
     "flat_schedule",
+    "hierarchical_applicable",
     "legacy_sweep",
     "lookup_measurements",
     "make_executor",
     "mode_cost",
+    "mttkrp_comm_lower_bound",
     "node_cost",
     "plan_sweep",
     "pp_amortized_cost",

@@ -124,20 +124,28 @@ def problem_key(
     return problem.signature(backend=backend, n_devices=n_devices)
 
 
-def node_key(node: ContractionNode, algorithm: str, executor: str) -> str:
+def node_key(
+    node: ContractionNode, algorithm: str, executor: str, collective: str = "flat"
+) -> str:
     """Measurement key of one schedule node's contraction.
 
     Keys on the contraction itself -- executor kind, algorithm, kept range,
     parent range, and whether the source is the raw tensor -- not on the
     schedule it appeared in, so identical nodes shared by several candidate
     trees (e.g. a root leaf present in both the flat and a binary schedule)
-    are measured once and recognized everywhere.
+    are measured once and recognized everywhere.  Hierarchical-collective
+    measurements append a ``|coll=hierarchical`` field; flat keys keep the
+    historical layout so entries tuned before two-level collectives existed
+    keep resolving.
     """
     src = "root" if node.from_root else "partial"
-    return (
+    key = (
         f"{executor}|{algorithm}|{src}|keep={node.lo}:{node.hi}"
         f"|parent={node.parent_lo}:{node.parent_hi}"
     )
+    if collective != "flat":
+        key += f"|coll={collective}"
+    return key
 
 
 @dataclass(frozen=True)
@@ -161,10 +169,16 @@ class Measurements:
     pp: Mapping[str, float] = field(default_factory=dict)
 
     def node_time(
-        self, node: ContractionNode, algorithm: str, executor: str
+        self,
+        node: ContractionNode,
+        algorithm: str,
+        executor: str,
+        collective: str = "flat",
     ) -> float | None:
-        """Measured seconds for one node contraction, ``None`` if unmeasured."""
-        return self.node_s.get(node_key(node, algorithm, executor))
+        """Measured seconds for one node contraction under one collective
+        decomposition (``"flat"`` / ``"hierarchical"``), ``None`` if
+        unmeasured."""
+        return self.node_s.get(node_key(node, algorithm, executor, collective))
 
     def kernel_tiles(self, kernel: str) -> dict[str, int] | None:
         """Tuned tile config for one kernel name, ``None`` if untuned."""
@@ -462,10 +476,15 @@ def _tune_nodes(
     Root leaves are measured under every competing algorithm -- ``fused``
     with ``fused_tiles`` and ``matrix_free`` with ``matrix_free_tiles``
     (the already-tuned tilings), so the argmin times exactly the
-    configuration the resulting plan will execute.  Stops
+    configuration the resulting plan will execute.  On two-level problems
+    (``Problem.intra_axes``) every node whose reduction spans both levels
+    is additionally measured under ``collective="hierarchical"``, so the
+    planner's per-node flat-vs-hierarchical pick argmins over measured
+    head-to-head times rather than modeled bandwidths.  Stops
     cleanly when ``budget`` runs out -- unmeasured nodes simply keep their
     analytic costs at plan time.
     """
+    from .cost import hierarchical_applicable  # lazy: cost imports schedule
     from .executor import make_executor  # lazy: avoids an import cycle
     from .planner import plan_sweep
     from .schedule import enumerate_schedules
@@ -479,7 +498,7 @@ def _tune_nodes(
     rows: list[dict] = []
     seen: set[str] = set()
     for kind in kinds:
-        ex = make_executor(kind, mesh, mode_axes)
+        ex = make_executor(kind, mesh, mode_axes, node_axis=problem.node_axis)
         xs, fs = ex.prepare(problem, x, list(factors))
         for sched in schedules:
             plan = plan_sweep(problem, schedule=sched, executor=kind)
@@ -495,9 +514,14 @@ def _tune_nodes(
                     if node.from_root and node.is_leaf
                     else (planned,)
                 )
+                colls = (
+                    ("flat", "hierarchical")
+                    if kind != "local"
+                    and hierarchical_applicable(problem, node.reduce_axes)
+                    else ("flat",)
+                )
                 out = None
                 for alg in algs:
-                    key = node_key(node, alg, kind)
                     if alg == "fused":
                         tl = fused_tiles
                     elif alg == "matrix_free":
@@ -505,48 +529,58 @@ def _tune_nodes(
                     else:
                         tl = None
                     run_out = None
-                    if carry is not None:
-                        fn = jax.jit(
-                            lambda s, f, c, node=node, alg=alg, tl=tl: ex.contract_carry(
-                                node, s, f, alg, c, tiles=tl
+                    for coll in colls:
+                        key = node_key(node, alg, kind, coll)
+                        if carry is not None:
+                            fn = jax.jit(
+                                lambda s, f, c, node=node, alg=alg, tl=tl, coll=coll: (
+                                    ex.contract_carry(
+                                        node, s, f, alg, c, tiles=tl, collective=coll
+                                    )
+                                )
                             )
-                        )
-                        if key not in seen and not budget.exhausted():
-                            seen.add(key)
-                            rows.append(
-                                {
-                                    "key": key,
-                                    "executor": kind,
-                                    "algorithm": alg,
-                                    "schedule": sched.name,
-                                    "node": node.id,
-                                    "measured_s": _time(
-                                        lambda: fn(src, fs, carry)[0], reps
-                                    ),
-                                }
+                            if key not in seen and not budget.exhausted():
+                                seen.add(key)
+                                rows.append(
+                                    {
+                                        "key": key,
+                                        "executor": kind,
+                                        "algorithm": alg,
+                                        "collective": coll,
+                                        "schedule": sched.name,
+                                        "node": node.id,
+                                        "measured_s": _time(
+                                            lambda: fn(src, fs, carry)[0], reps
+                                        ),
+                                    }
+                                )
+                            if alg == planned and coll == "flat":
+                                run_out, carry = fn(src, fs, carry)
+                        else:
+                            fn = jax.jit(
+                                lambda s, f, node=node, alg=alg, tl=tl, coll=coll: (
+                                    ex.contract(
+                                        node, s, f, alg, tiles=tl, collective=coll
+                                    )
+                                )
                             )
-                        if alg == planned:
-                            run_out, carry = fn(src, fs, carry)
-                    else:
-                        fn = jax.jit(
-                            lambda s, f, node=node, alg=alg, tl=tl: ex.contract(
-                                node, s, f, alg, tiles=tl
-                            )
-                        )
-                        if key not in seen and not budget.exhausted():
-                            seen.add(key)
-                            rows.append(
-                                {
-                                    "key": key,
-                                    "executor": kind,
-                                    "algorithm": alg,
-                                    "schedule": sched.name,
-                                    "node": node.id,
-                                    "measured_s": _time(lambda: fn(src, fs), reps),
-                                }
-                            )
-                        if alg == planned:
-                            run_out = fn(src, fs)
+                            if key not in seen and not budget.exhausted():
+                                seen.add(key)
+                                rows.append(
+                                    {
+                                        "key": key,
+                                        "executor": kind,
+                                        "algorithm": alg,
+                                        "collective": coll,
+                                        "schedule": sched.name,
+                                        "node": node.id,
+                                        "measured_s": _time(
+                                            lambda: fn(src, fs), reps
+                                        ),
+                                    }
+                                )
+                            if alg == planned and coll == "flat":
+                                run_out = fn(src, fs)
                     if run_out is not None:
                         out = run_out
                 if not node.is_leaf:
@@ -673,6 +707,7 @@ def tune(
     reps: int = 3,
     seed: int = 0,
     pp_tol: float = 0.0,
+    intra_axes: Sequence[str] = (),
 ) -> dict:
     """Measure tiles + candidate plans for ``x``'s problem; persist winners.
 
@@ -695,11 +730,17 @@ def tune(
     key, via the signature's ``|pp`` field) and additionally measures the
     PP cache build and one correction-only sweep into the entry's ``pp``
     rows, which ``plan_sweep`` then prefers over the analytic PP estimates.
+    ``intra_axes`` declares the fast (intra-node) mesh axes of a two-level
+    mesh, exactly as on :class:`Problem`: nodes whose reductions span both
+    levels are then measured under flat AND hierarchical collectives, and
+    the resulting entry keys include the node-topology field so two-level
+    measurements never collide with single-level ones.
     Returns the stored entry dict.
     """
     cache = cache or default_tuning_cache()
     problem = Problem.from_tensor(
-        x, rank, mode_axes=mode_axes, mesh=mesh, pp_tol=pp_tol
+        x, rank, mode_axes=mode_axes, mesh=mesh, pp_tol=pp_tol,
+        intra_axes=intra_axes,
     )
     if factors is None:
         factors = random_factors(jax.random.PRNGKey(seed), x.shape, rank, x.dtype)

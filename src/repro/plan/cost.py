@@ -40,7 +40,7 @@ import math
 from dataclasses import dataclass, replace
 from typing import Mapping
 
-from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.analysis.roofline import DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS
 from repro.core.mttkrp import mttkrp_flops
 from repro.core.tensor_ops import dims_split
 
@@ -128,6 +128,12 @@ class ModeCost:
     measurement when one exists -- the planner's ``strategy='autotune'``
     argmins over ``expected_s`` (per comparison set; see
     :mod:`repro.plan.planner`).
+
+    ``inter_bytes`` is the share of ``collective_bytes`` that crosses the
+    *node* boundary of a two-level mesh and is therefore priced at the slow
+    ``DCN_BW`` instead of ``ICI_BW`` (0 on single-level problems, where the
+    whole collective rides the fast links and the model reduces to the old
+    single-bandwidth form).
     """
 
     gemm_flops: float
@@ -137,6 +143,7 @@ class ModeCost:
     collective_bytes: float = 0.0
     serial_fraction: float = 1.0
     measured_s: float | None = None
+    inter_bytes: float = 0.0
 
     @property
     def flops(self) -> float:
@@ -149,9 +156,16 @@ class ModeCost:
         return self.flops / PEAK_FLOPS + self.bytes / HBM_BW
 
     @property
+    def intra_bytes(self) -> float:
+        """Wire bytes on the fast (intra-node / ICI) level: the collective
+        volume not crossing nodes."""
+        return self.collective_bytes - self.inter_bytes
+
+    @property
     def collective_s(self) -> float:
-        """Wire time of the completing collective at nominal ICI bandwidth."""
-        return self.collective_bytes / ICI_BW
+        """Wire time of the completing collective: intra-node bytes at
+        nominal ICI bandwidth plus node-crossing bytes at DCN bandwidth."""
+        return self.intra_bytes / ICI_BW + self.inter_bytes / DCN_BW
 
     @property
     def predicted_s(self) -> float:
@@ -184,6 +198,8 @@ class ModeCost:
             "flops": self.flops,
             "bytes": self.bytes,
             "collective_bytes": self.collective_bytes,
+            "intra_bytes": self.intra_bytes,
+            "inter_bytes": self.inter_bytes,
             "serial_fraction": self.serial_fraction,
             "compute_s": self.compute_s,
             "collective_s": self.collective_s,
@@ -215,6 +231,140 @@ def compressed_allgather_bytes(
     return (participants - 1) * (payload + _SCALE_BYTES)
 
 
+def _level_shards(problem: Problem, reduce_axes) -> tuple[int, int]:
+    """Split one reduction's participants into (intra k, inter m) shards:
+    ``k`` over the axes declared in ``Problem.intra_axes``, ``m`` over the
+    node-crossing rest."""
+    k = m = 1
+    for axis in reduce_axes:
+        if axis in problem.intra_axes:
+            k *= problem.axis_sizes[axis]
+        else:
+            m *= problem.axis_sizes[axis]
+    return k, m
+
+
+def collective_level_bytes(
+    problem: Problem,
+    block_bytes: float,
+    reduce_axes,
+    collective: str = "flat",
+) -> tuple[float, float]:
+    """Per-device ``(collective_bytes, inter_bytes)`` of one node's psum.
+
+    Splits the completing all-reduce of a ``block_bytes`` output block over
+    ``reduce_axes`` into the two levels of a ``Problem.intra_axes`` mesh:
+
+    * single-level problem (no ``intra_axes``) -- the classic ring volume,
+      all of it on the fast links (``inter_bytes = 0``; predictions are
+      bit-identical to the old single-bandwidth model);
+    * reduction confined to one node (``m <= 1``) -- ring over the intra
+      shards, nothing crosses nodes;
+    * reduction only across nodes (``k <= 1``) -- the whole ring rides the
+      slow level;
+    * ``collective="flat"`` spanning both -- one ring over all ``k * m``
+      devices; its slowest hops cross nodes, so the full volume is charged
+      at DCN rate;
+    * ``collective="hierarchical"`` -- reduce-scatter + all-gather within
+      the node (``2 B (k-1)/k`` intra) and a ring over the ``1/k`` shard
+      across nodes (``2 (B/k)(m-1)/m`` inter): the factor-``k`` cut of
+      slow-level volume the two-level psum exists for.
+    """
+    k, m = _level_shards(problem, reduce_axes)
+    if k * m <= 1:
+        return 0.0, 0.0
+    if not problem.intra_axes:
+        return ring_allreduce_bytes(block_bytes, k * m), 0.0
+    if m <= 1:
+        return ring_allreduce_bytes(block_bytes, k), 0.0
+    if k <= 1:
+        t = ring_allreduce_bytes(block_bytes, m)
+        return t, t
+    if collective != "hierarchical":
+        t = ring_allreduce_bytes(block_bytes, k * m)
+        return t, t
+    intra = ring_allreduce_bytes(block_bytes, k)
+    inter = ring_allreduce_bytes(block_bytes / k, m)
+    return intra + inter, inter
+
+
+def hierarchical_applicable(problem: Problem, reduce_axes) -> bool:
+    """True when a node's reduction spans both levels of a two-level mesh
+    (``k > 1`` intra shards *and* ``m > 1`` nodes) -- i.e. the hierarchical
+    psum would actually decompose instead of falling back to the flat ring,
+    so the planner has a real flat-vs-hierarchical choice to argmin."""
+    k, m = _level_shards(problem, reduce_axes)
+    return k > 1 and m > 1
+
+
+def _node_grids(n_modes: int, nodes: int):
+    """All integer grids ``(m_1 .. m_N)`` with ``prod m_i == nodes``."""
+    if n_modes == 1:
+        yield (nodes,)
+        return
+    d = 1
+    while d * d <= nodes:
+        if nodes % d == 0:
+            for q in (d, nodes // d):
+                for rest in _node_grids(n_modes - 1, nodes // q):
+                    yield (q,) + rest
+                if d * d == nodes:
+                    break
+        d += 1
+
+
+def mttkrp_comm_lower_bound(
+    shape,
+    rank: int,
+    mesh_shape,
+    *,
+    itemsize: float = 4.0,
+    per_mode: bool = False,
+):
+    """Communication lower bound for one full MTTKRP sweep over ``P`` nodes.
+
+    Ballard/Knight/Rouse-style accounting (arXiv 1708.07401): any block
+    placement of the dense tensor on ``P`` nodes is an integer grid
+    ``(m_1 .. m_N)`` with ``prod m_n = P``, and mode ``n``'s MTTKRP must
+    then reduce partial factor blocks across the ``P / m_n`` nodes sharing
+    each mode-``n`` slab -- at best a ring all-reduce of the
+    ``(I_n / m_n, R)`` block, i.e. ``2 (I_n / m_n) R s (1 - m_n / P)``
+    bytes per node.  The bound is the minimum of the per-sweep sum over all
+    grids (fractional blocks allowed: grids need not divide the dims, so
+    this is a true lower bound for every realizable mapping).
+
+    ``mesh_shape`` is the node count, or a tuple whose product is taken
+    (e.g. the inter-node part of a mesh).  Returns bytes per node per
+    sweep; with ``per_mode=True`` returns ``(bound, terms, grid)`` where
+    ``terms[n]`` is mode ``n``'s contribution at the minimizing grid.
+    """
+    dims = tuple(int(d) for d in shape)
+    if not dims:
+        raise ValueError("shape must have at least one mode")
+    nodes = mesh_shape
+    if not isinstance(nodes, int):
+        nodes = math.prod(int(x) for x in mesh_shape)
+    nodes = int(nodes)
+    if nodes < 1:
+        raise ValueError(f"node count must be >= 1, got {nodes}")
+    s = float(itemsize)
+    best = None
+    best_grid = None
+    for grid in _node_grids(len(dims), nodes):
+        total = 0.0
+        for d, m in zip(dims, grid):
+            total += 2.0 * (d / m) * rank * s * (1.0 - m / nodes)
+        if best is None or total < best:
+            best, best_grid = total, grid
+    if not per_mode:
+        return best
+    terms = tuple(
+        2.0 * (d / m) * rank * s * (1.0 - m / nodes)
+        for d, m in zip(dims, best_grid)
+    )
+    return best, terms, best_grid
+
+
 def _fused_krp_dims(local_shape, n: int) -> tuple[int, int]:
     """Row counts of the two partial KRPs the fused Pallas kernel streams
     (internal modes: the L/R sides; external modes: the log-balanced split
@@ -231,15 +381,19 @@ def _fused_krp_dims(local_shape, n: int) -> tuple[int, int]:
     return math.prod(dims[:s]), math.prod(dims[s:])
 
 
-def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
+def mode_cost(
+    problem: Problem, n: int, algorithm: str, *, collective: str = "flat"
+) -> ModeCost:
     """Cost of one mode-``n`` MTTKRP under ``algorithm``.
 
     Computed on the per-device block dims; the psum volume for sharded
     problems is the ring all-reduce of the local partial result over the
     axes mapped to contracted modes (no collective when mode ``n`` itself is
-    the only mapped mode -- its axis carries the output rows).  The
-    ``"dimtree"`` algorithm prices the mode's share of the balanced binary
-    schedule via :func:`dimtree_mode_cost` (which folds over
+    the only mapped mode -- its axis carries the output rows).  On two-level
+    problems (``Problem.intra_axes`` set) ``collective`` picks how that
+    volume splits across the levels -- see :func:`collective_level_bytes`.
+    The ``"dimtree"`` algorithm prices the mode's share of the balanced
+    binary schedule via :func:`dimtree_mode_cost` (which folds over
     :func:`node_cost`); general tree shapes are costed per node by
     :func:`node_cost` directly.
 
@@ -251,7 +405,9 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
     if algorithm not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {algorithm!r} (choose from {ALGORITHMS})")
     if algorithm == "dimtree":
-        return dimtree_mode_cost(problem, n, (problem.ndim + 1) // 2)
+        return dimtree_mode_cost(
+            problem, n, (problem.ndim + 1) // 2, collective=collective
+        )
     shape = problem.local_shape
     c = problem.rank
     s = problem.itemsize
@@ -259,12 +415,14 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
     base = mttkrp_flops(shape, c, n, itemsize=s, batch=lb)
     L, In, R = dims_split(shape, n)
     out_bytes = In * c * s * lb
-    coll = ring_allreduce_bytes(out_bytes, problem.reduce_participants((n,)))
+    coll, inter = collective_level_bytes(
+        problem, out_bytes, problem.reduce_axes_for(n), collective
+    )
 
     if algorithm == "2step" and not problem.external_mode(n):
         # forced 2-step resolves its order by cost, like the Alg. 4 line-4 rule
-        left = mode_cost(problem, n, "2step-left")
-        right = mode_cost(problem, n, "2step-right")
+        left = mode_cost(problem, n, "2step-left", collective=collective)
+        right = mode_cost(problem, n, "2step-right", collective=collective)
         return left if left.predicted_s < right.predicted_s else right
 
     if algorithm == "1step" or (
@@ -277,6 +435,7 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
             second_step_flops=0.0,
             bytes=base["tensor_bytes"] + 2.0 * base["krp_bytes"] + out_bytes,
             collective_bytes=coll,
+            inter_bytes=inter,
         )
     if algorithm in ("2step-left", "2step-right"):
         # left-first contracts K_L in the GEMM, multi-TTVs over R (and vice
@@ -289,6 +448,7 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
             second_step_flops=2.0 * In * second_side * c * lb,
             bytes=base["tensor_bytes"] + 2.0 * intermediate + (L + R) * c * s * lb + out_bytes,
             collective_bytes=coll,
+            inter_bytes=inter,
         )
     if algorithm == "fused":
         da, db = _fused_krp_dims(shape, n)
@@ -299,6 +459,7 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
             # the full KRP never hits HBM -- only the two partials stream in
             bytes=base["tensor_bytes"] + (da + db) * c * s * lb + out_bytes,
             collective_bytes=coll,
+            inter_bytes=inter,
         )
     if algorithm == "matrix_free":
         # bytes-read-once model: the tensor streams through VMEM exactly one
@@ -319,6 +480,7 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
             second_step_flops=fold,
             bytes=base["tensor_bytes"] + factor_bytes + out_bytes,
             collective_bytes=coll,
+            inter_bytes=inter,
         )
     if algorithm == "einsum":
         return ModeCost(
@@ -327,6 +489,7 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
             second_step_flops=0.0,
             bytes=base["tensor_bytes"] + (L + In + R) * c * s * lb + out_bytes,
             collective_bytes=coll,
+            inter_bytes=inter,
         )
     assert algorithm == "baseline"
     # reorder (transpose copy: read + write) then one GEMM over the copy
@@ -336,23 +499,49 @@ def mode_cost(problem: Problem, n: int, algorithm: str) -> ModeCost:
         second_step_flops=0.0,
         bytes=3.0 * base["tensor_bytes"] + 2.0 * base["krp_bytes"] + out_bytes,
         collective_bytes=coll,
+        inter_bytes=inter,
     )
 
 
 def _compress_terms(
-    problem: Problem, base: ModeCost, block_bytes: float, participants: int
+    problem: Problem,
+    base: ModeCost,
+    block_bytes: float,
+    participants: int,
+    *,
+    reduce_axes=(),
+    collective: str = "flat",
 ) -> ModeCost:
     """Replace a node's ring all-reduce with the int8 error-feedback gather:
     wire bytes become :func:`compressed_allgather_bytes` of the local output
     block, and HBM traffic grows by the quantize (write + read the int8
-    block) and dequantize (read the ``p-1`` gathered payloads) passes."""
+    block) and dequantize (read the ``p-1`` gathered payloads) passes.
+
+    On a two-level problem, ``collective="hierarchical"`` prices the split
+    the executors actually run: an *exact* fp32 ring within the node (the
+    intra level stays uncompressed -- it is cheap) plus the int8 gather
+    across the ``m`` nodes only, so the compressed payload count drops from
+    ``k * m - 1`` to ``m - 1`` senders.
+    """
     s = problem.itemsize
     int8_block = block_bytes * _INT8_ITEMSIZE / s
-    quant_bytes = (participants + 1) * int8_block
+    k, m = _level_shards(problem, reduce_axes)
+    if collective == "hierarchical" and k > 1 and m > 1:
+        intra = ring_allreduce_bytes(block_bytes, k)
+        inter = compressed_allgather_bytes(block_bytes, m, s)
+        return replace(
+            base,
+            collective_bytes=intra + inter,
+            inter_bytes=inter,
+            bytes=base.bytes + (m + 1) * int8_block,
+        )
+    coll = compressed_allgather_bytes(block_bytes, participants, s)
+    inter = coll if (problem.intra_axes and m > 1) else 0.0
     return replace(
         base,
-        collective_bytes=compressed_allgather_bytes(block_bytes, participants, s),
-        bytes=base.bytes + quant_bytes,
+        collective_bytes=coll,
+        inter_bytes=inter,
+        bytes=base.bytes + (participants + 1) * int8_block,
     )
 
 
@@ -366,10 +555,15 @@ def _adjust(
     block_bytes: float,
     participants: int,
     serial_fractions: Mapping[str, float] | None,
+    reduce_axes=(),
+    collective: str = "flat",
 ) -> ModeCost:
     """Full executor adjustment: compression terms, then schedule fraction."""
     if executor == "compressed" and base.collective_bytes > 0.0:
-        base = _compress_terms(problem, base, block_bytes, participants)
+        base = _compress_terms(
+            problem, base, block_bytes, participants,
+            reduce_axes=reduce_axes, collective=collective,
+        )
     fitted = (serial_fractions or {}).get(executor)
     if base.collective_bytes <= 0.0:
         return base
@@ -390,6 +584,7 @@ def executor_mode_cost(
     *,
     n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
     serial_fractions: Mapping[str, float] | None = None,
+    collective: str = "flat",
 ) -> ModeCost:
     """Cost of one mode-``n`` MTTKRP under ``algorithm`` on ``executor``.
 
@@ -410,12 +605,15 @@ def executor_mode_cost(
 
     ``serial_fractions`` (executor kind -> fitted unhidable fraction, from
     ``bench_mttkrp --calibrate``) overrides the analytic defaults.
+    ``collective`` threads the two-level psum choice through (see
+    :func:`collective_level_bytes`).
     """
     validate_executor(problem, executor)
-    base = mode_cost(problem, n, algorithm)
+    base = mode_cost(problem, n, algorithm, collective=collective)
     _, in_local, _ = dims_split(problem.local_shape, n)
     block = in_local * problem.rank * problem.itemsize * problem.local_batch
-    p = math.prod(problem.axis_sizes[a] for a in problem.reduce_axes_for(n))
+    axes = problem.reduce_axes_for(n)
+    p = math.prod(problem.axis_sizes[a] for a in axes)
     return _adjust(
         problem,
         base,
@@ -425,6 +623,8 @@ def executor_mode_cost(
         block_bytes=block,
         participants=p,
         serial_fractions=serial_fractions,
+        reduce_axes=axes,
+        collective=collective,
     )
 
 
@@ -436,6 +636,7 @@ def node_cost(
     algorithm: str = "1step",
     n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
     serial_fractions: Mapping[str, float] | None = None,
+    collective: str = "flat",
 ) -> ModeCost:
     """Cost of one schedule node's contraction on ``executor``.
 
@@ -456,7 +657,9 @@ def node_cost(
       plus this node's own psum.
 
     ``serial_fractions`` threads calibrated per-executor constants through,
-    exactly as in :func:`executor_mode_cost`.
+    exactly as in :func:`executor_mode_cost`, and ``collective`` the
+    two-level psum choice (the node's stamped flat ring volume is re-split
+    per :func:`collective_level_bytes` on two-level problems).
     """
     if executor is None:
         executor = "sharded" if problem.sharded else "local"
@@ -470,10 +673,13 @@ def node_cost(
         return executor_mode_cost(
             problem, node.lo, algorithm, executor,
             n_chunks=n_chunks, serial_fractions=serial_fractions,
+            collective=collective,
         )
     t_elems = math.prod(node.local_shape) * lb  # kept local dims * rank (x batch)
     t_bytes = t_elems * s
-    coll = node.psum_bytes
+    coll, inter = collective_level_bytes(
+        problem, t_bytes, node.reduce_axes, collective
+    )
     if node.from_root:
         total = math.prod(problem.local_shape) * lb
         krp_elems = (
@@ -487,6 +693,7 @@ def node_cost(
             second_step_flops=0.0,
             bytes=total * s + 2.0 * krp_elems * s + t_bytes,
             collective_bytes=coll,
+            inter_bytes=inter,
         )
     else:
         parent_elems = (
@@ -503,6 +710,7 @@ def node_cost(
             second_step_flops=ttv,
             bytes=parent_elems * s + t_bytes,
             collective_bytes=coll,
+            inter_bytes=inter,
         )
     block = t_elems * s
     return _adjust(
@@ -514,6 +722,8 @@ def node_cost(
         block_bytes=block,
         participants=node.psum_participants,
         serial_fractions=serial_fractions,
+        reduce_axes=node.reduce_axes,
+        collective=collective,
     )
 
 
@@ -618,7 +828,9 @@ def pp_amortized_cost(
     }
 
 
-def dimtree_mode_cost(problem: Problem, n: int, split: int) -> ModeCost:
+def dimtree_mode_cost(
+    problem: Problem, n: int, split: int, *, collective: str = "flat"
+) -> ModeCost:
     """Dimension-tree cost of mode ``n`` given the half split at ``split``.
 
     Back-compat per-mode view of the binary schedule, folded over
@@ -630,15 +842,16 @@ def dimtree_mode_cost(problem: Problem, n: int, split: int) -> ModeCost:
     """
     sched = binary_schedule(problem, split)
     leaf = sched.leaf_for_mode(n)
-    total = node_cost(problem, leaf, algorithm="1step")
+    total = node_cost(problem, leaf, algorithm="1step", collective=collective)
     if not leaf.from_root and n == leaf.parent_lo:
         parent = sched.nodes[leaf.parent]
-        head = node_cost(problem, parent)
+        head = node_cost(problem, parent, collective=collective)
         total = ModeCost(
             gemm_flops=total.gemm_flops + head.gemm_flops,
             krp_flops=total.krp_flops + head.krp_flops,
             second_step_flops=total.second_step_flops + head.second_step_flops,
             bytes=total.bytes + head.bytes,
             collective_bytes=total.collective_bytes + head.collective_bytes,
+            inter_bytes=total.inter_bytes + head.inter_bytes,
         )
     return total

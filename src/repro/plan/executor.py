@@ -85,11 +85,17 @@ class Executor(Protocol):
     def contract(
         self, node: ContractionNode, src: Array, factors: Sequence[Array],
         algorithm: str = "auto", tiles: Mapping[str, int] | None = None,
+        collective: str = "flat",
     ) -> Array:
         """Run one schedule node's contraction of ``src`` (the parent's
         output; the raw tensor for children of the root).  ``tiles`` is the
         plan's tuned Pallas tile config for kernel-backed algorithms
-        (``NodePlan.tiles``); ``None`` keeps the kernel defaults."""
+        (``NodePlan.tiles``); ``None`` keeps the kernel defaults.
+        ``collective`` picks the psum decomposition for this node's
+        reduction (``NodePlan.collective``): ``"flat"`` is one ring over
+        all participating devices, ``"hierarchical"`` reduce-scatters
+        within the node axis first so only shards cross the slow level
+        (ignored by executors without collectives)."""
         ...
 
 
@@ -103,13 +109,16 @@ class LocalExecutor:
     def contract(
         self, node: ContractionNode, src: Array, factors: Sequence[Array],
         algorithm: str = "auto", tiles: Mapping[str, int] | None = None,
+        collective: str = "flat",
     ) -> Array:
         """One schedule node locally: planned MTTKRP for leaves off the
         root (tuned Pallas tiles threaded through for the fused kernel),
         range GEMM for internal nodes off the root, multi-TTV einsum
         for anything contracted from a partial.  A leading batch axis on
         ``src`` (and every factor) dispatches the batched kernel for
-        leaves and a vmap of the same contraction otherwise."""
+        leaves and a vmap of the same contraction otherwise.
+        ``collective`` is accepted for protocol compatibility and
+        ignored: one device runs no psum to decompose."""
         batched = _node_is_batched(node, src)
         if node.from_root:
             if node.is_leaf:
@@ -177,12 +186,19 @@ class ShardedExecutor:
     batch).  Batch-parallel placements (``mode_axes`` empty, ``batch_axes``
     set) run every contraction collective-free: each device owns whole
     problems.
+
+    ``node_axis`` names the *intra-node* mesh axis (the fast level of a
+    two-level ``make_node_mesh``); it is only consulted when the engine
+    passes ``collective="hierarchical"`` for a node, in which case the
+    node's psum runs as reduce-scatter over ``node_axis`` + cross-node
+    psum of the shard + all-gather back.
     """
 
-    def __init__(self, mesh, mode_axes, batch_axes=()):
+    def __init__(self, mesh, mode_axes, batch_axes=(), node_axis=None):
         self.mesh = mesh
         self.mode_axes = dict(mode_axes)
         self.batch_axes = tuple(batch_axes)
+        self.node_axis = node_axis
 
     # chunk count for the node pipeline: 1 = no chunking (plain psum)
     _n_chunks = 1
@@ -197,23 +213,28 @@ class ShardedExecutor:
     def contract(
         self, node: ContractionNode, src: Array, factors: Sequence[Array],
         algorithm: str = "auto", tiles: Mapping[str, int] | None = None,
+        collective: str = "flat",
     ) -> Array:
         """One schedule node on the mesh: local kernel per block + this
-        node's psum over the axes mapped to its contracted modes."""
+        node's psum over the axes mapped to its contracted modes, flat or
+        hierarchical per ``collective``."""
         if node.from_root and node.is_leaf:
             return dist_mttkrp(
                 src, list(factors), node.mode, self.mode_axes, self.mesh,
                 method=algorithm, tiles=tiles, batch_axes=self.batch_axes,
+                collective=collective, node_axis=self.node_axis,
             )
         if node.from_root:
             return dist_contract_range(
                 src, list(factors), node.lo, node.hi, self.mode_axes, self.mesh,
                 n_chunks=self._n_chunks, batch_axes=self.batch_axes,
+                collective=collective, node_axis=self.node_axis,
             )
         return dist_contract_partial(
             src, list(factors), node.lo, node.hi, node.parent_lo, node.parent_hi,
             self.mode_axes, self.mesh, n_chunks=self._n_chunks,
             batch_axes=self.batch_axes,
+            collective=collective, node_axis=self.node_axis,
         )
 
     def pp_pairs(
@@ -247,9 +268,10 @@ class OverlappingExecutor(ShardedExecutor):
     """
 
     def __init__(
-        self, mesh, mode_axes, n_chunks: int = DEFAULT_OVERLAP_CHUNKS, batch_axes=()
+        self, mesh, mode_axes, n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
+        batch_axes=(), node_axis=None,
     ):
-        super().__init__(mesh, mode_axes, batch_axes)
+        super().__init__(mesh, mode_axes, batch_axes, node_axis)
         self.n_chunks = int(n_chunks)
 
     @property
@@ -260,6 +282,7 @@ class OverlappingExecutor(ShardedExecutor):
     def contract(
         self, node: ContractionNode, src: Array, factors: Sequence[Array],
         algorithm: str = "auto", tiles: Mapping[str, int] | None = None,
+        collective: str = "flat",
     ) -> Array:
         """One schedule node with its psum hidden behind chunked GEMMs."""
         if node.from_root and node.is_leaf:
@@ -267,8 +290,11 @@ class OverlappingExecutor(ShardedExecutor):
                 src, list(factors), node.mode, self.mode_axes, self.mesh,
                 method=algorithm, n_chunks=self.n_chunks, tiles=tiles,
                 batch_axes=self.batch_axes,
+                collective=collective, node_axis=self.node_axis,
             )
-        return super().contract(node, src, factors, algorithm, tiles=tiles)
+        return super().contract(
+            node, src, factors, algorithm, tiles=tiles, collective=collective
+        )
 
 
 class CompressedShardedExecutor(ShardedExecutor):
@@ -319,31 +345,43 @@ class CompressedShardedExecutor(ShardedExecutor):
         algorithm: str,
         carry: Any,
         tiles: Mapping[str, int] | None = None,
+        collective: str = "flat",
     ) -> tuple[Array, Any]:
         """Compressed node contraction; returns ``(result, new_carry)``.
 
         Dispatches to the compressed variant matching the node's topology
         when a residual exists for it, the exact path otherwise; ``tiles``
         threads the plan's tuned kernel tiling into the local contraction.
+        With ``collective="hierarchical"`` the intra-node slice of the psum
+        runs exact first and only the cross-node stage is compressed --
+        same residual layout and carry semantics, less wire traffic.
         """
         if carry is None or node.id not in carry:
-            return self.contract(node, src, factors, algorithm, tiles=tiles), carry
+            return (
+                self.contract(
+                    node, src, factors, algorithm, tiles=tiles, collective=collective
+                ),
+                carry,
+            )
         err = carry[node.id]
         if node.from_root and node.is_leaf:
             out, new_err = dist_mttkrp_compressed(
                 src, list(factors), node.mode, self.mode_axes, self.mesh, err,
                 method=algorithm, tiles=tiles, batch_axes=self.batch_axes,
+                collective=collective, node_axis=self.node_axis,
             )
         elif node.from_root:
             out, new_err = dist_contract_range_compressed(
                 src, list(factors), node.lo, node.hi, self.mode_axes, self.mesh,
                 err, batch_axes=self.batch_axes,
+                collective=collective, node_axis=self.node_axis,
             )
         else:
             out, new_err = dist_contract_partial_compressed(
                 src, list(factors), node.lo, node.hi, node.parent_lo,
                 node.parent_hi, self.mode_axes, self.mesh, err,
                 batch_axes=self.batch_axes,
+                collective=collective, node_axis=self.node_axis,
             )
         return out, {**carry, node.id: new_err}
 
@@ -355,6 +393,7 @@ def make_executor(
     *,
     n_chunks: int = DEFAULT_OVERLAP_CHUNKS,
     batch_axes=(),
+    node_axis=None,
 ) -> Executor:
     """Instantiate the executor for a planner-chosen kind.
 
@@ -364,7 +403,9 @@ def make_executor(
     (plans are pure metadata).  ``n_chunks`` sizes the overlapping
     executor's psum pipeline; ``batch_axes`` names the mesh axes a batched
     problem's leading batch dimension is sharded over (batch-parallel
-    placements pass ``mode_axes={}`` plus the batch axes).
+    placements pass ``mode_axes={}`` plus the batch axes); ``node_axis``
+    names the intra-node mesh axis hierarchical collectives decompose over
+    (``Problem.node_axis`` for problems built with ``intra_axes``).
     """
     if kind not in EXECUTORS:
         raise ValueError(f"unknown executor kind {kind!r} (choose from {EXECUTORS})")
@@ -373,7 +414,10 @@ def make_executor(
     if mesh is None or mode_axes is None:
         raise ValueError(f"executor {kind!r} needs mesh and mode_axes")
     if kind == "sharded":
-        return ShardedExecutor(mesh, mode_axes, batch_axes)
+        return ShardedExecutor(mesh, mode_axes, batch_axes, node_axis)
     if kind == "overlapping":
-        return OverlappingExecutor(mesh, mode_axes, n_chunks=n_chunks, batch_axes=batch_axes)
-    return CompressedShardedExecutor(mesh, mode_axes, batch_axes)
+        return OverlappingExecutor(
+            mesh, mode_axes, n_chunks=n_chunks, batch_axes=batch_axes,
+            node_axis=node_axis,
+        )
+    return CompressedShardedExecutor(mesh, mode_axes, batch_axes, node_axis)

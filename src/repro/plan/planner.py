@@ -28,6 +28,7 @@ executor instance given the concrete mesh.
 
 from __future__ import annotations
 
+import itertools
 import math
 from dataclasses import dataclass, replace
 from typing import Mapping
@@ -38,6 +39,8 @@ from .cost import (
     PP_EXACT_FRACTION,
     ModeCost,
     executor_mode_cost,
+    hierarchical_applicable,
+    mttkrp_comm_lower_bound,
     node_cost,
     pp_amortized_cost,
     validate_executor,
@@ -106,12 +109,21 @@ class NodePlan:
     hardware-tuned Pallas tile config (``{"block_i": ..., "block_b": ...}``)
     when ``strategy='autotune'`` planned a kernel-backed algorithm; the
     executors thread it into :mod:`repro.kernels.ops`.
+
+    ``collective`` is the planned completing-psum strategy (``"flat"`` or
+    ``"hierarchical"``, argmin'd per node on two-level meshes) -- the
+    executors thread it into :mod:`repro.dist.dist_mttkrp` exactly like
+    ``algorithm``/``tiles``.  ``lower_bound_bytes`` is the leaf's share of
+    the Ballard-Knight-Rouse communication lower bound (per node per
+    sweep), stamped on certified-planning runs; ``None`` elsewhere.
     """
 
     node: ContractionNode
     algorithm: str
     cost: ModeCost
     tiles: Mapping[str, int] | None = None
+    collective: str = "flat"
+    lower_bound_bytes: float | None = None
 
     def as_dict(self) -> dict:
         """JSON-ready row: node topology/psum metadata + every cost term."""
@@ -119,6 +131,8 @@ class NodePlan:
             **self.node.as_dict(),
             "algorithm": self.algorithm,
             "tiles": dict(self.tiles) if self.tiles else None,
+            "collective": self.collective,
+            "lower_bound_bytes": self.lower_bound_bytes,
             **self.cost.as_dict(),
         }
 
@@ -150,6 +164,16 @@ class SweepPlan:
     plus first-order corrections.  ``pp_info`` is the pricing row behind
     the decision (see :func:`repro.plan.cost.pp_amortized_cost`), ``None``
     when the problem never opted in (``pp_tol == 0``).
+
+    On two-level meshes (``Problem.intra_axes``) the planner additionally
+    argmins over *mesh mappings* (mode -> axis assignments) with the
+    flat-vs-hierarchical collective choice folded in per node:
+    ``mappings`` records each evaluated candidate with its modeled
+    per-node inter-node volume and the Ballard-Knight-Rouse lower bound,
+    ``lower_bound_bytes`` is the winning problem's bound (bytes per node
+    per sweep), and ``certified_bandwidth_optimal`` flags a winner whose
+    modeled inter-node volume is within the planner's ``certify_eps`` of
+    that bound -- enumeration stops early once a candidate certifies.
     """
 
     problem: Problem
@@ -164,6 +188,9 @@ class SweepPlan:
     placements: tuple[Mapping, ...] = ()
     pp: bool = False
     pp_info: Mapping | None = None
+    mappings: tuple[Mapping, ...] = ()
+    lower_bound_bytes: float | None = None
+    certified_bandwidth_optimal: bool = False
 
     @property
     def kind(self) -> str:
@@ -198,6 +225,8 @@ class SweepPlan:
             "flops": sum(r.cost.flops for r in rows),
             "bytes": sum(r.cost.bytes for r in rows),
             "collective_bytes": sum(r.cost.collective_bytes for r in rows),
+            "intra_bytes": sum(r.cost.intra_bytes for r in rows),
+            "inter_bytes": sum(r.cost.inter_bytes for r in rows),
             "predicted_s": sum(r.cost.predicted_s for r in rows),
         }
 
@@ -230,6 +259,9 @@ class SweepPlan:
             "nodes": [n.as_dict() for n in self.nodes],
             "serial_fractions": dict(self.serial_fractions or {}),
             "pp": {"enabled": self.pp, **dict(self.pp_info or {})},
+            "mappings": [dict(m) for m in self.mappings],
+            "lower_bound_bytes": self.lower_bound_bytes,
+            "certified": self.certified_bandwidth_optimal,
             "totals": self.total_cost(),
         }
 
@@ -266,6 +298,88 @@ def _placement_candidates(problem: Problem) -> list[Problem]:
                 )
             )
     return cands
+
+
+def _mapping_candidates(problem: Problem) -> list[Problem]:
+    """Alternative mode->axis assignments of a two-level problem's mesh.
+
+    Every way to hand the axes the as-given mapping uses to distinct tensor
+    modes (divisibility-checked), as-given excluded -- the search space of
+    the certified mesh planning: same mesh, same tensor, different choice of
+    which modes absorb the node / device axes, which is exactly what moves
+    the inter-node reduce volume the BKR bound constrains.  Empty for flat
+    problems (no ``intra_axes``) so single-level planning never changes.
+    """
+    if not (problem.intra_axes and problem.mode_axes):
+        return []
+    axes = sorted(set(problem.mode_axes.values()))
+    given = dict(problem.mode_axes)
+    out = []
+    for modes in itertools.permutations(range(problem.ndim), len(axes)):
+        mapping = dict(zip(modes, axes))
+        if mapping == given:
+            continue
+        if any(
+            problem.shape[m] % problem.axis_sizes[a] for m, a in mapping.items()
+        ):
+            continue
+        out.append(replace(problem, mode_axes=mapping))
+    return out
+
+
+def _node_bound_bytes(problem: Problem) -> tuple[float, tuple[float, ...]] | None:
+    """(BKR bound, per-mode terms) in bytes per node per sweep for a
+    two-level mode-parallel problem; ``None`` when certification does not
+    apply (flat mesh, single node, or no mapped modes)."""
+    if not (problem.mode_axes and problem.intra_axes and problem.n_nodes > 1):
+        return None
+    bound, terms, _ = mttkrp_comm_lower_bound(
+        problem.shape, problem.rank, problem.n_nodes,
+        itemsize=problem.itemsize, per_mode=True,
+    )
+    lb = problem.local_batch
+    return bound * lb, tuple(t * lb for t in terms)
+
+
+def _pick_collective(
+    problem: Problem,
+    node: ContractionNode,
+    alg: str,
+    cost: ModeCost,
+    executor: str,
+    n_chunks: int,
+    serial_fractions: Mapping[str, float] | None,
+    measured=None,
+) -> tuple[str, ModeCost]:
+    """Flat-vs-hierarchical argmin for one node's completing collective.
+
+    ``cost`` is the node's flat-collective cost (measurement already
+    stamped when available).  When the node's reduction spans both mesh
+    levels the hierarchical variant is costed head-to-head: measured
+    seconds decide when *both* variants are measured (autotune), the
+    analytic prediction otherwise -- measured and analytic never compete.
+    """
+    if not hierarchical_applicable(problem, node.reduce_axes):
+        return "flat", cost
+    if node.from_root and node.is_leaf:
+        hier = executor_mode_cost(
+            problem, node.mode, alg, executor, n_chunks=n_chunks,
+            serial_fractions=serial_fractions, collective="hierarchical",
+        )
+    else:
+        hier = node_cost(
+            problem, node, executor, n_chunks=n_chunks,
+            serial_fractions=serial_fractions, collective="hierarchical",
+        )
+    if measured is not None:
+        m = measured.node_time(node, alg, executor, collective="hierarchical")
+        if m is not None:
+            hier = replace(hier, measured_s=m)
+    if cost.measured_s is not None and hier.measured_s is not None:
+        pick_hier = hier.measured_s < cost.measured_s
+    else:
+        pick_hier = hier.predicted_s < cost.predicted_s
+    return ("hierarchical", hier) if pick_hier else ("flat", cost)
 
 
 def _auto_mode(
@@ -341,7 +455,10 @@ def _plan_nodes(
     Under ``strategy='autotune'`` (``measured`` set) every node's hardware
     measurement -- leaves and partial contractions alike -- is stamped on
     its cost, and leaves planned onto a kernel-backed algorithm carry the
-    tuned Pallas tile config on ``NodePlan.tiles``.
+    tuned Pallas tile config on ``NodePlan.tiles``.  On two-level meshes
+    each node's completing collective is additionally argmin'd flat vs
+    hierarchical (:func:`_pick_collective`) and stamped on
+    ``NodePlan.collective``.
     """
     plans = []
     for node in sched.walk():
@@ -367,7 +484,11 @@ def _plan_nodes(
                     tiles = measured.kernel_tiles("fused_mttkrp")
                 elif alg == "matrix_free":
                     tiles = measured.kernel_tiles("matrix_free")
-            plans.append(NodePlan(node, alg, cost, tiles=tiles))
+            coll, cost = _pick_collective(
+                problem, node, alg, cost, executor, n_chunks,
+                serial_fractions, measured,
+            )
+            plans.append(NodePlan(node, alg, cost, tiles=tiles, collective=coll))
         else:
             alg = "partial-krp" if node.from_root else "partial-ttv"
             cost = node_cost(
@@ -378,7 +499,11 @@ def _plan_nodes(
                 m = measured.node_time(node, alg, executor)
                 if m is not None:
                     cost = replace(cost, measured_s=m)
-            plans.append(NodePlan(node, alg, cost))
+            coll, cost = _pick_collective(
+                problem, node, alg, cost, executor, n_chunks,
+                serial_fractions, measured,
+            )
+            plans.append(NodePlan(node, alg, cost, collective=coll))
     return tuple(plans)
 
 
@@ -503,6 +628,7 @@ def plan_sweep(
     schedule: Schedule | str | None = None,
     serial_fractions: Mapping[str, float] | None = None,
     tuning_cache=None,
+    certify_eps: float = 0.25,
 ) -> SweepPlan:
     """Plan one full ALS sweep for ``problem``.
 
@@ -547,6 +673,16 @@ def plan_sweep(
     correction-only sweeps -- beat the exact sweep, and ``strategy='pp'``
     forces it.  The plan's schedule/executor stay the exact winner's: PP
     re-materialization sweeps run them verbatim.
+
+    Two-level problems (``Problem.intra_axes``) plan against the
+    Ballard-Knight-Rouse communication lower bound: every node's psum is
+    argmin'd flat vs hierarchical, alternative mode->axis *mappings* of the
+    same mesh are enumerated (divisibility-checked permutations), each
+    candidate is stamped with its modeled per-node inter-node volume and
+    the bound, and enumeration stops early once a candidate's volume is
+    within ``certify_eps`` (relative) of the bound -- the winner then
+    carries ``certified_bandwidth_optimal`` and per-leaf
+    ``lower_bound_bytes`` stamps.
 
     ``'autotune'`` closes the predict -> measure loop: hardware timings
     recorded by :func:`repro.plan.autotune.tune` (read from
@@ -601,23 +737,21 @@ def plan_sweep(
         ):
             serial_fractions = dict(measured.serial_fractions)
 
-    # a pinned Schedule instance is bound to one Problem, so placement
-    # exploration (which rebuilds schedules per placement) is off then
-    placements = (
-        [problem]
-        if isinstance(schedule, Schedule)
-        else _placement_candidates(problem)
-    )
+    # a pinned Schedule instance is bound to one Problem, so placement and
+    # mapping exploration (which rebuild schedules per candidate) are off
+    pinned = isinstance(schedule, Schedule)
+    placements = [problem] if pinned else _placement_candidates(problem)
 
-    picked = []  # rows: (prob, sched, executor, node_plans, analytic, measured)
-    for prob in placements:
+    def evaluate(prob):
+        """One candidate problem's best (schedule, executor) row, or None
+        when a forced executor kind is invalid on an alternate candidate."""
         if executor != "auto":
             try:
                 validate_executor(prob, executor)
             except ValueError:
                 if prob is problem:
                     raise
-                continue  # forced kind invalid on the alternate placement
+                return None  # forced kind invalid on the alternate candidate
             candidates = (executor,)
         elif prob.mode_axes:
             candidates = ("sharded", "overlapping", "compressed")
@@ -652,14 +786,85 @@ def plan_sweep(
             if flat_row is not None and best[0] is not flat_row[0]:
                 if best[3] >= _NEAR_TIE * flat_row[3]:
                     best = flat_row
-        picked.append((prob,) + best)
+        return (prob,) + best
 
-    # placement argmin: strict < keeps the as-given placement on ties
+    def certify(row):
+        """(bound, per-node inter volume, certified) of one evaluated row;
+        (None, None, False) when the BKR bound does not apply to it."""
+        bt = _node_bound_bytes(row[0])
+        if bt is None:
+            return None, None, False
+        bound, _ = bt
+        # per-device inter volume x devices-per-node = bytes crossing the
+        # node boundary per node per sweep -- the quantity the bound limits
+        inter = sum(np_.cost.inter_bytes for np_ in row[3]) * row[0].intra_shards
+        return bound, inter, inter <= (1.0 + certify_eps) * bound
+
+    picked = []  # rows: (prob, sched, executor, node_plans, analytic, measured)
+    cert_rows = []  # (row, bound, inter, certified) for bound-eligible rows
+    certified_found = False
+    for prob in placements:
+        row = evaluate(prob)
+        if row is None:
+            continue
+        picked.append(row)
+        bound, inter, ok = certify(row)
+        if bound is not None:
+            cert_rows.append((row, bound, inter, ok))
+            certified_found = certified_found or ok
+    n_placements = len(picked)  # mapping rows appended below are not placements
+
+    # mesh-mapping enumeration (two-level problems only): evaluate
+    # alternative mode->axis assignments until one certifies against the
+    # communication lower bound -- skipped entirely when the as-given
+    # mapping already certifies
+    if not pinned and not certified_found:
+        for prob in _mapping_candidates(problem):
+            row = evaluate(prob)
+            if row is None:
+                continue
+            picked.append(row)
+            bound, inter, ok = certify(row)
+            cert_rows.append((row, bound, inter, ok))
+            if ok:
+                break  # within eps of the lower bound: provably near-optimal
+
+    # placement/mapping argmin: strict < keeps the as-given problem on ties
     winner = picked[0]
     for row in picked[1:]:
         if row[4] < winner[4]:
             winner = row
     prob, sched, chosen, node_plans = winner[0], winner[1], winner[2], winner[3]
+
+    # certification + per-leaf lower-bound stamps for the winning problem
+    lower_bound = None
+    certified = False
+    for row, bound, inter, ok in cert_rows:
+        if row is winner:
+            lower_bound, certified = bound, ok
+            break
+    if lower_bound is not None:
+        _, terms = _node_bound_bytes(prob)
+        node_plans = tuple(
+            replace(np_, lower_bound_bytes=terms[np_.node.mode])
+            if np_.node.is_leaf
+            else np_
+            for np_ in node_plans
+        )
+    mapping_rows = tuple(
+        {
+            "mode_axes": {str(k): v for k, v in row[0].mode_axes.items()},
+            "executor": row[2],
+            "schedule": row[1].name,
+            "predicted_s": row[4],
+            "inter_bytes_per_node": inter,
+            "lower_bound_bytes": bound,
+            "certified": ok,
+            "collectives": [np_.collective for np_ in row[3]],
+            "selected": row is winner,
+        }
+        for row, bound, inter, ok in cert_rows
+    )
 
     # pairwise perturbation: price the approximate sweep against the chosen
     # exact plan whenever the problem opted in (pp_tol > 0); strategy="pp"
@@ -698,8 +903,8 @@ def plan_sweep(
             "collective_bytes": sum(np_.cost.collective_bytes for np_ in r[3]),
             "selected": r is winner,
         }
-        for r in picked
-    ) if len(picked) > 1 else ()
+        for r in picked[:n_placements]
+    ) if n_placements > 1 else ()
 
     modes = tuple(
         sorted(
@@ -724,4 +929,7 @@ def plan_sweep(
         placements=placement_rows,
         pp=pp_enabled,
         pp_info=pp_info,
+        mappings=mapping_rows,
+        lower_bound_bytes=lower_bound,
+        certified_bandwidth_optimal=certified,
     )

@@ -34,6 +34,16 @@ class Problem:
     against each other, so a pure batch-parallel placement moves zero
     reduce traffic while a mode-parallel placement pays psum volume x B.
 
+    ``intra_axes`` declares a *two-level* mesh topology: the named axes span
+    the devices within one node (fast ICI), every other mesh axis crosses
+    nodes (slow DCN).  Empty (the default) means a flat single-level network
+    -- all collective traffic is priced at ICI bandwidth and nothing about
+    planning changes.  Non-empty, the cost model prices intra- and
+    inter-node wire volume separately, the planner enumerates alternative
+    mode -> axis mappings against the Ballard-Knight-Rouse communication
+    lower bound, and executors may complete psums hierarchically
+    (:func:`repro.dist.collectives.hierarchical_psum`).
+
     ``pp_tol`` opts into pairwise-perturbation sweeps (Ma & Solomonik,
     arXiv 2010.12056): while every factor's relative drift since the last
     exact sweep stays below it, MTTKRPs are approximated from cached
@@ -50,6 +60,7 @@ class Problem:
     batch: int = 1
     batch_axes: tuple[str, ...] = ()
     pp_tol: float = 0.0
+    intra_axes: tuple[str, ...] = ()
 
     def __post_init__(self):
         object.__setattr__(self, "shape", tuple(int(d) for d in self.shape))
@@ -65,6 +76,9 @@ class Problem:
             self, "batch_axes", tuple(str(a) for a in self.batch_axes)
         )
         object.__setattr__(self, "pp_tol", float(self.pp_tol))
+        object.__setattr__(
+            self, "intra_axes", tuple(str(a) for a in self.intra_axes)
+        )
         self._validate()
 
     def __hash__(self):
@@ -81,6 +95,7 @@ class Problem:
                 self.batch,
                 self.batch_axes,
                 self.pp_tol,
+                self.intra_axes,
             )
         )
 
@@ -105,6 +120,14 @@ class Problem:
                 )
         if len(set(self.batch_axes)) != len(self.batch_axes):
             raise ValueError(f"duplicate batch axes in {self.batch_axes}")
+        if len(set(self.intra_axes)) != len(self.intra_axes):
+            raise ValueError(f"duplicate intra axes in {self.intra_axes}")
+        for axis in self.intra_axes:
+            if axis not in self.axis_sizes:
+                raise ValueError(
+                    f"no size known for intra-node mesh axis {axis!r} "
+                    f"(axes: {sorted(self.axis_sizes)})"
+                )
         if self.batch % self.batch_shards:
             raise ValueError(
                 f"batch {self.batch} not divisible by the "
@@ -135,7 +158,7 @@ class Problem:
     @classmethod
     def from_tensor(
         cls, x, rank: int, mode_axes=None, mesh=None, *, batch=1, batch_axes=(),
-        pp_tol: float = 0.0,
+        pp_tol: float = 0.0, intra_axes=(),
     ) -> "Problem":
         """Build a Problem from an array (or tracer / ShapeDtypeStruct).
 
@@ -144,8 +167,9 @@ class Problem:
         executor).  With ``batch=B > 1`` the array's leading axis is the
         batch (``x.shape[0] == B``) and the tensor shape is ``x.shape[1:]``;
         ``batch_axes`` optionally shards that axis over mesh axes.
-        ``pp_tol > 0`` opts into pairwise-perturbation sweeps (see the class
-        docstring).
+        ``pp_tol > 0`` opts into pairwise-perturbation sweeps and
+        ``intra_axes`` declares the mesh axes spanning one node of a
+        two-level topology (see the class docstring).
         """
         batch = int(batch)
         shape = tuple(x.shape)
@@ -164,6 +188,7 @@ class Problem:
             batch=batch,
             batch_axes=tuple(batch_axes),
             pp_tol=pp_tol,
+            intra_axes=tuple(intra_axes),
         )
 
     # ------------------------------------------------------------- derived
@@ -212,6 +237,32 @@ class Problem:
         """Per-device batch extent under the ``batch_axes`` distribution."""
         return self.batch // self.batch_shards
 
+    @property
+    def intra_shards(self) -> int:
+        """Devices per node (product of ``intra_axes`` sizes; 1 when flat)."""
+        p = 1
+        for axis in self.intra_axes:
+            p *= self.axis_sizes[axis]
+        return p
+
+    @property
+    def n_nodes(self) -> int:
+        """Node count of a two-level mesh: the product of every non-intra
+        mesh axis size (1 when the topology is flat or single-node)."""
+        if not self.intra_axes:
+            return 1
+        p = 1
+        for axis, size in self.axis_sizes.items():
+            if axis not in self.intra_axes:
+                p *= size
+        return p
+
+    @property
+    def node_axis(self) -> str | None:
+        """The intra-node mesh axis executors reduce-scatter over --
+        the first of ``intra_axes``, ``None`` for flat topologies."""
+        return self.intra_axes[0] if self.intra_axes else None
+
     def signature(
         self, *, backend: str = "any", n_devices: int | None = None
     ) -> str:
@@ -242,6 +293,11 @@ class Problem:
             key += f"|b{self.batch}"
         if self.pp_tol > 0.0:
             key += f"|pp{self.pp_tol:g}"
+        if self.intra_axes:
+            # two-level topologies measure/bucket separately from flat ones
+            # on the same device count (the collectives differ); flat
+            # problems keep the historical layout so old keys resolve
+            key += f"|node{self.intra_shards}"
         return key
 
     def mode_shards(self, n: int) -> int:

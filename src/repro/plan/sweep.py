@@ -234,15 +234,17 @@ def _exact_sweep(
         src = cache[node.parent]
         if plan.nodes:
             np_ = plan.node_plan(node.id)
-            alg, tiles = np_.algorithm, np_.tiles
+            alg, tiles, coll = np_.algorithm, np_.tiles, np_.collective
         else:
-            alg, tiles = "auto", None
+            alg, tiles, coll = "auto", None, "flat"
         if use_carry:
             out, carry = executor.contract_carry(
-                node, src, factors, alg, carry, tiles=tiles
+                node, src, factors, alg, carry, tiles=tiles, collective=coll
             )
         else:
-            out = executor.contract(node, src, factors, alg, tiles=tiles)
+            out = executor.contract(
+                node, src, factors, alg, tiles=tiles, collective=coll
+            )
         if node.is_leaf:
             m_last = out
             weights = _update_factor(plan, factors, gs, weights, node.mode, m_last, it)

@@ -408,6 +408,130 @@ def case_pp_sharded():
     print("pp_sharded OK exact_sweeps=", int(st_sh.pp_exact_sweeps))
 
 
+def case_hierarchical_psum():
+    """Hierarchical two-level collectives == flat psum on a 2x4 node mesh.
+
+    ``hierarchical_psum`` (reduce-scatter within the node + cross-node psum
+    of the shard + all-gather back) is an exact regrouping of the same sum,
+    so every exact path -- the raw collective, ``dist_mttkrp``, and the
+    overlapped variant -- must match its flat twin allclose; the compressed
+    variant keeps its error-feedback carry semantics (residual shape and
+    bound) while compressing only the cross-node stage.  Ends with the
+    acceptance sweep: a ``plan_sweep(executor="auto")`` plan over the
+    two-level problem executes hierarchical node collectives and matches
+    the flat-psum plan's factors allclose.
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.collectives import hierarchical_psum
+    from repro.dist.dist_mttkrp import (
+        dist_mttkrp_compressed,
+        dist_mttkrp_overlapped,
+        init_mttkrp_error_state,
+    )
+    from repro.launch.mesh import make_node_mesh
+    from repro.plan import Problem, SweepState, als_sweep, make_executor, plan_sweep
+
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = make_node_mesh(2, 4)  # ("node", "device"): 2 nodes x 4 devices
+    mode_axes = {0: "node", 2: "device"}
+
+    # raw collective: hierarchical == flat psum, elementwise, every replica
+    v = jnp.arange(8 * 12, dtype=jnp.float32).reshape(8, 12) / 7.0
+
+    def f(blk):
+        blk = blk[0]
+        flat = jax.lax.psum(blk, ("node", "device"))
+        hier = hierarchical_psum(blk, ("node", "device"), mesh, node_axis="device")
+        return flat[None], hier[None]
+
+    flat, hier = shard_map(
+        f, mesh=mesh, in_specs=P(("node", "device")),
+        out_specs=(P(("node", "device")), P(("node", "device"))),
+        check_vma=False,
+    )(v)
+    np.testing.assert_allclose(np.asarray(hier), np.asarray(flat), rtol=1e-6, atol=1e-6)
+
+    x = random_tensor(jax.random.PRNGKey(0), (8, 6, 4, 5))
+    factors = random_factors(jax.random.PRNGKey(1), x.shape, 7)
+    xs, fs = shard_problem(x, factors, mode_axes, mesh)
+    for n in range(4):
+        ref = dist_mttkrp(xs, fs, n, mode_axes, mesh)
+        out = dist_mttkrp(
+            xs, fs, n, mode_axes, mesh, collective="hierarchical", node_axis="device"
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6, err_msg=f"mode {n}"
+        )
+        ov = dist_mttkrp_overlapped(
+            xs, fs, n, mode_axes, mesh, n_chunks=2,
+            collective="hierarchical", node_axis="device",
+        )
+        np.testing.assert_allclose(
+            np.asarray(ov), np.asarray(ref), rtol=1e-5, atol=1e-6, err_msg=f"ov mode {n}"
+        )
+
+    # compressed + hierarchical: intra-node stage exact, cross-node stage
+    # int8 error-feedback -- output within one quantization step of exact,
+    # residual carry keeps its shape and stays bounded across a second call
+    n = 1
+    err = init_mttkrp_error_state(x.shape, 7, mode_axes, mesh)[n]
+    exact = dist_mttkrp(xs, fs, n, mode_axes, mesh)
+    out_c, err1 = dist_mttkrp_compressed(
+        xs, fs, n, mode_axes, mesh, err,
+        collective="hierarchical", node_axis="device",
+    )
+    assert err1.shape == err.shape, (err1.shape, err.shape)
+    scale = float(jnp.max(jnp.abs(exact))) / 127.0 * 8
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(exact), atol=scale + 1e-5)
+    out_c2, err2 = dist_mttkrp_compressed(
+        xs, fs, n, mode_axes, mesh, err1,
+        collective="hierarchical", node_axis="device",
+    )
+    assert err2.shape == err.shape
+    # error feedback: second pass corrects toward exact, residual bounded
+    np.testing.assert_allclose(np.asarray(out_c2), np.asarray(exact), atol=scale + 1e-5)
+    assert float(jnp.max(jnp.abs(err2))) <= 2.1 * float(jnp.max(jnp.abs(exact))) / 127.0 + 1e-6
+
+    # acceptance sweep: auto plan on the two-level problem (hierarchical
+    # node collectives) == the same plan forced flat, allclose factors
+    problem = Problem.from_tensor(
+        x, 7, mode_axes=mode_axes, mesh=mesh, intra_axes=("device",)
+    )
+    plan = plan_sweep(problem, executor="auto")
+    assert any(np_.collective == "hierarchical" for np_ in plan.nodes), [
+        np_.collective for np_ in plan.nodes
+    ]
+    assert plan.lower_bound_bytes is not None and plan.lower_bound_bytes > 0
+    from repro.core.tensor_ops import tensor_norm
+
+    flat_prob = Problem.from_tensor(x, 7, mode_axes=mode_axes, mesh=mesh)
+    flat_plan = plan_sweep(
+        flat_prob, executor=plan.executor, schedule=plan.resolved_schedule.name
+    )
+    assert all(np_.collective == "flat" for np_ in flat_plan.nodes)
+    w = jnp.ones((7,), x.dtype)
+    norm_x = tensor_norm(x)
+    ex_h = make_executor(
+        plan.executor, mesh, mode_axes, node_axis=problem.node_axis
+    )
+    ex_f = make_executor(flat_plan.executor, mesh, mode_axes)
+    f_h, f_f = list(fs), list(fs)
+    w_h = w_f = w
+    for it in range(3):
+        st_h = SweepState(x=xs, factors=f_h, weights=w_h, norm_x=norm_x, it=jnp.asarray(it))
+        st_f = SweepState(x=xs, factors=f_f, weights=w_f, norm_x=norm_x, it=jnp.asarray(it))
+        out_h = als_sweep(problem, plan, ex_h, st_h)
+        out_f = als_sweep(flat_prob, flat_plan, ex_f, st_f)
+        f_h, w_h = out_h.factors, out_h.weights
+        f_f, w_f = out_f.factors, out_f.weights
+        for a, b in zip(f_h, f_f):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(float(out_h.fit), float(out_f.fit), atol=1e-5)
+    print("hierarchical_psum OK")
+
+
 if __name__ == "__main__":
     {
         "dist_mttkrp": case_dist_mttkrp,
@@ -421,4 +545,5 @@ if __name__ == "__main__":
         "compressed_psum": case_compressed_psum,
         "compressed_dp": case_compressed_dp_trainer,
         "pp_sharded": case_pp_sharded,
+        "hierarchical_psum": case_hierarchical_psum,
     }[sys.argv[1]]()

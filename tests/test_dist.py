@@ -76,6 +76,11 @@ def test_pp_sharded_matches_local():
     assert "pp_sharded OK" in out
 
 
+def test_hierarchical_psum_matches_flat():
+    out = _run("hierarchical_psum")
+    assert "hierarchical_psum OK" in out
+
+
 def test_elastic_restore_across_mesh_shapes():
     out = _run("elastic_restore")
     assert "elastic_restore OK" in out

@@ -1,0 +1,231 @@
+"""Two-level collectives in the cost model + planner: level-split bytes,
+the Ballard-Knight-Rouse communication lower bound, mesh-mapping
+enumeration, and bandwidth-optimality certification.  Pure plan metadata --
+no mesh or devices needed (the executed-path twin lives in
+``dist_worker.case_hierarchical_psum``)."""
+
+import math
+
+import pytest
+
+from repro.plan import (
+    Problem,
+    collective_level_bytes,
+    hierarchical_applicable,
+    mode_cost,
+    mttkrp_comm_lower_bound,
+    node_cost,
+    plan_sweep,
+    ring_allreduce_bytes,
+)
+
+# the CI mesh: 2 nodes x 4 devices, "device" is the fast intra-node axis
+AXIS_SIZES = {"node": 2, "device": 4}
+INTRA = ("device",)
+
+
+def _problem(mode_axes, shape=(8, 6, 4, 5), rank=7, intra=INTRA):
+    return Problem(
+        shape=shape, rank=rank, mode_axes=mode_axes,
+        axis_sizes=AXIS_SIZES, intra_axes=intra,
+    )
+
+
+# ------------------------------------------------------- level-split bytes
+def test_flat_problem_level_split_matches_legacy_ring():
+    """Problems without intra_axes price exactly the old flat ring -- the
+    two-level split must be invisible to every existing plan."""
+    prob = Problem(
+        shape=(8, 6, 4, 5), rank=7, mode_axes={0: "node", 2: "device"},
+        axis_sizes=AXIS_SIZES,
+    )
+    b = 1000.0
+    coll, inter = collective_level_bytes(prob, b, ("node", "device"))
+    assert coll == ring_allreduce_bytes(b, 8)
+    assert inter == 0.0
+
+
+def test_hierarchical_level_split_prices_shard_crossing():
+    """Hierarchical: full ring within the node (k devices) + a 1/k-shard
+    ring across nodes; only the shard ring crosses the slow level."""
+    prob = _problem({0: "node", 2: "device"})
+    b = 1000.0
+    coll, inter = collective_level_bytes(
+        prob, b, ("node", "device"), collective="hierarchical"
+    )
+    expect_inter = ring_allreduce_bytes(b / 4, 2)
+    assert inter == pytest.approx(expect_inter)
+    assert coll == pytest.approx(ring_allreduce_bytes(b, 4) + expect_inter)
+    # flat on the same two-level problem: one ring over all 8, all of it
+    # counted as crossing the slow level (the ring spans both)
+    coll_f, inter_f = collective_level_bytes(prob, b, ("node", "device"))
+    assert coll_f == ring_allreduce_bytes(b, 8)
+    assert inter_f == coll_f
+    assert inter < inter_f  # the whole point
+
+
+def test_hierarchical_applicable_needs_both_levels():
+    prob = _problem({0: "node", 2: "device"})
+    assert hierarchical_applicable(prob, ("node", "device"))
+    assert not hierarchical_applicable(prob, ("device",))  # intra only
+    assert not hierarchical_applicable(prob, ("node",))  # inter only
+    assert not hierarchical_applicable(prob, ())
+
+
+def test_mode_cost_inter_bytes_never_exceed_collective_bytes():
+    prob = _problem({0: "node", 2: "device"})
+    for n in range(4):
+        for coll in ("flat", "hierarchical"):
+            c = mode_cost(prob, n, "1step", collective=coll)
+            assert 0.0 <= c.inter_bytes <= c.collective_bytes + 1e-9
+            assert c.intra_bytes == pytest.approx(c.collective_bytes - c.inter_bytes)
+
+
+# ------------------------------------------------------------- lower bound
+def test_lower_bound_is_grid_minimum():
+    """The bound is the min over integer node grids of the per-grid volume
+    -- recompute it by brute force and compare."""
+    shape, rank, P = (8, 6, 4, 5), 7, 8
+    s = 4.0
+
+    def grid_volume(grid):
+        return sum(
+            2.0 * (shape[n] / grid[n]) * rank * s * (1.0 - grid[n] / P)
+            for n in range(len(shape))
+        )
+
+    def grids(n_modes, p):
+        if n_modes == 1:
+            yield (p,)
+            return
+        for d in range(1, p + 1):
+            if p % d == 0:
+                for rest in grids(n_modes - 1, p // d):
+                    yield (d,) + rest
+
+    brute = min(grid_volume(g) for g in grids(4, P))
+    bound = mttkrp_comm_lower_bound(shape, rank, P, itemsize=s)
+    assert bound == pytest.approx(brute)
+    # per_mode returns the achieving grid and its per-mode terms
+    total, terms, grid = mttkrp_comm_lower_bound(
+        shape, rank, P, itemsize=s, per_mode=True
+    )
+    assert total == pytest.approx(bound)
+    assert sum(terms) == pytest.approx(total)
+    assert math.prod(grid) == P
+
+
+def test_lower_bound_trivial_cases():
+    assert mttkrp_comm_lower_bound((8, 6, 4), 7, 1) == 0.0  # one node: no comm
+    # tuple mesh shape == its product
+    assert mttkrp_comm_lower_bound((8, 6, 4, 5), 7, (2, 4)) == pytest.approx(
+        mttkrp_comm_lower_bound((8, 6, 4, 5), 7, 8)
+    )
+
+
+@pytest.mark.parametrize(
+    "mode_axes",
+    [{0: "node", 2: "device"}, {1: "node", 2: "device"}, {2: "node", 0: "device"}],
+    ids=["0n2d", "1n2d", "2n0d"],
+)
+def test_bound_below_modeled_inter_volume_of_every_candidate(mode_axes):
+    """The certification invariant: the BKR bound never exceeds the modeled
+    per-node inter-node volume of ANY enumerated mapping (it is a lower
+    bound on what the model prices, by construction of the grid minimum)."""
+    plan = plan_sweep(_problem(mode_axes), executor="auto")
+    d = plan.describe()
+    assert d["lower_bound_bytes"] is not None and d["lower_bound_bytes"] > 0
+    assert d["mappings"], "two-level problems must report mapping rows"
+    for row in d["mappings"]:
+        assert row["lower_bound_bytes"] == pytest.approx(d["lower_bound_bytes"])
+        assert row["inter_bytes_per_node"] >= row["lower_bound_bytes"] - 1e-9
+
+
+def test_certification_on_known_optimal_mapping():
+    """{0: node, 2: device} on (8,6,4,5) achieves the bound exactly: the
+    plan certifies immediately, without enumerating alternatives."""
+    plan = plan_sweep(_problem({0: "node", 2: "device"}), executor="auto")
+    d = plan.describe()
+    assert d["certified"] is True
+    assert plan.certified_bandwidth_optimal
+    rows = d["mappings"]
+    assert len(rows) == 1 and rows[0]["selected"] and rows[0]["certified"]
+    assert rows[0]["inter_bytes_per_node"] == pytest.approx(d["lower_bound_bytes"])
+    # per-leaf stamping: every leaf NodePlan carries its mode's bound term
+    leaf_bounds = [
+        np_.lower_bound_bytes for np_ in plan.nodes if np_.node.is_leaf
+    ]
+    assert all(b is not None for b in leaf_bounds)
+    assert sum(leaf_bounds) == pytest.approx(d["lower_bound_bytes"])
+    # and at least one node runs the hierarchical collective
+    assert any(np_.collective == "hierarchical" for np_ in plan.nodes)
+
+
+def test_enumeration_stops_early_at_certified_mapping():
+    """A bad as-given mapping fails certification; the planner enumerates
+    alternatives (>= 2 rows), finds one within epsilon of the bound, stops,
+    and selects it."""
+    plan = plan_sweep(_problem({2: "node", 0: "device"}), executor="auto")
+    d = plan.describe()
+    rows = d["mappings"]
+    assert len(rows) >= 2, rows
+    assert rows[0]["certified"] is False  # the as-given mapping
+    assert d["certified"] is True
+    winner = [r for r in rows if r["selected"]]
+    assert len(winner) == 1 and winner[0]["certified"]
+    assert winner[0]["inter_bytes_per_node"] < rows[0]["inter_bytes_per_node"]
+
+
+def test_certify_eps_gates_enumeration():
+    """An infinite epsilon certifies the as-given mapping outright (no
+    enumeration); epsilon 0 demands the bound exactly."""
+    prob = _problem({2: "node", 0: "device"})
+    lax = plan_sweep(prob, executor="auto", certify_eps=1e9)
+    assert lax.certified_bandwidth_optimal
+    assert len(lax.mappings) == 1
+    strict = plan_sweep(
+        _problem({0: "node", 2: "device"}), executor="auto", certify_eps=0.0
+    )
+    assert strict.certified_bandwidth_optimal  # 420 == bound exactly
+
+
+def test_single_level_problem_has_no_bound_or_mappings():
+    """Problems without intra_axes keep the legacy describe surface: no
+    bound, no mapping rows, never certified, all collectives flat."""
+    prob = Problem(
+        shape=(8, 6, 4, 5), rank=7, mode_axes={0: "node", 2: "device"},
+        axis_sizes=AXIS_SIZES,
+    )
+    plan = plan_sweep(prob, executor="auto")
+    d = plan.describe()
+    assert d["lower_bound_bytes"] is None
+    assert d["certified"] is False
+    assert d["mappings"] == []
+    assert all(np_.collective == "flat" for np_ in plan.nodes)
+
+
+def test_describe_totals_split_levels():
+    plan = plan_sweep(_problem({0: "node", 2: "device"}), executor="auto")
+    d = plan.describe()
+    tot = d["totals"]
+    assert tot["inter_bytes"] <= tot["collective_bytes"] + 1e-9
+    assert tot["intra_bytes"] + tot["inter_bytes"] == pytest.approx(
+        tot["collective_bytes"]
+    )
+    for row in d["nodes"]:
+        assert "collective" in row and "inter_bytes" in row
+
+
+def test_node_cost_collective_choice_is_cheaper_or_equal():
+    """On a DCN-dominated node the hierarchical decomposition never models
+    slower than flat (same compute, strictly less slow-level traffic)."""
+    prob = _problem({0: "node", 2: "device"})
+    plan = plan_sweep(prob, executor="auto")
+    for np_ in plan.nodes:
+        if np_.collective != "hierarchical":
+            continue
+        flat = node_cost(
+            prob, np_.node, plan.executor,
+            **({"algorithm": np_.algorithm} if np_.node.is_leaf else {}),
+        )
+        assert np_.cost.predicted_s <= flat.predicted_s + 1e-12
